@@ -1,0 +1,68 @@
+"""Shared training drivers for the Table IV / Table V benchmarks.
+
+The paper's four tasks run at paper scale with `--full`; the default is a
+reduced configuration (smaller models, fewer steps) sized for the CPU
+container while still exercising every quantization site — the relative
+FP32-vs-FloatSD8 comparison is what reproduces Fig. 6 / Table IV.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import Policy, get_policy
+from repro.models.task_zoo import make_task
+from repro.optim.train_state import init_state, make_train_step
+
+POLICIES = ("fp32", "floatsd8_table2", "floatsd8_table6")
+
+
+def evaluate(model, params, data, policy: Policy, metric: str, n_batches: int = 8):
+    vals = []
+    for _ in range(n_batches):
+        batch = {k: jnp.asarray(v) for k, v in next(data.eval_batches).items()}
+        vals.append(float(getattr(model, metric)(params, batch, policy)))
+    return float(np.mean(vals))
+
+
+def train_task(
+    task: str,
+    policy_name: str,
+    steps: int = 200,
+    seed: int = 0,
+    full: bool = False,
+    policy_overrides: dict | None = None,
+    log_every: int = 0,
+    eval_batches: int = 8,
+) -> dict:
+    model, data, opt, lr, metric = make_task(task, full)
+    policy = get_policy(policy_name, **(policy_overrides or {}))
+    params = model.init(jax.random.PRNGKey(seed))
+    state = init_state(params, opt, policy)
+    step_fn = jax.jit(make_train_step(model.loss, opt, policy, lr=lr))
+
+    t0 = time.time()
+    losses = []
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data.batches).items()}
+        state, m = step_fn(state, batch)
+        losses.append(float(m["loss"]))
+        if log_every and (i + 1) % log_every == 0:
+            print(f"    [{task}/{policy.name}] step {i+1}/{steps} "
+                  f"loss={np.mean(losses[-log_every:]):.4f}", flush=True)
+    train_s = time.time() - t0
+    final = evaluate(model, state.params, data, policy, metric, eval_batches)
+    return {
+        "task": task,
+        "policy": policy.name if not policy_overrides else f"{policy.name}*",
+        "metric": metric,
+        "value": final,
+        "loss_first10": float(np.mean(losses[:10])),
+        "loss_last10": float(np.mean(losses[-10:])),
+        "steps": steps,
+        "train_s": round(train_s, 1),
+    }

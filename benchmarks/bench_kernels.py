@@ -1,0 +1,91 @@
+"""Kernel-level microbenchmarks.
+
+No TPU in this container, so wall-clock numbers are CPU-only sanity checks;
+the TPU-relevant outputs are the *analytic* per-kernel roofline terms:
+
+  floatsd_matmul : HBM bytes for FloatSD8-coded weights vs bf16 weights
+                   (the 2x weight-traffic claim) + VMEM working set of the
+                   chosen BlockSpec tiling.
+  lstm_cell      : HBM round-trips fused vs unfused (the fusion claim).
+
+Wall-clock compares the pure-jnp oracle paths under jit on CPU, verifying
+the quantized path's overhead structure (decode+matmul vs plain matmul).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import floatsd
+from repro.kernels.floatsd_matmul.ref import floatsd_matmul_ref
+from repro.kernels.lstm_cell.ref import lstm_cell_ref
+
+
+def _time(f, *args, iters=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(verbose: bool = True) -> dict:
+    M, K, N = 512, 2048, 2048
+    bm, bn, bk = 256, 256, 512
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32) * 0.05)
+    codes, bias = floatsd.encode(w)
+
+    # analytic: weight bytes per matmul (the HBM-traffic claim, DESIGN.md 3.1)
+    bytes_bf16 = K * N * 2
+    bytes_fsd8 = K * N * 1 + 4  # codes + one int32 bias
+    vmem_ws = bm * bk * 1 + bk * bn * 1 + bm * bn * 4  # x-codes-acc tile set
+
+    f_q = jax.jit(lambda x, c, b: floatsd_matmul_ref(x, c, b))
+    f_d = jax.jit(lambda x, w: jnp.dot(x, w))
+    t_q = _time(f_q, x, codes, bias)
+    t_d = _time(f_d, x, w)
+
+    B, H = 256, 1024
+    z = jnp.asarray(rng.standard_normal((B, 4 * H)).astype(np.float32))
+    c = jnp.asarray(rng.standard_normal((B, H)).astype(np.float32))
+    f_cell = jax.jit(lambda z, c: lstm_cell_ref(z, c, True))
+    t_cell = _time(f_cell, z, c)
+    # fused: read z (4H) + c (H), write h (H) + c (H)  = 7H per row
+    # unfused XLA: each of sigmoid x3 / tanh x2 / mul x3 / add x1 round-trips
+    hbm_fused = B * (4 * H + 3 * H) * 4
+    hbm_unfused = B * H * 4 * (4 + 3 * 2 + 2 * 2 + 3 * 2 + 1 * 2)  # op-by-op r/w
+
+    out = {
+        "matmul_weight_bytes_bf16": bytes_bf16,
+        "matmul_weight_bytes_floatsd8": bytes_fsd8,
+        "weight_traffic_ratio": round(bytes_bf16 / bytes_fsd8, 3),
+        "vmem_working_set_bytes": vmem_ws,
+        "cpu_ms_floatsd_matmul_oracle": round(t_q * 1e3, 2),
+        "cpu_ms_dense_matmul": round(t_d * 1e3, 2),
+        "lstm_cell_hbm_bytes_fused": hbm_fused,
+        "lstm_cell_hbm_bytes_unfused": hbm_unfused,
+        "lstm_cell_fusion_traffic_ratio": round(hbm_unfused / hbm_fused, 2),
+        "cpu_ms_lstm_cell_oracle": round(t_cell * 1e3, 2),
+    }
+    if verbose:
+        print(f"  floatsd_matmul [{M}x{K}x{N}] weight HBM bytes: "
+              f"bf16 {bytes_bf16/2**20:.1f}MiB -> fsd8 {bytes_fsd8/2**20:.1f}MiB "
+              f"({out['weight_traffic_ratio']}x)")
+        print(f"    VMEM working set ({bm},{bn},{bk}) tiling: {vmem_ws/2**20:.2f} MiB (<16 MiB)")
+        print(f"    CPU oracle: quantized {out['cpu_ms_floatsd_matmul_oracle']}ms "
+              f"vs dense {out['cpu_ms_dense_matmul']}ms")
+        print(f"  lstm_cell [B={B},H={H}] HBM traffic fused/unfused: "
+              f"{hbm_fused/2**20:.1f}/{hbm_unfused/2**20:.1f} MiB "
+              f"({out['lstm_cell_fusion_traffic_ratio']}x saved)  "
+              f"CPU oracle {out['cpu_ms_lstm_cell_oracle']}ms")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,100 @@
+"""Roofline table from the dry-run campaign artifacts (results/dryrun/*.json).
+
+Per (arch x shape x mesh): the three roofline terms (compute / memory /
+collective seconds), the dominant term, MODEL_FLOPS/HLO_FLOPs usefulness
+ratio, and the roofline fraction = compute_term / max(all terms) — i.e. how
+close the cell is to being compute-bound at peak.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirpath: str):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_row(r) -> str:
+    if r.get("status") == "skipped":
+        return (f"  {r['arch']:20s} {r['shape']:12s} {r['mesh']:10s} "
+                f"SKIPPED ({r['reason']})")
+    if r.get("status") != "ok":
+        return (f"  {r['arch']:20s} {r['shape']:12s} {r['mesh']:10s} "
+                f"ERROR {r.get('error','')[:80]}")
+    rf = r["roofline"]
+    c, m, x = rf["compute_s"], rf["memory_s"], rf["collective_s"]
+    frac = c / max(c, m, x) if max(c, m, x) else 0.0
+    return (f"  {r['arch']:20s} {r['shape']:12s} {r['mesh']:10s} "
+            f"C={c*1e3:9.2f}ms M={m*1e3:9.2f}ms X={x*1e3:9.2f}ms "
+            f"dom={rf['dominant']:10s} roofline={frac:5.1%} "
+            f"useful={r['useful_flops_ratio']}")
+
+
+def run(dirpath: str = "results/dryrun", mesh: str | None = None, verbose=True):
+    rows = load(dirpath)
+    if mesh:
+        rows = [r for r in rows if r.get("mesh") == mesh]
+    ok = [r for r in rows if r.get("status") == "ok"]
+    if verbose:
+        print(f"Roofline table ({len(rows)} cells, {len(ok)} compiled OK):")
+        for r in rows:
+            print(fmt_row(r))
+        if ok:
+            doms = {}
+            for r in ok:
+                doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+            print(f"  dominant-term histogram: {doms}")
+    return rows
+
+
+def markdown(dirpath: str = "results/dryrun", mesh: str = "16x16") -> str:
+    """§Roofline markdown table for EXPERIMENTS.md."""
+    rows = [r for r in load(dirpath) if r.get("mesh") == mesh]
+    out = [
+        "| arch | shape | C (ms) | M (ms) | X (ms) | dominant | roofline-frac "
+        "| useful | M-flash (ms) |",
+        "|---|---|---:|---:|---:|---|---:|---:|---:|",
+    ]
+    for r in rows:
+        if r.get("status") == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | *skipped* | — | — | — |"
+            )
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        rf = r["roofline"]
+        c, m, x = rf["compute_s"], rf["memory_s"], rf["collective_s"]
+        frac = c / max(c, m, x) if max(c, m, x) else 0.0
+        mf = r.get("roofline_flash", {}).get("memory_s")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {c*1e3:.1f} | {m*1e3:.1f} | "
+            f"{x*1e3:.1f} | {rf['dominant']} | {frac:.1%} | "
+            f"{r['useful_flops_ratio']} | "
+            f"{'' if mf is None else f'{mf*1e3:.1f}'} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--md", action="store_true")
+    a = ap.parse_args()
+    if a.md:
+        print(markdown(a.dir, a.mesh or "16x16"))
+    else:
+        run(dirpath=a.dir, mesh=a.mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Multi-pod dry-run walkthrough for one (arch x shape) cell.
+
+Lowers + compiles a production-mesh training step for an assigned
+architecture using ShapeDtypeStruct stand-ins (no allocation) and prints the
+memory analysis, cost analysis, and the three roofline terms.
+
+    PYTHONPATH=src python examples/multipod_dryrun.py \
+        --arch stablelm_3b --shape train_4k --multi-pod
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402
+import argparse
+import json
+
+from repro.launch.dryrun import run_cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm_3b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    a = ap.parse_args()
+    rec = run_cell(a.arch, a.shape, multi_pod=a.multi_pod)
+    print(json.dumps({k: v for k, v in rec.items() if k != "traceback"},
+                     indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

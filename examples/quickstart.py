@@ -1,0 +1,72 @@
+"""Quickstart: the FloatSD8 number format and a quantized training step.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the paper's pieces in ~30 lines of API:
+  1. FloatSD8 quantize / encode / decode  (§III-A)
+  2. two-region quantized sigmoid          (§III-C)
+  3. a FloatSD8 x FP8 dense layer          (§III-D)
+  4. one full Table-VI training step       (§III-B, §IV)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import floatsd
+from repro.core.policy import FLOATSD8_TABLE6, FP32
+from repro.core.qsigmoid import qsigmoid
+from repro.nn.linear import QuantDense
+from repro.nn.lstm import LSTMLayer
+from repro.optim import adam
+from repro.optim.train_state import init_state, make_train_step
+
+# --- 1. the number format ---------------------------------------------------
+w = jax.random.normal(jax.random.PRNGKey(0), (4, 4)) * 0.1
+q = floatsd.quantize(w)  # fake-quant: nearest representable value
+codes, bias = floatsd.encode(w)  # 1 byte/weight storage format
+print("weights:\n", np.asarray(w).round(4))
+print("FloatSD8:\n", np.asarray(q.values).round(4), f"\n(bias={int(q.bias)})")
+print("codes (uint8):\n", np.asarray(codes))
+assert jnp.allclose(floatsd.decode(codes, bias), q.values)
+print("max partial products per weight:",
+      int(floatsd.partial_product_count(codes).max()), "(always <= 2)\n")
+
+# --- 2. the quantized sigmoid ----------------------------------------------
+x = jnp.linspace(-4, 4, 9)
+print("sigma(x)  :", np.asarray(jax.nn.sigmoid(x)).round(4))
+print("Q(sigma)  :", np.asarray(qsigmoid(x)).round(4), "\n")
+
+# --- 3. a quantized layer -----------------------------------------------
+layer = QuantDense(16, 8)
+params = layer.init(jax.random.PRNGKey(1))
+y_fp32 = layer.apply(params, jnp.ones((2, 16)), FP32)
+y_q = layer.apply(params, jnp.ones((2, 16)), FLOATSD8_TABLE6)
+print("dense fp32 vs floatsd8 outputs (row 0):")
+print(" ", np.asarray(y_fp32[0]).round(4))
+print(" ", np.asarray(y_q[0], np.float32).round(4), "\n")
+
+# --- 4. one training step under the paper's Table-VI scheme -----------------
+lstm = LSTMLayer(16, 32)
+head = QuantDense(32, 4)
+
+
+def loss_fn(p, batch, policy):
+    h, _ = lstm.apply(p["lstm"], batch["x"], policy)
+    logits = head.apply(p["head"], h[:, -1], policy, site="last")
+    return -jnp.mean(
+        jnp.take_along_axis(jax.nn.log_softmax(logits), batch["y"][:, None], 1)
+    )
+
+
+params = {"lstm": lstm.init(jax.random.PRNGKey(2)),
+          "head": head.init(jax.random.PRNGKey(3))}
+state = init_state(params, adam(), FLOATSD8_TABLE6)
+step = jax.jit(make_train_step(loss_fn, adam(), FLOATSD8_TABLE6, lr=1e-3))
+batch = {"x": jax.random.normal(jax.random.PRNGKey(4), (8, 12, 16)),
+         "y": jnp.arange(8) % 4}
+for i in range(5):
+    state, m = step(state, batch)
+    print(f"step {i}: loss={float(m['loss']):.4f} "
+          f"scale={float(m['loss_scale']):.0f} master_dtype="
+          f"{jax.tree_util.tree_leaves(state.params)[0].dtype}")
+print("\nquickstart OK")

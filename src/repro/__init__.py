@@ -1,0 +1,8 @@
+"""repro — FloatSD8 low-complexity training/inference framework in JAX.
+
+Implements Liu & Chiueh, "Low-Complexity LSTM Training and Inference with
+FloatSD8 Weight Representation" (IJCNN 2020) as a production multi-pod
+framework: the FloatSD8/FP8/FP16 precision stack is a first-class policy
+usable by LSTMs and by the 10 assigned LM-family architectures.
+"""
+__version__ = "1.0.0"

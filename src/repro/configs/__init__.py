@@ -1,0 +1,1 @@
+from .base import ARCH_IDS, SHAPES, ArchConfig, get_config

@@ -1,0 +1,127 @@
+"""Architecture config schema + registry.
+
+Every assigned architecture is a module in this package exposing ``CONFIG``;
+``get_config(name)`` looks it up. ``ArchConfig.reduced()`` produces the small
+same-family variant used by CPU smoke tests (the FULL config is exercised
+only via the dry-run's ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+__all__ = ["ArchConfig", "get_config", "ARCH_IDS", "SHAPES", "shape_spec"]
+
+ARCH_IDS = [
+    "h2o_danube3_4b",
+    "granite_20b",
+    "stablelm_3b",
+    "phi4_mini_3p8b",
+    "kimi_k2_1t_a32b",
+    "dbrx_132b",
+    "jamba_v01_52b",
+    "rwkv6_3b",
+    "whisper_large_v3",
+    "qwen2_vl_2b",
+    "lstm_wikitext2",  # the paper's own largest model, as an arch config
+]
+
+# assigned input-shape set (LM family): name -> (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def shape_spec(name: str):
+    return SHAPES[name]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm | lstm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1  # MoE layer every k-th layer (jamba: 2)
+    first_k_dense: int = 0  # leading dense layers (kimi-k2: 1)
+    first_dense_ff: int = 0
+    # --- attention flavor ---
+    window: Optional[int] = None  # SWA
+    rope: str = "rope"  # rope | mrope | none
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    norm: str = "rmsnorm"
+    ffn_kind: str = "swiglu"
+    tie_embeddings: bool = True
+    # --- hybrid (jamba) ---
+    attn_every: int = 0  # 1 attention layer per this many layers (0 = all attn)
+    # --- ssm ---
+    mamba_state: int = 16
+    rwkv_head_dim: int = 64
+    # --- enc-dec (whisper) ---
+    enc_layers: int = 0
+    enc_seq: int = 0  # stub frontend sequence length (1500 audio frames)
+    # --- vlm ---
+    n_patches: int = 0  # stub patch embeddings prepended to the sequence
+    mrope_sections: tuple = (16, 24, 24)
+    # --- bookkeeping ---
+    supports_long: bool = False  # sub-quadratic path for long_500k
+    source: str = ""
+    notes: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def vocab_padded(self, multiple: int = 256) -> int:
+        return -(-self.vocab // multiple) * multiple
+
+    def reduced(self) -> "ArchConfig":
+        """Same-family tiny config for CPU smoke tests."""
+        heads = min(self.n_heads, 4)
+        kvh = max(1, min(self.kv_heads, heads))
+        while heads % kvh:
+            kvh -= 1
+        return dataclasses.replace(
+            self,
+            n_layers=max(2, 2 * max(self.moe_every, 1), self.attn_every or 2),
+            d_model=128,
+            n_heads=heads,
+            kv_heads=kvh,
+            head_dim=32,
+            d_ff=256,
+            vocab=512,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            first_k_dense=min(self.first_k_dense, 1),
+            first_dense_ff=256 if self.first_dense_ff else 0,
+            window=64 if self.window else None,
+            enc_layers=2 if self.enc_layers else 0,
+            enc_seq=16 if self.enc_seq else 0,
+            n_patches=16 if self.n_patches else 0,
+            mrope_sections=(8, 4, 4) if self.rope == "mrope" else self.mrope_sections,
+            rwkv_head_dim=32,
+        )
+
+    def skips(self, shape: str) -> str | None:
+        """Return a reason string if this (arch, shape) cell is skipped."""
+        if shape == "long_500k" and not self.supports_long:
+            return "full quadratic attention at 524288 — sub-quadratic required (DESIGN.md §5)"
+        return None
+
+
+def get_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG

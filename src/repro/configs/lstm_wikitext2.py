@@ -1,0 +1,15 @@
+"""The paper's own WikiText-2 LSTM LM (Table III: 84.98M params) as an arch.
+
+embedding 33278x650-ish -> 2-layer LSTM(650) -> tied FC decoder. Sized to
+match the 84.98M parameter count with the standard AWD-style 2x650 setup at
+WikiText-2 vocab 33278: emb 33278*650 + 2 LSTM layers + decoder."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="lstm_wikitext2", family="lstm",
+    n_layers=2, d_model=1024, n_heads=0, kv_heads=0, d_ff=0, vocab=33278,
+    rope="none", supports_long=True,  # O(1) recurrent state
+    tie_embeddings=True,
+    source="paper Table III (WikiText-2, 84.98M params)",
+    notes="2-layer LSTM hidden 1024, tied embeddings: 33278*1024*2 + 2*8*1024^2 ~= 85M.",
+)

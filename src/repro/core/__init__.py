@@ -1,0 +1,15 @@
+"""Core numerics: the paper's contribution as composable JAX pieces."""
+from . import floatsd, fp8, loss_scaling, policy, qsigmoid
+from .floatsd import quantize as floatsd8_quantize
+from .floatsd import quantize_ste as floatsd8_quantize_ste
+from .fp8 import act_quant, grad_quant, quantize_fp8
+from .policy import Policy, get_policy
+from .qsigmoid import qsigmoid as quantized_sigmoid
+from .qsigmoid import qtanh_fp8
+
+__all__ = [
+    "floatsd", "fp8", "loss_scaling", "policy", "qsigmoid",
+    "floatsd8_quantize", "floatsd8_quantize_ste",
+    "act_quant", "grad_quant", "quantize_fp8",
+    "Policy", "get_policy", "qsigmoid", "qtanh_fp8",
+]

@@ -1,0 +1,260 @@
+"""FloatSD8 number format (paper §III-A).
+
+An 8-bit weight code: 3-bit exponent field | 5-bit mantissa code.
+
+The mantissa encodes two signed-digit groups:
+  * MSG  (3-digit group): one non-zero digit max -> {0, ±1, ±2, ±4}
+  * 2nd  (2-digit group): one non-zero digit max -> {0, ±1, ±2}, placed two
+    binary positions below the MSG unit, i.e. contributing s/4.
+
+mantissa = m + s/4 with m in {0,±1,±2,±4}, s in {0,±1,±2}  -> 35 combos,
+31 distinct values (collisions at ±0.5, ±1.5), range [-4.5, +4.5].
+
+value = mantissa * 2^(e + bias),  e in [0, 7], per-tensor integer ``bias``.
+
+The per-tensor bias is the one deviation from the paper's fixed-field circuit
+(recorded in DESIGN.md §3.5a): the 3-bit exponent *field* is unchanged; the
+bias is fitted once per tensor so the 8-bit code spends its dynamic range
+(~2^11.2) on the tensor's actual magnitude window.
+
+Everything here is pure jnp so it can serve as the oracle for the Pallas
+kernels and run under jit on any backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "MANTISSA_VALUES",
+    "MANTISSA_TO_SD",
+    "EXP_BITS",
+    "EXP_LEVELS",
+    "floatsd8_value_grid",
+    "fit_bias",
+    "quantize",
+    "quantize_ste",
+    "encode",
+    "decode",
+    "pack",
+    "unpack",
+    "partial_product_count",
+]
+
+EXP_BITS = 3
+EXP_LEVELS = 1 << EXP_BITS  # 8
+
+# ---------------------------------------------------------------------------
+# Mantissa value set (31 distinct values; paper says "only 31 distinct
+# combinations exist, making 5 bits enough").
+# ---------------------------------------------------------------------------
+
+
+def _build_mantissas() -> tuple[np.ndarray, dict[float, tuple[int, int]]]:
+    vals: dict[float, tuple[int, int]] = {}
+    for m in (-4, -2, -1, 0, 1, 2, 4):
+        for s in (-2, -1, 0, 1, 2):
+            v = m + s / 4.0
+            # Prefer the decomposition with the fewest non-zero digits on
+            # collisions (matches minimal partial-product hardware cost).
+            if v not in vals or _nzd(m, s) < _nzd(*vals[v]):
+                vals[v] = (m, s)
+    keys = np.array(sorted(vals.keys()), dtype=np.float32)
+    assert keys.size == 31, keys.size
+    return keys, vals
+
+
+def _nzd(m: int, s: int) -> int:
+    return int(m != 0) + int(s != 0)
+
+
+MANTISSA_VALUES, MANTISSA_TO_SD = _build_mantissas()
+_MANTISSA_J = jnp.asarray(MANTISSA_VALUES)
+# midpoints for nearest-value rounding over the 31-entry grid
+_MANTISSA_MID = jnp.asarray((MANTISSA_VALUES[1:] + MANTISSA_VALUES[:-1]) / 2.0)
+
+
+def _value_grid_np() -> np.ndarray:
+    """All distinct non-negative representable values at bias=0, sorted."""
+    g = np.unique(
+        np.abs(MANTISSA_VALUES)[:, None] * (2.0 ** np.arange(EXP_LEVELS))[None, :]
+    )
+    return g.astype(np.float64)
+
+
+_GRID_POS = _value_grid_np()  # includes 0
+_GRID_MID = (_GRID_POS[1:] + _GRID_POS[:-1]) / 2.0
+
+
+def floatsd8_value_grid(bias: int = 0) -> np.ndarray:
+    """Every distinct non-negative value representable with this bias."""
+    return _GRID_POS * (2.0**bias)
+
+
+# Precompute, for every distinct grid value, a canonical (e, mantissa-index)
+# pair used by ``encode``; chooses the smallest exponent (finest grid) that
+# represents the value exactly.
+def _grid_codes() -> tuple[np.ndarray, np.ndarray]:
+    es = np.zeros(_GRID_POS.size, dtype=np.int8)
+    mi = np.zeros(_GRID_POS.size, dtype=np.int8)
+    for i, v in enumerate(_GRID_POS):
+        found = False
+        for e in range(EXP_LEVELS):
+            m = v / (2.0**e)
+            j = np.searchsorted(MANTISSA_VALUES, m)
+            for jj in (j - 1, j, j + 1):
+                if 0 <= jj < 31 and MANTISSA_VALUES[jj] == m:
+                    es[i], mi[i] = e, jj
+                    found = True
+                    break
+            if found:
+                break
+        assert found, v
+    return es, mi
+
+
+_GRID_E, _GRID_MIDX = _grid_codes()
+
+
+class QuantResult(NamedTuple):
+    values: jax.Array  # dequantized (same shape/dtype as input)
+    bias: jax.Array  # scalar int32 per-tensor exponent bias
+
+
+def fit_bias(x: jax.Array) -> jax.Array:
+    """Per-tensor exponent bias: put max|x| in the top exponent bin.
+
+    4.5 * 2^(7+bias) >= max|x|  and as tight as possible.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    amax = jnp.where(jnp.isfinite(amax) & (amax > 0), amax, 1.0)
+    return jnp.ceil(jnp.log2(amax / 4.5)).astype(jnp.int32) - (EXP_LEVELS - 1)
+
+
+def _count_idx(mids: jax.Array, n: jax.Array) -> jax.Array:
+    """index = #(mids < n), i.e. searchsorted(mids, n, side='left') — but as
+    one broadcast compare-count instead of jnp.searchsorted. searchsorted
+    lowers to a log2(len)-trip while loop whose body round-trips the full
+    tensor each iteration (~7x the HBM traffic on activation-sized inputs,
+    measured in EXPERIMENTS.md §Perf); the compare-count is a single fusion
+    and is exactly what the Pallas quantize kernel does on TPU."""
+    return jnp.sum(
+        (n[..., None] > mids[(None,) * n.ndim]).astype(jnp.int32), axis=-1
+    )
+
+
+def _round_mantissa(m: jax.Array) -> jax.Array:
+    """Nearest value in the 31-entry mantissa grid (regular rounding)."""
+    idx = _count_idx(_MANTISSA_MID, m)
+    return _MANTISSA_J[idx]
+
+
+def quantize(x: jax.Array, bias: jax.Array | int | None = None) -> QuantResult:
+    """Exact nearest-representable-value FloatSD8 quantization (fake-quant).
+
+    Searches the full (exponent x mantissa) grid, which is necessary because
+    the mantissa grid has a hole (2.5 -> 3.5): e.g. 3.0 is *exactly*
+    representable as 1.5 * 2^1 but naive choose-smallest-exponent rounding
+    would return 2.5 or 3.5.
+    """
+    if bias is None:
+        bias = fit_bias(x)
+    bias = jnp.asarray(bias, jnp.int32)
+    xf = x.astype(jnp.float32)
+    scale = jnp.exp2(bias.astype(jnp.float32))
+    n = jnp.abs(xf) / scale
+    # clamp into representable window, saturating rounding at the top
+    top = _GRID_POS[-1]
+    n = jnp.clip(n, 0.0, top)
+    idx = _count_idx(jnp.asarray(_GRID_MID, jnp.float32), n)
+    q = jnp.asarray(_GRID_POS, jnp.float32)[idx] * scale
+    out = jnp.sign(xf) * q
+    return QuantResult(out.astype(x.dtype), bias)
+
+
+@jax.custom_vjp
+def quantize_ste(x: jax.Array, bias: jax.Array) -> jax.Array:
+    return quantize(x, bias).values
+
+
+def _ste_fwd(x, bias):
+    return quantize(x, bias).values, None
+
+
+def _ste_bwd(_, g):
+    return g, None  # straight-through: identity grad, no grad to bias
+
+
+quantize_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+# ---------------------------------------------------------------------------
+# int8 encode / decode (storage + kernel path)
+# ---------------------------------------------------------------------------
+
+
+def encode(x: jax.Array, bias: jax.Array | int | None = None) -> tuple[jax.Array, jax.Array]:
+    """Quantize and pack to int8 codes: sign<<7 | e<<5 ... actually the
+    paper's layout is 3-bit exponent + 5-bit SD-group code. We use:
+
+        code8 = (e << 5) | m_idx        (m_idx in [0, 30])
+
+    with the sign folded into m_idx (the mantissa set is symmetric). Returns
+    (codes uint8, bias int32).
+    """
+    if bias is None:
+        bias = fit_bias(x)
+    bias = jnp.asarray(bias, jnp.int32)
+    xf = x.astype(jnp.float32)
+    scale = jnp.exp2(bias.astype(jnp.float32))
+    n = jnp.clip(jnp.abs(xf) / scale, 0.0, _GRID_POS[-1])
+    gidx = _count_idx(jnp.asarray(_GRID_MID, jnp.float32), n)
+    e = jnp.asarray(_GRID_E, jnp.int32)[gidx]
+    midx = jnp.asarray(_GRID_MIDX, jnp.int32)[gidx]  # index of |mantissa|
+    # map to signed mantissa index: grid is symmetric, index 15 == 0.0
+    neg = xf < 0
+    midx_signed = jnp.where(neg, 30 - midx, midx)
+    # |mantissa| indices are in [15, 30]; negatives map to [0, 15]
+    code = (e << 5) | midx_signed
+    return code.astype(jnp.uint8), bias
+
+
+def decode(codes: jax.Array, bias: jax.Array | int, dtype=jnp.float32) -> jax.Array:
+    """Decode uint8 FloatSD8 codes back to real values."""
+    c = codes.astype(jnp.int32)
+    e = c >> 5
+    midx = c & 0x1F
+    m = _MANTISSA_J[jnp.clip(midx, 0, 30)]
+    bias = jnp.asarray(bias, jnp.int32)
+    return (m * jnp.exp2((e + bias).astype(jnp.float32))).astype(dtype)
+
+
+# aliases used by the serving/storage path
+pack = encode
+unpack = decode
+
+
+def partial_product_count(codes: jax.Array) -> jax.Array:
+    """Number of non-zero SD digits (== partial products) per weight, <= 2.
+
+    Used by the Table-VII complexity model.
+    """
+    midx = (codes.astype(jnp.int32)) & 0x1F
+    m_abs = jnp.abs(_MANTISSA_J[jnp.clip(midx, 0, 30)])
+    nz = jnp.asarray(
+        [_nzd(*MANTISSA_TO_SD[float(v)]) for v in MANTISSA_VALUES], jnp.int32
+    )
+    idx = jnp.searchsorted(jnp.asarray(MANTISSA_VALUES), _MANTISSA_J[midx])
+    del m_abs
+    return nz[idx]
+
+
+@functools.partial(jax.jit, static_argnames=("dtype",))
+def fake_quant(x: jax.Array, dtype=None) -> jax.Array:
+    """Convenience jitted fake-quant with auto bias (no STE)."""
+    out = quantize(x).values
+    return out if dtype is None else out.astype(dtype)

@@ -1,0 +1,71 @@
+"""FP8 quantization (paper §III-D): 1-bit sign, 5-bit exponent, 2-bit
+mantissa == IEEE-style ``float8_e5m2`` [Wang et al., NeurIPS'18].
+
+Forward activations, backward activation-gradients, and weight gradients are
+all quantized to FP8 with *regular* (round-to-nearest-even, hardware native)
+rounding, per paper §III-D. ``float8_e4m3fn`` is available as a beyond-paper
+option for inference activations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["FP8_E5M2", "FP8_E4M3", "FP16", "quantize_fp8", "act_quant", "grad_quant"]
+
+FP8_E5M2 = jnp.float8_e5m2
+FP8_E4M3 = jnp.float8_e4m3fn
+FP16 = jnp.float16
+
+_MAX = {FP8_E5M2: 57344.0, FP8_E4M3: 448.0, FP16: 65504.0}
+
+
+def quantize_fp8(x: jax.Array, dtype=FP8_E5M2) -> jax.Array:
+    """Round-trip cast x -> fp8 -> original dtype (fake-quant), saturating.
+
+    Saturation (rather than inf) keeps loss-scaled gradients finite, matching
+    hardware clamp behaviour.
+    """
+    if dtype is None:
+        return x
+    m = _MAX[dtype]
+    xc = jnp.clip(x.astype(jnp.float32), -m, m)
+    return xc.astype(dtype).astype(x.dtype)
+
+
+def _make_roundtrip(fwd_dtype, bwd_dtype):
+    @jax.custom_vjp
+    def f(x):
+        return quantize_fp8(x, fwd_dtype)
+
+    def fwd(x):
+        return quantize_fp8(x, fwd_dtype), None
+
+    def bwd(_, g):
+        return (quantize_fp8(g, bwd_dtype),)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+# cache of (fwd, bwd) -> function, keyed by dtype names so jit caching works
+_CACHE: dict = {}
+
+
+def act_quant(x: jax.Array, fwd_dtype=FP8_E5M2, bwd_dtype=FP8_E5M2) -> jax.Array:
+    """Quantization node: forward activation -> fwd_dtype, incoming
+    activation-gradient -> bwd_dtype (both fake-quant). Either may be None
+    (pass-through) or jnp.float16 for the paper's last-layer FP16 setting."""
+    key = (fwd_dtype, bwd_dtype)
+    if key not in _CACHE:
+        _CACHE[key] = _make_roundtrip(fwd_dtype, bwd_dtype)
+    return _CACHE[key](x)
+
+
+def grad_quant(tree, dtype=FP8_E5M2):
+    """Quantize a (loss-scaled) gradient pytree to FP8 (fake-quant).
+
+    Applied after backward, before the optimizer: the paper's weight update is
+    'addition of the FP16 master copy weight and the FP8 gradient'.
+    """
+    return jax.tree_util.tree_map(lambda g: quantize_fp8(g, dtype), tree)

@@ -1,0 +1,108 @@
+"""Two-region FloatSD8 sigmoid quantization (paper §III-C, Eqs. 7-8).
+
+    y = Q(sigma(x))          for x <= 0            (Eq. 7)
+    y = 1 - Q(sigma(-x))     for x >  0            (Eq. 8)
+
+Direct FloatSD8 quantization of sigma has unbalanced error between positive
+and negative inputs (Fig. 4) because FloatSD is log-linear; mirroring the
+quantizer around x=0 balances it (Fig. 5). For x > 0 the output is the sum of
+two FloatSD8 numbers (1 is exactly representable), which the paper's MAC
+handles natively; in this simulation the sum is a single real value.
+
+The quantizer uses a FIXED exponent bias of -7: with it the non-positive
+branch has exactly **42 distinct output values**, reproducing the paper's
+"depth of the LUT can be reduced [to 42]" observation (verified in
+tests/test_qsigmoid.py).
+
+Gradients: straight-through — autodiff sees the exact sigmoid/tanh derivative
+(implemented with the stop_gradient fake-quant identity).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import floatsd
+from .fp8 import FP8_E5M2, quantize_fp8
+
+__all__ = ["SIGMOID_LUT_BIAS", "qsigmoid", "qsigmoid_raw", "qtanh_fp8", "sigmoid_lut_values"]
+
+SIGMOID_LUT_BIAS = -7  # gives the paper's 42-entry LUT for x <= 0
+
+
+# --- octave-folded FloatSD8 quantizer for sigma in (0, 0.5] ----------------
+# The FloatSD8 grid is octave-periodic above 2^2 (relative bias): normalizing
+# n = m * 2^e with m in [1,2) reduces nearest-value rounding to a <=8-entry
+# per-octave table, with three distinct tables for octave levels 0/1/2+
+# (sparser mantissa sets at the bottom of the exponent range). This replaces
+# the generic 64-midpoint compare-count, whose [B,S,d,64] intermediate
+# dominated the rwkv6/lstm memory roofline (EXPERIMENTS.md §Perf HC3 it.2).
+# Exactness vs floatsd.quantize is asserted in tests/test_qsigmoid.py over a
+# dense sweep.
+def _octave_tables():
+    g = [float(v) for v in floatsd._GRID_POS]
+    levels = []
+    for e in range(3):  # level 2 == every higher octave (verified in tests)
+        lo, hi = 2.0**e, 2.0 ** (e + 1)
+        vals = sorted(v / lo for v in g if lo <= v < hi)
+        ext = np.array(vals + [2.0], np.float32)  # boundary -> next octave
+        mids = (ext[1:] + ext[:-1]) / 2
+        # pad to fixed width 8 (mids +inf never counted; vals unreachable)
+        pad = 8 - ext.size
+        ext = np.pad(ext, (0, pad), constant_values=2.0)
+        mids = np.pad(mids, (0, pad + 1), constant_values=np.inf)
+        levels.append((ext, mids.astype(np.float32)))
+    return (
+        np.stack([l[0] for l in levels]),  # [3, 8]
+        np.stack([l[1] for l in levels]),  # [3, 8]
+    )
+
+
+_OCT_VALS, _OCT_MIDS = _octave_tables()
+_BOT_VALS = np.array([0.0, 0.25, 0.5, 0.75, 1.0], np.float32)
+_BOT_MIDS = ((_BOT_VALS[1:] + _BOT_VALS[:-1]) / 2).astype(np.float32)
+
+
+def _Q(v: jax.Array) -> jax.Array:
+    """FloatSD8 quantize for v in [0, 0.5] at the fixed LUT bias (folded)."""
+    n = v.astype(jnp.float32) * jnp.float32(2.0 ** (-SIGMOID_LUT_BIAS))
+    e = jnp.clip(jnp.floor(jnp.log2(jnp.maximum(n, 1e-30))), 0.0, 6.0)
+    m = n * jnp.exp2(-e)
+    lvl = jnp.minimum(e, 2.0).astype(jnp.int32)
+    mids = jnp.asarray(_OCT_MIDS)[lvl]  # [..., 8]
+    idx = jnp.sum((m[..., None] > mids).astype(jnp.int32), -1)
+    q_int = jnp.take_along_axis(
+        jnp.asarray(_OCT_VALS)[lvl], idx[..., None], axis=-1
+    )[..., 0] * jnp.exp2(e)
+    bidx = jnp.sum((n[..., None] > jnp.asarray(_BOT_MIDS)).astype(jnp.int32), -1)
+    q_bot = jnp.asarray(_BOT_VALS)[bidx]
+    q = jnp.where(n >= 1.0, q_int, q_bot)
+    return q * jnp.float32(2.0**SIGMOID_LUT_BIAS)
+
+
+def qsigmoid_raw(x: jax.Array) -> jax.Array:
+    """Pure quantized sigmoid, no gradient definition (kernel/LUT oracle)."""
+    s_neg = _Q(jax.nn.sigmoid(-jnp.abs(x)))  # Q(sigma(x)) evaluated at -|x|
+    return jnp.where(x > 0, 1.0 - s_neg, s_neg).astype(x.dtype)
+
+
+def qsigmoid(x: jax.Array) -> jax.Array:
+    """Quantized sigmoid with straight-through gradient (exact sigma')."""
+    s = jax.nn.sigmoid(x)
+    return s + jax.lax.stop_gradient(qsigmoid_raw(x) - s)
+
+
+def qtanh_fp8(x: jax.Array) -> jax.Array:
+    """tanh followed by FP8 activation quantization (the tanh LUT in the
+    paper's neuron circuit emits FP8; only the three sigmoid gates get the
+    FloatSD8 treatment)."""
+    t = jnp.tanh(x)
+    return t + jax.lax.stop_gradient(quantize_fp8(t, FP8_E5M2) - t)
+
+
+def sigmoid_lut_values() -> np.ndarray:
+    """The explicit non-positive-branch LUT (42 entries + 0), for the
+    hardware model and for oracle tests."""
+    grid = floatsd.floatsd8_value_grid(SIGMOID_LUT_BIAS)
+    return grid[(grid >= 0) & (grid <= 0.5)]

@@ -1,0 +1,7 @@
+"""Data substrate: synthetic task corpora + sharded pipeline."""
+from . import pipeline, synthetic
+from .pipeline import ShardedPipeline, to_global
+from .synthetic import multi30k, snli, udpos, wikitext2
+
+__all__ = ["pipeline", "synthetic", "ShardedPipeline", "to_global",
+           "multi30k", "snli", "udpos", "wikitext2"]

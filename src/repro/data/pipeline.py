@@ -1,0 +1,68 @@
+"""Sharded input pipeline: host batches -> global device arrays.
+
+Single-controller version of a multi-host pipeline: each step's global batch
+is device_put with the ("pod","data") batch sharding (the same
+`make_array_from_process_local_data` path a real multi-host job uses), with a
+double-buffered prefetch thread so host data generation overlaps device
+compute.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed import sharding as shd
+
+__all__ = ["ShardedPipeline", "to_global"]
+
+
+def to_global(batch: dict, mesh=None) -> dict:
+    """numpy batch dict -> sharded jax arrays (batch dim over pod+data)."""
+    mesh = mesh or shd.active_mesh()
+    out = {}
+    for k, v in batch.items():
+        v = np.asarray(v)
+        if mesh is not None:
+            sh = shd.named_sharding(("batch",) + (None,) * (v.ndim - 1), v.shape, mesh)
+            out[k] = jax.device_put(v, sh)
+        else:
+            out[k] = jnp.asarray(v)
+    return out
+
+
+class ShardedPipeline:
+    """Wraps a host-batch iterator with prefetch + device placement."""
+
+    def __init__(self, it: Iterator[dict], mesh=None, prefetch: int = 2):
+        self._it = it
+        self._mesh = mesh
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = False
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        try:
+            for b in self._it:
+                if self._stop:
+                    return
+                self._q.put(to_global(b, self._mesh))
+        except Exception as e:  # propagate into the consumer
+            self._q.put(e)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        x = self._q.get()
+        if isinstance(x, Exception):
+            raise x
+        return x
+
+    def close(self):
+        self._stop = True

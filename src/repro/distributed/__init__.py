@@ -1,0 +1,12 @@
+"""Distributed runtime: sharding rules, checkpointing, fault tolerance."""
+from . import checkpointing, fault_tolerance, sharding
+from .checkpointing import CheckpointManager
+from .fault_tolerance import PreemptionSignal, RestartableLoop, SimulatedFailure, StragglerMonitor
+from .sharding import constrain, logical_to_spec, named_sharding, tree_shardings, use_mesh
+
+__all__ = [
+    "checkpointing", "fault_tolerance", "sharding",
+    "CheckpointManager", "PreemptionSignal", "RestartableLoop",
+    "SimulatedFailure", "StragglerMonitor",
+    "constrain", "logical_to_spec", "named_sharding", "tree_shardings", "use_mesh",
+]

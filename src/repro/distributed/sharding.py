@@ -1,0 +1,126 @@
+"""Logical-axis -> mesh-axis mapping (MaxText-style).
+
+Weight dims carry logical names; activations use ("batch", "seq", ...) names.
+Rules below give FSDP over "data" (weights' embed dim), TP/EP over "model"
+(heads / mlp / vocab / experts), pure DP over "pod" (batch only — gradients
+cross pods once per step, FP8-compressed). A logical axis silently drops to
+replicated when the dim isn't divisible by the mesh axis size (e.g. granite's
+kv_heads=1), matching GSPMD practice.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "LOGICAL_RULES",
+    "active_mesh",
+    "use_mesh",
+    "logical_to_spec",
+    "named_sharding",
+    "tree_shardings",
+    "constrain",
+]
+
+# logical axis -> mesh axis (tuples shard one dim over several mesh axes)
+LOGICAL_RULES: dict[str, Any] = {
+    # --- weights ---
+    "embed": "data",        # FSDP: params sharded over the data axis
+    "embed2": None,
+    "mlp": "model",         # TP
+    "heads": "model",
+    "kv_heads": "model",
+    "vocab": "model",
+    "expert": "model",      # EP
+    "expert_inner": None,   # per-expert hidden dim (E already on model)
+    "hidden": None,         # LSTM recurrent input dim (output dim shards)
+    "hidden4": "model",
+    "layers": None,         # scan axis
+    # --- activations ---
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_shard": "model",   # sequence parallelism for long-context
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_mlp": "model",
+    "expert_cap": "data",   # MoE buffer capacity dim
+}
+
+_STATE = threading.local()
+
+
+def active_mesh() -> Mesh | None:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: dict | None = None):
+    prev = getattr(_STATE, "mesh", None)
+    prev_rules = getattr(_STATE, "rules", None)
+    _STATE.mesh = mesh
+    # nested use_mesh without explicit rules inherits the active overrides
+    base = prev_rules if (rules is None and prev_rules) else LOGICAL_RULES
+    _STATE.rules = {**base, **(rules or {})}
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _STATE.mesh = prev
+        _STATE.rules = prev_rules
+
+
+def _rules() -> dict:
+    return getattr(_STATE, "rules", None) or LOGICAL_RULES
+
+
+def logical_to_spec(
+    logical: Sequence[str | None], shape: Sequence[int] | None = None, mesh: Mesh | None = None
+) -> P:
+    """Map logical names to a PartitionSpec; drop non-divisible axes."""
+    mesh = mesh or active_mesh()
+    rules = _rules()
+    out = []
+    for i, name in enumerate(logical):
+        ax = rules.get(name) if name else None
+        if ax is not None and mesh is not None:
+            # drop axes the mesh doesn't have (e.g. "pod" on single-pod)
+            axes = tuple(a for a in (ax if isinstance(ax, tuple) else (ax,)) if a in mesh.shape)
+            ax = axes if len(axes) > 1 else (axes[0] if axes else None)
+            if ax is not None and shape is not None:
+                sizes = np.prod([mesh.shape[a] for a in (ax if isinstance(ax, tuple) else (ax,))])
+                if shape[i] % int(sizes) != 0:
+                    ax = None
+        out.append(ax)
+    return P(*out)
+
+
+def named_sharding(logical, shape=None, mesh=None) -> NamedSharding:
+    mesh = mesh or active_mesh()
+    return NamedSharding(mesh, logical_to_spec(logical, shape, mesh))
+
+
+def tree_shardings(spec_tree, shape_tree, mesh: Mesh | None = None):
+    """specs (tuples of logical names) + shapes -> NamedSharding tree."""
+    mesh = mesh or active_mesh()
+    return jax.tree_util.tree_map(
+        lambda s, x: named_sharding(s, getattr(x, "shape", x), mesh),
+        spec_tree,
+        shape_tree,
+        is_leaf=lambda s: type(s) is tuple,
+    )
+
+
+def constrain(x: jax.Array, logical: Sequence[str | None]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, named_sharding(logical, x.shape, mesh)
+    )

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: flash attention forward (online softmax, VMEM tiles).
+
+This is the TPU-native artifact behind the roofline's kernel-substitution
+model ('flashable' scope in nn/attention.py): score/probability tiles
+[bq, bk] never leave VMEM; HBM traffic is exactly q + k + v reads and o
+writes. Grid = (batch*heads, Sq/bq, Skv/bk) with the KV axis innermost so
+the (m, l, acc) state tiles stay resident in VMEM scratch across KV steps —
+the same output-stationary discipline as the paper's PE.
+
+Causal/window masking is done on absolute positions derived from the grid
+indices (contiguous-position training layout). MXU work is issued in bf16
+with f32 accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_fwd_kernel", "flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def flash_fwd_kernel(
+    q_ref,  # [1, bq, D]
+    k_ref,  # [1, bk, D]
+    v_ref,  # [1, bk, D]
+    o_ref,  # [1, bq, D]
+    m_ref,  # [bq, 1]   VMEM scratch: running max
+    l_ref,  # [bq, 1]   VMEM scratch: running denom
+    acc_ref,  # [bq, D] VMEM scratch: running numerator
+    *,
+    n_k: int,
+    bq: int,
+    bk: int,
+    scale: float,
+    causal: bool,
+    window: int | None,
+):
+    kstep = pl.program_id(2)
+
+    @pl.when(kstep == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # [bq, D]
+    k = k_ref[0].astype(jnp.float32)  # [bk, D]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [bq, bk]
+
+    # absolute positions of this tile
+    qpos = pl.program_id(1) * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = kstep * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...][:, 0]  # [bq]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])  # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)  # [bq]
+    l_new = l_ref[...][:, 0] * alpha + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(
+        p.astype(jnp.bfloat16), v_ref[0].astype(jnp.bfloat16),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )  # [bq, D]
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+    m_ref[...] = m_new[:, None]
+    l_ref[...] = l_new[:, None]
+
+    @pl.when(kstep == n_k - 1)
+    def _flush():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bq", "bk", "causal", "window", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # [BH, S, D]  (batch*heads flattened)
+    k: jax.Array,  # [BH, S, D]
+    v: jax.Array,  # [BH, S, D]
+    *,
+    bq: int = 256,
+    bk: int = 512,
+    causal: bool = True,
+    window: int | None = None,
+    interpret: bool = False,
+):
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    bq, bk = min(bq, sq), min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, skv, bq, bk)
+    n_k = skv // bk
+    grid = (bh, sq // bq, n_k)
+    scale = 1.0 / (d**0.5)
+
+    return pl.pallas_call(
+        functools.partial(
+            flash_fwd_kernel, n_k=n_k, bq=bq, bk=bk, scale=scale,
+            causal=causal, window=window,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, s: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, s: (h, s, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, s: (h, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, s: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            _vmem((bq, 1), jnp.float32),
+            _vmem((bq, 1), jnp.float32),
+            _vmem((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

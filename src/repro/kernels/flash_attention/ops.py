@@ -1,0 +1,37 @@
+"""jit'd public wrapper for the Pallas flash attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import flash_attention_ref
+
+__all__ = ["flash_attention_kernel"]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "use_kernel", "interpret")
+)
+def flash_attention_kernel(
+    q, k, v, *, causal: bool = True, window: int | None = None,
+    use_kernel: bool = True, interpret: bool = True,
+):
+    """[BH, S, D] attention. `interpret=True` is the CPU-validation mode;
+    pass interpret=False on real TPU. Oracle fallback on indivisible
+    shapes (tiles must divide S and D should be lane-aligned)."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    if not use_kernel or sq % 8 or skv % 128 or d % 8:
+        return flash_attention_ref(q, k, v, causal, window)
+    bq = 8
+    while sq % (bq * 2) == 0 and bq < 256:
+        bq *= 2
+    bk = 128
+    while skv % (bk * 2) == 0 and bk < 512:
+        bk *= 2
+    return flash_attention_pallas(
+        q, k, v, bq=bq, bk=bk, causal=causal, window=window, interpret=interpret
+    )

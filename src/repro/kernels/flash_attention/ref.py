@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the Pallas flash attention kernel (full scores)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref"]
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int | None = None):
+    """q/k/v: [BH, S, D] with contiguous positions. Returns [BH, Sq, D]."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / (d**0.5)
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32) * scale, k.astype(jnp.float32)
+    )
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: fused FloatSD8-decode + matmul.
+
+The paper's MAC multiplies FP8 activations by FloatSD8 weights using two
+shifted partial products. The TPU-native adaptation (DESIGN.md §3.1): weights
+travel HBM->VMEM as 1-byte codes (2x less bandwidth than bf16), are decoded
+*in VMEM* by the VPU (a 32-entry mantissa LUT gather + exp2 scale — the
+vector-unit analogue of the two shifts), and feed the MXU in bf16 with f32
+accumulation.
+
+Grid (M/bm, N/bn, K/bk); K is the innermost (sequential) axis so the f32
+accumulator tile stays resident in VMEM across K steps (output-stationary,
+exactly like the paper's PE). Block sizes default to MXU-aligned multiples
+of 128; VMEM working set = bm*bk (x) + bk*bn (codes) + bm*bn*4 (acc)
+= 256*512*1 + 512*256*1 + 256*256*4 ~= 0.5 MB « 16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ...core import floatsd
+
+__all__ = ["floatsd_matmul_kernel", "floatsd_matmul_pallas"]
+
+# 32-entry mantissa LUT (index 31 unused -> 0)
+_LUT = np.zeros(32, np.float32)
+_LUT[:31] = floatsd.MANTISSA_VALUES
+
+
+def floatsd_matmul_kernel(x_ref, codes_ref, bias_ref, lut_ref, out_ref, acc_ref, *, n_k: int):
+    """One (bm x bn) output tile; accumulates over the K grid axis.
+
+    x_ref:     [bm, bk]  activation tile (fp8/bf16/f32 storage)
+    codes_ref: [bk, bn]  uint8 FloatSD8 codes
+    bias_ref:  [1, 1]    int32 per-tensor exponent bias
+    lut_ref:   [1, 32]   f32 mantissa LUT (pallas kernels take constants
+                         as inputs)
+    acc_ref:   [bm, bn]  f32 VMEM accumulator scratch
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    codes = codes_ref[...].astype(jnp.int32)
+    m_idx = codes & 0x1F
+    e = (codes >> 5).astype(jnp.float32)
+    mant = jnp.take(lut_ref[0, :], m_idx)  # VPU gather, 32-entry table
+    scale = jnp.exp2(e + bias_ref[0, 0].astype(jnp.float32))
+    w = (mant * scale).astype(jnp.bfloat16)  # decoded tile stays in VMEM
+
+    x = x_ref[...].astype(jnp.bfloat16)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == n_k - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def _vmem_scratch(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype", "interpret")
+)
+def floatsd_matmul_pallas(
+    x: jax.Array,  # [M, K]
+    codes: jax.Array,  # [K, N] uint8
+    bias: jax.Array,  # scalar int32
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+):
+    m, k = x.shape
+    k2, n = codes.shape
+    assert k == k2, (x.shape, codes.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+
+    return pl.pallas_call(
+        functools.partial(floatsd_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((1, 1), lambda i, j, s: (0, 0)),
+            pl.BlockSpec((1, 32), lambda i, j, s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[_vmem_scratch((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, codes, jnp.reshape(bias.astype(jnp.int32), (1, 1)),
+      jnp.asarray(_LUT).reshape(1, 32))

@@ -1,0 +1,51 @@
+"""jit'd public wrapper for the FloatSD8 matmul kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core import floatsd
+from .kernel import floatsd_matmul_pallas
+from .ref import floatsd_matmul_ref
+
+__all__ = ["floatsd_matmul", "floatsd_dense_forward"]
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "use_kernel", "interpret"))
+def floatsd_matmul(
+    x, codes, bias, *, out_dtype=jnp.float32, use_kernel: bool = True,
+    interpret: bool = True,
+):
+    """x [M,K] @ decode(codes [K,N]) -> [M,N].
+
+    `interpret=True` is the CPU-validation mode; on real TPU pass
+    interpret=False. Falls back to the jnp oracle when `use_kernel=False`
+    (or for shapes the tiling doesn't divide).
+    """
+    m, k = x.shape
+    _, n = codes.shape
+    if not use_kernel or (m % 8 or n % 128 or k % 128):
+        return floatsd_matmul_ref(x, codes, bias, out_dtype)
+    bm = max(8, min(256, m))
+    bn = min(256, n)
+    bk = min(512, k)
+    while m % bm:
+        bm //= 2
+    while n % bn:
+        bn //= 2
+    while k % bk:
+        bk //= 2
+    return floatsd_matmul_pallas(
+        x, codes, bias, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+        interpret=interpret,
+    )
+
+
+def floatsd_dense_forward(x, w_f32, *, interpret: bool = True):
+    """Encode-then-multiply convenience: the serving path where weights are
+    stored pre-encoded. Returns (y, codes, bias)."""
+    codes, bias = floatsd.encode(w_f32)
+    y = floatsd_matmul(x, codes, bias, interpret=interpret)
+    return y, codes, bias

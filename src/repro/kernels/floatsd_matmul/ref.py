@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the FloatSD8 matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core import floatsd
+
+__all__ = ["floatsd_matmul_ref"]
+
+
+def floatsd_matmul_ref(x: jax.Array, codes: jax.Array, bias, out_dtype=jnp.float32):
+    """x: [M, K] (fp8/bf16/f32), codes: [K, N] uint8 FloatSD8, bias: int32.
+
+    Returns x @ decode(codes) in f32 accumulation, cast to out_dtype.
+    """
+    w = floatsd.decode(codes, bias, dtype=jnp.float32)
+    return jnp.dot(
+        x.astype(jnp.float32), w, preferred_element_type=jnp.float32
+    ).astype(out_dtype)

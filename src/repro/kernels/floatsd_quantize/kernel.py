@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: FloatSD8 quantization (master weights -> uint8 codes).
+
+Runs after every optimizer step (paper §III-B: 'the master copy weights are
+then quantized to FloatSD8 for the next iteration'). Pure VPU work:
+nearest-grid-value rounding implemented as a broadcast compare-count against
+the 64 grid midpoints (no searchsorted on TPU), then a gather of the
+precomputed (exponent, mantissa-index) pair for the winning grid slot.
+
+Tiles are [bm, bn] VMEM blocks of the (flattened-2D) weight; the three LUT
+rows (midpoints / exponent / mantissa-idx) ride along as tiny inputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ...core import floatsd
+
+__all__ = ["quantize_kernel", "quantize_pallas"]
+
+_GRID = floatsd._GRID_POS.astype(np.float32)  # 65 non-negative values
+_MID = ((_GRID[1:] + _GRID[:-1]) / 2).astype(np.float32)  # 64 midpoints
+_E = floatsd._GRID_E.astype(np.int32)
+_MIDX = floatsd._GRID_MIDX.astype(np.int32)
+_NG = _GRID.size  # 65
+
+
+def quantize_kernel(x_ref, bias_ref, mid_ref, e_ref, midx_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)
+    scale = jnp.exp2(-bias_ref[0, 0].astype(jnp.float32))
+    n = jnp.abs(x) * scale
+    n = jnp.minimum(n, _GRID[-1])
+    # nearest-grid index: count midpoints below n (broadcast compare-sum)
+    mids = mid_ref[0, :]  # [64]
+    gidx = jnp.sum(
+        (n[..., None] > mids[None, None, :]).astype(jnp.int32), axis=-1
+    )  # [bm, bn] in [0, 64]
+    e = jnp.take(e_ref[0, :], gidx)
+    midx = jnp.take(midx_ref[0, :], gidx)
+    midx_signed = jnp.where(x < 0, 30 - midx, midx)
+    out_ref[...] = ((e << 5) | midx_signed).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def quantize_pallas(x, bias, *, bm: int = 256, bn: int = 256, interpret: bool = False):
+    m, n = x.shape
+    bm, bn = min(bm, m), min(bn, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 64), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, _NG), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, _NG), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint8),
+        interpret=interpret,
+    )(
+        x,
+        jnp.reshape(bias.astype(jnp.int32), (1, 1)),
+        jnp.asarray(_MID).reshape(1, -1),
+        jnp.asarray(_E).reshape(1, -1),
+        jnp.asarray(_MIDX).reshape(1, -1),
+    )

@@ -1,0 +1,30 @@
+"""jit'd wrapper: FloatSD8 quantization of arbitrary-shape tensors."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core import floatsd
+from .kernel import quantize_pallas
+from .ref import quantize_ref
+
+__all__ = ["floatsd_quantize"]
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def floatsd_quantize(x, bias=None, *, use_kernel: bool = True, interpret: bool = True):
+    """Any-shape tensor -> (uint8 codes, int32 bias). Kernel path reshapes
+    to 2D tiles; oracle fallback for indivisible shapes."""
+    if bias is None:
+        bias = floatsd.fit_bias(x)
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    if not use_kernel or n % 256:
+        codes, _ = floatsd.encode(x, bias)
+        return codes, bias
+    x2 = flat.reshape(-1, 256)
+    codes = quantize_pallas(x2, bias, bm=min(256, x2.shape[0]), bn=256,
+                            interpret=interpret)
+    return codes.reshape(x.shape), bias

@@ -1,0 +1,13 @@
+"""Oracle: FloatSD8 encode (value -> uint8 codes) via the core library."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import floatsd
+
+__all__ = ["quantize_ref"]
+
+
+def quantize_ref(x, bias):
+    codes, _ = floatsd.encode(x, bias)
+    return codes

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: chunked RWKV-6 wkv forward (state resident in VMEM).
+
+The XLA chunked path (nn/rwkv.py `_wkv_chunked`, hillclimb #3) still
+materializes its per-chunk [L, L, K] decay tile and the running state to
+HBM at fusion boundaries; this kernel keeps BOTH in VMEM. Grid =
+(batch*heads, S/L) with the chunk axis sequential, so the [K, V] state
+scratch carries across chunk steps — same discipline as the flash kernel's
+(m, l, acc) and the paper PE's output-stationary accumulator.
+
+Math (per chunk, b = inclusive cumsum of log w):
+  y_t  = (r_t . e^{b_{t-1}}) S
+       + sum_{i<t} (sum_k r_tk k_ik e^{b_{t-1,k}-b_{i,k}}) v_i
+       + (r_t . u . k_t) v_t
+  S'   = diag(e^{b_{L-1}}) S + sum_i diag(e^{b_{L-1}-b_i}) k_i v_i^T
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["wkv_chunk_kernel", "wkv_pallas"]
+
+
+def wkv_chunk_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_ref, *, L: int, K: int, V: int):
+    cstep = pl.program_id(1)
+
+    @pl.when(cstep == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)  # [L, K]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)  # [L, V]
+    lw = jnp.log(jnp.maximum(w_ref[0].astype(jnp.float32), 1e-38))
+    b = jnp.cumsum(lw, axis=0)  # [L, K] inclusive
+    bprev = b - lw
+    blast = b[L - 1]
+
+    s = s_ref[...]  # [K, V]
+    q_in = r * jnp.exp(bprev)
+    y_inter = jax.lax.dot_general(
+        q_in, s, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [L, V]
+    # intra tile: A[t,i] = sum_k r_tk k_ik exp(b_{t-1,k} - b_{i,k}), i < t
+    ldiff = bprev[:, None, :] - b[None, :, :]  # [L, L, K]
+    a = jnp.sum(
+        r[:, None, :] * k[None, :, :] * jnp.exp(jnp.minimum(ldiff, 0.0)), axis=-1
+    )
+    mask = (
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+        < jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    )
+    a = jnp.where(mask, a, 0.0)
+    y_intra = jax.lax.dot_general(
+        a, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y_bonus = jnp.sum(r * u_ref[0] * k, axis=-1, keepdims=True) * v
+    y_ref[0] = (y_inter + y_intra + y_bonus).astype(y_ref.dtype)
+
+    kd = k * jnp.exp(blast[None, :] - b)  # [L, K]
+    s_ref[...] = s * jnp.exp(blast)[:, None] + jax.lax.dot_general(
+        kd, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_pallas(
+    r: jax.Array,  # [BH, S, K]
+    k: jax.Array,  # [BH, S, K]
+    v: jax.Array,  # [BH, S, V]
+    w: jax.Array,  # [BH, S, K] decay in (0, 1)
+    u: jax.Array,  # [BH, K] bonus
+    *,
+    chunk: int = 16,
+    interpret: bool = False,
+):
+    bh, s, kk = r.shape
+    vv = v.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    grid = (bh, s // chunk)
+    return pl.pallas_call(
+        functools.partial(wkv_chunk_kernel, L=chunk, K=kk, V=vv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, kk), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk, kk), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk, vv), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk, kk), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, kk), lambda h, c: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, vv), lambda h, c: (h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, vv), r.dtype),
+        scratch_shapes=[_vmem((kk, vv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

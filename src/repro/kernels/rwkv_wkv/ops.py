@@ -1,0 +1,21 @@
+"""jit'd public wrapper for the chunked wkv kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import wkv_pallas
+from .ref import wkv_ref
+
+__all__ = ["wkv"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_kernel", "interpret"))
+def wkv(r, k, v, w, u, *, chunk: int = 16, use_kernel: bool = True,
+        interpret: bool = True):
+    """[BH, S, K/V] chunked wkv. Oracle fallback on indivisible shapes."""
+    s = r.shape[1]
+    if not use_kernel or s % chunk:
+        return wkv_ref(r, k, v, w, u)
+    return wkv_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the chunked wkv kernel: the per-token recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["wkv_ref"]
+
+
+def wkv_ref(r, k, v, w, u):
+    """r/k/w: [BH, S, K], v: [BH, S, V], u: [BH, K] -> [BH, S, V].
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ;  y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+    """
+    bh, s, kk = r.shape
+    vv = v.shape[-1]
+
+    def step(st, t):
+        rt, kt, vt, wt = t
+        kv = jnp.einsum("bk,bv->bkv", kt.astype(jnp.float32), vt.astype(jnp.float32))
+        y = jnp.einsum("bk,bkv->bv", rt.astype(jnp.float32),
+                       st + u[:, :, None] * kv)
+        return st * wt[..., None] + kv, y
+
+    sw = lambda t: jnp.swapaxes(t, 0, 1)
+    s0 = jnp.zeros((bh, kk, vv), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, (sw(r), sw(k), sw(v), sw(w.astype(jnp.float32))))
+    return jnp.swapaxes(ys, 0, 1).astype(r.dtype)

@@ -1,0 +1,7 @@
+"""Launch layer: meshes, dry-run, roofline, train/serve drivers.
+
+Intentionally lazy: ``python -m repro.launch.dryrun`` must set
+XLA_FLAGS (512 placeholder devices) before anything imports jax, so this
+package imports nothing at module load.
+"""
+__all__ = ["hlo_analysis", "mesh", "specs", "dryrun"]

@@ -1,0 +1,53 @@
+"""Recompute params_active / model_flops / useful_flops_ratio in dry-run
+JSONs (eval_shape only — no recompile). Needed when count_active_params
+changes after a campaign has run.
+
+  PYTHONPATH=src python -m repro.launch.fix_useful --dir results/dryrun
+"""
+import argparse
+import glob
+import json
+
+import jax
+
+from ..configs.base import SHAPES, get_config
+from ..models import build
+from .dryrun import count_active_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    a = ap.parse_args()
+    cache = {}
+    for path in sorted(glob.glob(f"{a.dir}/*.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        arch = rec["arch"]
+        if arch not in cache:
+            cfg = get_config(arch)
+            model = build(cfg)
+            pshape = jax.eval_shape(lambda m=model: m.init(jax.random.PRNGKey(0)))
+            cache[arch] = (cfg, count_active_params(cfg, pshape))
+        cfg, (total, active) = cache[arch]
+        seq, gbatch, kind = SHAPES[rec["shape"]]
+        tokens = gbatch * (seq if kind != "decode" else 1)
+        mult = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[kind]
+        model_flops = mult * active * tokens / rec["n_devices"]
+        old = rec.get("useful_flops_ratio")
+        rec["params_total"] = total
+        rec["params_active"] = active
+        rec["model_flops_per_device"] = model_flops
+        rec["useful_flops_ratio"] = (
+            round(model_flops / rec["hlo_flops"], 4) if rec.get("hlo_flops") else None
+        )
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if old != rec["useful_flops_ratio"]:
+            print(f"{path}: useful {old} -> {rec['useful_flops_ratio']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production meshes.
+
+Single pod = 16x16 = 256 chips (v5e pod), axes ("data", "model").
+Multi-pod  = 2x16x16 = 512 chips, axes ("pod", "data", "model"): "pod" is
+pure DP (FP8-compressed gradient hop), "data" is FSDP, "model" is TP/EP.
+
+Functions, not module constants — importing this module never touches jax
+device state.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import AxisType, Mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small mesh over host (CPU) devices for tests."""
+    n = int(np.prod(shape))
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+class HW:
+    """TPU v5e-class hardware constants for the roofline (per chip)."""
+
+    PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+    HBM_BW = 819e9  # B/s
+    ICI_BW_PER_LINK = 50e9  # B/s (per link; wire bytes already per-device)
+    HBM_BYTES = 16 * 1024**3

@@ -1,0 +1,210 @@
+"""ShapeDtypeStruct input specs + sharding trees for every (arch x shape).
+
+`build_cell(arch, shape, mesh, ...)` returns everything dryrun/train/serve
+need: the function to jit, abstract args, and in/out shardings — with NO
+device allocation (the shannon/kernels pattern: weak-type-correct,
+shardable stand-ins).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import SHAPES, ArchConfig, get_config
+from ..core import loss_scaling as ls
+from ..core.policy import Policy, get_policy
+from ..distributed import sharding as shd
+from ..models import build
+from ..optim import adafactor, adam, sgd
+from ..optim.optimizers import AdamState, FactorState, Optimizer
+from ..optim.train_state import TrainState, make_train_step
+
+__all__ = ["Cell", "build_cell", "batch_specs", "param_shardings", "state_shardings"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape_name: str, policy: Policy):
+    """ShapeDtypeStructs + logical axis tuples for the input batch."""
+    seq, gbatch, kind = SHAPES[shape_name]
+    cdt = policy.cdt() or jnp.float32
+    if kind == "train" or kind == "prefill":
+        b = {
+            "tokens": _sds((gbatch, seq), jnp.int32),
+            "labels": _sds((gbatch, seq), jnp.int32),
+        }
+        s = {
+            "tokens": ("batch", None),
+            "labels": ("batch", None),
+        }
+        if cfg.family == "audio":
+            b["frames"] = _sds((gbatch, cfg.enc_seq, cfg.d_model), cdt)
+            s["frames"] = ("batch", None, None)
+        if cfg.family == "vlm":
+            b["patch_embeds"] = _sds((gbatch, cfg.n_patches, cfg.d_model), cdt)
+            s["patch_embeds"] = ("batch", None, None)
+        return b, s
+    # decode: one new token against a seq_len cache
+    b = {"tokens": _sds((gbatch, 1), jnp.int32)}
+    s = {"tokens": ("batch", None)}
+    return b, s
+
+
+def param_shardings(model, mesh: Mesh, params_shape=None):
+    if params_shape is None:
+        params_shape = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    return shd.tree_shardings(model.specs(), params_shape, mesh), params_shape
+
+
+def opt_specs(opt_name: str, param_specs):
+    """Optimizer-state logical specs mirroring param specs."""
+    if opt_name == "adam":
+        return AdamState(param_specs, param_specs, ())
+    if opt_name == "adafactor":
+        def rows(s):
+            return tuple(s[:-1]) if len(s) >= 2 else ()
+
+        def cols(s):
+            return tuple(s[:-2]) + tuple(s[-1:]) if len(s) >= 2 else ()
+
+        def full(s):
+            return () if len(s) >= 2 else tuple(s)
+
+        t = functools.partial(
+            jax.tree_util.tree_map, is_leaf=lambda x: type(x) is tuple
+        )
+        return FactorState(t(rows, param_specs), t(cols, param_specs), t(full, param_specs), ())
+    if opt_name == "sgd":
+        return ()  # plain sgd: no state
+    raise ValueError(opt_name)
+
+
+def state_shardings(model, opt_name: str, policy: Policy, mesh: Mesh, opt: Optimizer):
+    """(TrainState shapes, TrainState shardings) without allocation."""
+    from ..optim.train_state import init_state
+
+    params_shape = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    state_shape = jax.eval_shape(
+        lambda p: init_state(p, opt, policy), params_shape
+    )
+    pspecs = model.specs()
+    specs = TrainState(
+        step=(),
+        params=pspecs,
+        opt_state=opt_specs(opt_name, pspecs),
+        scale=ls.LossScaleState((), (), ()),
+    )
+    shardings = shd.tree_shardings(specs, state_shape, mesh)
+    return state_shape, shardings
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str  # train | prefill | decode
+    fn: Callable  # function to jit
+    args: tuple  # abstract args
+    in_shardings: tuple
+    out_shardings: Any
+    cfg: ArchConfig
+    model: Any
+    policy: Policy
+
+
+def _repl(mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    policy_name: str = "floatsd8_tpu",
+    opt_name: str | None = None,
+    remat: str = "dots",
+    attn_chunk: int = 1024,
+    cache_dtype=jnp.bfloat16,
+) -> Cell:
+    cfg = get_config(arch)
+    policy = get_policy(policy_name)
+    seq, gbatch, kind = SHAPES[shape_name]
+    skip = cfg.skips(shape_name)
+    if skip:
+        raise ValueError(f"cell ({arch},{shape_name}) skipped: {skip}")
+
+    if opt_name is None:
+        # adafactor for the 1T model (factored moments; DESIGN.md §4), adam else
+        opt_name = "adafactor" if cfg.n_experts >= 256 else "adam"
+    opt = {"adam": adam(), "sgd": sgd(0.9), "adafactor": adafactor()}[opt_name]
+
+    model = build(cfg, remat=remat, attn_chunk=attn_chunk) if cfg.family != "lstm" else build(cfg)
+    if hasattr(model, "cache_dtype") and cfg.family != "lstm":
+        model = dataclasses.replace(model, cache_dtype=cache_dtype)
+
+    with shd.use_mesh(mesh):
+        bspec, blog = batch_specs(cfg, shape_name, policy)
+        bshard = shd.tree_shardings(blog, bspec, mesh)
+
+        if kind == "train":
+            state_shape, state_shard = state_shardings(model, opt_name, policy, mesh, opt)
+            step = make_train_step(model.loss, opt, policy, lr=1e-4)
+            fn = step
+            args = (state_shape, bspec)
+            in_sh = (state_shard, bshard)
+            out_sh = (state_shard, _repl(mesh))
+        elif kind == "prefill":
+            pshard, pshape = param_shardings(model, mesh)
+
+            def fn(params, batch):
+                return model.prefill(params, batch, policy) if cfg.family != "audio" else _whisper_prefill(model, params, batch, policy)
+
+            args = (pshape, bspec)
+            in_sh = (pshard, bshard)
+            # pass the logits shape so non-divisible axes drop (e.g. batch=1
+            # over data=16, or vocab=33278 over model=16)
+            out_sh = NamedSharding(
+                mesh,
+                shd.logical_to_spec(
+                    ("batch", None, "vocab"), (gbatch, seq, cfg.vocab), mesh
+                ),
+            )
+        else:  # decode
+            pshard, pshape = param_shardings(model, mesh)
+            if cfg.family == "lstm":
+                cache_shape = jax.eval_shape(lambda: model.init_cache(gbatch, policy))
+                cspecs = [
+                    type(c)(("batch", "act_mlp"), ("batch", "act_mlp")) for c in cache_shape
+                ]
+            else:
+                cache_shape = jax.eval_shape(lambda: model.init_cache(gbatch, seq))
+                cspecs = model.cache_specs()
+            cshard = shd.tree_shardings(cspecs, cache_shape, mesh)
+
+            def fn(params, tokens, caches):
+                return model.decode_step(params, tokens, caches, policy)
+
+            args = (pshape, bspec["tokens"], cache_shape)
+            in_sh = (pshard, bshard["tokens"], cshard)
+            out_sh = (
+                NamedSharding(
+                    mesh,
+                    shd.logical_to_spec(
+                        ("batch", None, "vocab"), (gbatch, 1, cfg.vocab), mesh
+                    ),
+                ),
+                cshard,
+            )
+    return Cell(arch, shape_name, kind, fn, args, in_sh, out_sh, cfg, model, policy)
+
+
+def _whisper_prefill(model, params, batch, policy):
+    enc = model.encode(params, batch["frames"], policy)
+    return model.decode_seq(params, batch["tokens"], enc, policy)

@@ -1,0 +1,22 @@
+"""Model zoo: paper LSTMs + the 10 assigned architectures."""
+from ..configs.base import ArchConfig
+from .lm import CausalLM, cross_entropy
+from .lstm_models import Multi30KSeq2Seq, SNLIClassifier, UDPOSTagger, WikiText2LM
+from .whisper import Whisper
+
+
+def build(cfg: ArchConfig, **kw):
+    """Arch config -> model object with init/specs/loss/decode_step."""
+    if cfg.family == "audio":
+        kw.pop("attn_chunk", None)  # whisper uses its own fixed chunking
+        return Whisper(cfg, **kw)
+    if cfg.family == "lstm":
+        return WikiText2LM(vocab=cfg.vocab, emb=cfg.d_model, hidden=cfg.d_model,
+                           n_layers=cfg.n_layers)
+    return CausalLM(cfg, **kw)
+
+
+__all__ = [
+    "build", "CausalLM", "Whisper", "cross_entropy",
+    "UDPOSTagger", "SNLIClassifier", "Multi30KSeq2Seq", "WikiText2LM",
+]

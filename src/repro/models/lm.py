@@ -1,0 +1,263 @@
+"""CausalLM: one model class covering dense / moe / hybrid / ssm / vlm.
+
+The family-specific structure lives entirely in `_period()` (which sub-blocks
+a scan group contains); everything else — embedding, logits, loss, KV-cache
+decode — is shared. The paper's precision policy threads through every
+matmul site via `Policy`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core.policy import Policy
+from ..distributed.sharding import constrain
+from ..nn.attention import Attention
+from ..nn.ffn import FFN
+from ..nn.linear import QuantEmbedding, quant_act
+from ..nn.mamba import Mamba
+from ..nn.moe import MoE
+from ..nn.norms import LayerNorm, RMSNorm
+from ..nn.rwkv import RWKV6ChannelMix, RWKV6TimeMix
+from ..nn.transformer import Block, Stack
+
+__all__ = ["CausalLM", "cross_entropy", "mask_padded_vocab"]
+
+
+def mask_padded_vocab(logits, vocab: int):
+    """-inf the padded vocab tail without a scatter on the sharded dim."""
+    if logits.shape[-1] == vocab:
+        return logits
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, logits.shape[-1]), 2)
+    return jnp.where(iota >= vocab, jnp.asarray(-1e30, logits.dtype), logits)
+
+
+def cross_entropy(logits, labels, mask=None, z_loss: float = 0.0):
+    """Vocab-parallel (Megatron-style) cross entropy: every reduction is
+    over the (possibly model-sharded) vocab axis via max/exp/sum and a
+    one-hot contraction — no gather/scatter on the sharded dim, so the
+    partitioner never all-gathers the [B,S,V] logits. f32 reductions.
+    """
+    v = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    e = jnp.exp(lf - m)
+    lse = jnp.log(jnp.sum(e, axis=-1)) + m[..., 0]
+    onehot = (
+        labels[..., None] == jax.lax.broadcasted_iota(jnp.int32, (1, 1, v), 2)
+    )
+    ll = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is None:
+        return jnp.mean(nll)
+    mk = mask.astype(jnp.float32)
+    return jnp.sum(nll * mk) / jnp.maximum(jnp.sum(mk), 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class CausalLM:
+    cfg: ArchConfig
+    remat: str = "dots"
+    cache_dtype: Any = jnp.bfloat16
+    attn_chunk: int = 1024
+
+    # ------------------------------------------------------------------
+    def _attn(self, window=None):
+        c = self.cfg
+        return Attention(
+            dim=c.d_model, heads=c.n_heads, kv_heads=c.kv_heads, head_dim=c.hd,
+            window=window if window is not None else c.window,
+            rope=c.rope, rope_theta=c.rope_theta,
+            mrope_sections=c.mrope_sections, qkv_bias=c.qkv_bias,
+            chunk=self.attn_chunk,
+        )
+
+    def _ffn(self, hidden=None):
+        c = self.cfg
+        return FFN(c.d_model, hidden or c.d_ff, kind=c.ffn_kind)
+
+    def _moe(self):
+        c = self.cfg
+        return MoE(c.d_model, c.d_ff, c.n_experts, c.top_k)
+
+    def _mamba(self):
+        c = self.cfg
+        return Mamba(c.d_model, d_state=c.mamba_state)
+
+    def _period(self) -> tuple:
+        """The sub-blocks of one scan group."""
+        c = self.cfg
+        if c.family in ("dense", "vlm", "audio"):
+            return (Block(c.d_model, "attn", "ffn", attn=self._attn(), ffn_mod=self._ffn(), norm=c.norm),)
+        if c.family == "moe":
+            return (Block(c.d_model, "attn", "moe", attn=self._attn(), moe_mod=self._moe(), norm=c.norm),)
+        if c.family == "hybrid":
+            sub = []
+            for i in range(c.attn_every):
+                mixer = "attn" if i == c.attn_every // 2 - 1 else "mamba"
+                mlp = "moe" if (i % c.moe_every == c.moe_every - 1) else "ffn"
+                sub.append(
+                    Block(
+                        c.d_model, mixer, mlp,
+                        attn=self._attn(), mamba_mod=self._mamba(),
+                        ffn_mod=self._ffn(), moe_mod=self._moe(), norm=c.norm,
+                    )
+                )
+            return tuple(sub)
+        if c.family == "ssm":
+            return (
+                Block(
+                    c.d_model, "rwkv", "none",
+                    rwkv_mod=RWKV6TimeMix(c.d_model, c.rwkv_head_dim),
+                    cmix_mod=RWKV6ChannelMix(c.d_model, c.d_ff), norm=c.norm,
+                ),
+            )
+        raise ValueError(c.family)
+
+    def _stack(self) -> Stack:
+        c = self.cfg
+        period = self._period()
+        body_layers = c.n_layers - c.first_k_dense
+        assert body_layers % len(period) == 0, (c.n_layers, len(period))
+        return Stack(period, body_layers // len(period), remat=self.remat)
+
+    def _head_blocks(self) -> tuple:
+        """Unrolled leading dense layers (kimi first_k_dense)."""
+        c = self.cfg
+        return tuple(
+            Block(c.d_model, "attn", "ffn", attn=self._attn(), ffn_mod=self._ffn(c.first_dense_ff or c.d_ff), norm=c.norm)
+            for _ in range(c.first_k_dense)
+        )
+
+    def _embed(self):
+        return QuantEmbedding(self.cfg.vocab_padded(), self.cfg.d_model)
+
+    def _final_norm(self):
+        return RMSNorm(self.cfg.d_model) if self.cfg.norm == "rmsnorm" else LayerNorm(self.cfg.d_model)
+
+    # ------------------------------------------------------------------
+    def init(self, key):
+        ks = jax.random.split(key, 4 + self.cfg.first_k_dense)
+        p = {
+            "embed": self._embed().init(ks[0]),
+            "stack": self._stack().init(ks[1]),
+            "final_norm": self._final_norm().init(ks[2]),
+        }
+        for i, hb in enumerate(self._head_blocks()):
+            p[f"head_block{i}"] = hb.init(ks[4 + i])
+        if self.cfg.n_patches:
+            p["patch_proj"] = {
+                "w": jax.random.truncated_normal(ks[3], -2, 2, (self.cfg.d_model, self.cfg.d_model)) * 0.02
+            }
+        return p
+
+    def specs(self):
+        s = {
+            "embed": self._embed().specs(),
+            "stack": self._stack().specs(),
+            "final_norm": self._final_norm().specs(),
+        }
+        for i, hb in enumerate(self._head_blocks()):
+            s[f"head_block{i}"] = hb.specs()
+        if self.cfg.n_patches:
+            s["patch_proj"] = {"w": ("embed", "embed2")}
+        return s
+
+    # ------------------------------------------------------------------
+    def _positions(self, batch_dict, b, s):
+        c = self.cfg
+        base = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        if c.rope != "mrope":
+            return base
+        # M-RoPE: patches get (t=0, h, w) grid positions; text continues 1-D.
+        npat = c.n_patches if "patch_embeds" in batch_dict else 0
+        side = max(1, int(npat**0.5))
+        t = jnp.where(base < npat, 0, base - npat + side)
+        h = jnp.where(base < npat, (base % npat) // side, base - npat + side)
+        w = jnp.where(base < npat, base % side, base - npat + side)
+        return jnp.stack([t, h, w], axis=-1)
+
+    def _embed_inputs(self, p, batch_dict, policy):
+        c = self.cfg
+        tokens = batch_dict["tokens"]
+        x = self._embed().apply(p["embed"], tokens, policy)
+        if c.n_patches and "patch_embeds" in batch_dict:
+            pe = batch_dict["patch_embeds"].astype(x.dtype)  # [B, P, d]
+            pe = jnp.einsum("bpd,de->bpe", pe, p["patch_proj"]["w"].astype(x.dtype))
+            pad = x.shape[1] - pe.shape[1]
+            is_patch = (jnp.arange(x.shape[1]) < c.n_patches)[None, :, None]
+            pe_full = jnp.pad(pe, ((0, 0), (0, pad), (0, 0)))
+            x = jnp.where(is_patch, pe_full, x)
+        return x
+
+    def forward(self, p, batch_dict, policy: Policy):
+        """Full-sequence forward -> (logits, aux)."""
+        c = self.cfg
+        tokens = batch_dict["tokens"]
+        b, s = tokens.shape
+        x = self._embed_inputs(p, batch_dict, policy)
+        x = constrain(x, ("batch", "seq", "act_embed"))
+        pos = self._positions(batch_dict, b, s)
+        aux = jnp.float32(0.0)
+        for i, hb in enumerate(self._head_blocks()):
+            x, a = hb.apply(p[f"head_block{i}"], x, policy, positions=pos)
+            aux += a
+        x, a = self._stack().apply(p["stack"], x, policy, positions=pos)
+        aux += a
+        x = self._final_norm().apply(p["final_norm"], x)
+        logits = self._embed().attend(p["embed"], x, policy)
+        logits = constrain(logits, ("batch", "seq", "vocab"))
+        return logits, aux
+
+    def loss(self, p, batch_dict, policy: Policy):
+        logits, aux = self.forward(p, batch_dict, policy)
+        logits = mask_padded_vocab(logits, self.cfg.vocab)
+        ce = cross_entropy(logits, batch_dict["labels"], batch_dict.get("mask"))
+        return ce + 0.01 * aux
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch, s_max):
+        caches = {"stack": self._stack().init_cache(batch, s_max, self.cache_dtype)}
+        for i, hb in enumerate(self._head_blocks()):
+            caches[f"head_block{i}"] = hb.init_cache(batch, s_max, self.cache_dtype)
+        return caches
+
+    def cache_specs(self):
+        specs = {"stack": self._stack().cache_specs()}
+        for i, hb in enumerate(self._head_blocks()):
+            specs[f"head_block{i}"] = hb.cache_specs()
+        return specs
+
+    def decode_step(self, p, tokens, caches, policy: Policy):
+        """tokens [B,1] -> (logits [B,1,V], new caches). serve_step."""
+        c = self.cfg
+        b = tokens.shape[0]
+        x = self._embed().apply(p["embed"], tokens, policy)
+        pos3 = None
+        new_caches = dict(caches)
+        for i, hb in enumerate(self._head_blocks()):
+            x, new_caches[f"head_block{i}"] = hb.decode(
+                p[f"head_block{i}"], x, caches[f"head_block{i}"], policy, pos3
+            )
+        x, new_caches["stack"] = self._stack().decode(
+            p["stack"], x, caches["stack"], policy, pos3
+        )
+        x = self._final_norm().apply(p["final_norm"], x)
+        logits = self._embed().attend(p["embed"], x, policy)
+        return logits, new_caches
+
+    def prefill(self, p, batch_dict, policy: Policy):
+        """Teacher-forced pass producing logits; inference-prefill shape.
+
+        (KV-cache materialization for subsequent decode reuses decode_step's
+        ring-buffer layout; the prefill compute cost — what the roofline
+        measures — is the full forward.)
+        """
+        logits, _ = self.forward(p, batch_dict, policy)
+        return logits

@@ -1,0 +1,19 @@
+"""NN layer library with FloatSD8/FP8 quantization hooks."""
+from . import attention, ffn, linear, lstm, mamba, module, moe, norms, rotary, rwkv, transformer
+from .attention import Attention, KVCache
+from .ffn import FFN
+from .linear import QuantDense, QuantEmbedding
+from .lstm import BiLSTM, LSTMCell, LSTMLayer
+from .mamba import Mamba
+from .moe import MoE
+from .norms import LayerNorm, RMSNorm
+from .rwkv import RWKV6ChannelMix, RWKV6TimeMix
+from .transformer import Block, Stack
+
+__all__ = [
+    "attention", "ffn", "linear", "lstm", "mamba", "module", "moe", "norms",
+    "rotary", "rwkv", "transformer",
+    "Attention", "KVCache", "FFN", "QuantDense", "QuantEmbedding",
+    "BiLSTM", "LSTMCell", "LSTMLayer", "Mamba", "MoE", "LayerNorm", "RMSNorm",
+    "RWKV6ChannelMix", "RWKV6TimeMix", "Block", "Stack",
+]

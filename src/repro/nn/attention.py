@@ -1,0 +1,380 @@
+"""GQA attention: chunked (flash-style) training path + KV-cache decode.
+
+Supports: MHA/GQA (any kv_heads dividing heads), causal masking, sliding
+window (SWA), cross-attention (whisper), RoPE / M-RoPE, fp8 KV-cache storage
+(beyond-paper knob).
+
+The training path streams KV in chunks with an online softmax (lax.scan),
+bounding transient memory at seq 32k; kv heads are never materialized
+group-expanded (GQA einsums keep the kv-head axis, so granite's kv=1 stays
+replicated instead of broadcast-copied 48x).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.policy import Policy
+from . import rotary
+from .linear import QuantDense, quant_act
+
+__all__ = ["Attention", "KVCache", "flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _chunk(x, n):  # [B, S, ...] -> [n, B, C, ...]
+    b, s = x.shape[:2]
+    c = s // n
+    return jnp.moveaxis(x.reshape(b, n, c, *x.shape[2:]), 1, 0)
+
+
+def _split_chunks(sq, chunk, skv, kv_chunk):
+    nq = max(1, sq // chunk)
+    while sq % nq:
+        nq -= 1
+    nk = max(1, skv // kv_chunk)
+    while skv % nk:
+        nk -= 1
+    return nq, nk
+
+
+def _mask_tile(qp, kp, b, qc, kc, causal, window):
+    mask = jnp.ones((b, qc, kc), bool)
+    if causal:
+        mask &= kp[:, None, :] <= qp[:, :, None]
+    if window is not None:
+        mask &= qp[:, :, None] - kp[:, None, :] < window
+    return mask
+
+
+def _flash_fwd(q, k, v, q_pos, k_pos, causal, window, chunk, kv_chunk):
+    """Returns (out [B,Sq,Kh,G,D], lse [B,Kh,G,Sq])."""
+    b, sq, kh, g, d = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    nq, nk = _split_chunks(sq, chunk, skv, kv_chunk)
+
+    qs = _chunk(q, nq)  # [nq, B, qc, Kh, G, D]
+    qps = _chunk(q_pos[..., None], nq)[..., 0]  # [nq, B, qc]
+    ks = _chunk(k, nk)  # [nk, B, kc, Kh, D]
+    vs = _chunk(v, nk)
+    kps = _chunk(k_pos[..., None], nk)[..., 0]  # [nk, B, kc]
+    qc = sq // nq
+
+    def q_body(_, q_in):
+        qi, qp = q_in
+        qf = qi.astype(jnp.float32) * scale
+
+        def kv_body(carry, inp):
+            # named_scope 'flashable': every tensor in this block is a score/
+            # probability tile the Pallas flash kernel (kernels/flash_attention)
+            # keeps VMEM-resident on TPU. The roofline's kernel-substitution
+            # model (analyze_hlo vmem_scopes) keys on this scope name.
+            with jax.named_scope("flashable"):
+                m, l, acc = carry
+                kc_, vc, kp = inp
+                s = jnp.einsum(
+                    "bqkgd,bckd->bkgqc", qf, kc_.astype(jnp.float32),
+                    preferred_element_type=jnp.float32,
+                )  # [B,Kh,G,qc,kc]
+                mask = _mask_tile(qp, kp, b, qc, kc_.shape[1], causal, window)
+                s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                alpha = jnp.exp(m - m_new)
+                l_new = l * alpha + jnp.sum(p, axis=-1)
+                pv = jnp.einsum(
+                    "bkgqc,bckd->bkgqd",
+                    p.astype(jnp.bfloat16), vc.astype(jnp.bfloat16),
+                    preferred_element_type=jnp.float32,
+                )
+                acc_new = acc * alpha[..., None] + pv
+                return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, qc, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), (ks, vs, kps))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))  # [B,Kh,G,qc]
+        return None, (jnp.moveaxis(out, 3, 1), lse)  # ([B,qc,Kh,G,D], ...)
+
+    _, (outs, lses) = jax.lax.scan(q_body, None, (qs, qps))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, kh, g, d)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(b, kh, g, sq)  # [B,Kh,G,Sq]
+    return out.astype(q.dtype), lse
+
+
+def _flash_bwd(q, k, v, q_pos, k_pos, out, lse, do,
+               causal, window, chunk, kv_chunk):
+    """Flash backward: recompute score tiles per chunk (no T^2 residuals).
+
+    Standard FA2 recipe: p = exp(s - lse) (normalized), dv = p^T do,
+    dp = do v^T, ds = p * (dp - delta) with delta = rowsum(do * o),
+    dq = scale * ds k, dk = scale * ds^T q.
+    """
+    b, sq, kh, g, d = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    nq, nk = _split_chunks(sq, chunk, skv, kv_chunk)
+    qc, kc = sq // nq, skv // nk
+
+    qs = _chunk(q, nq)  # [nq, B, qc, Kh, G, D]
+    qps = _chunk(q_pos[..., None], nq)[..., 0]
+    dos = _chunk(do, nq)
+    # delta[b,h,g,q] = rowsum(do * o): q-sized, computed once up front
+    delta_full = jnp.einsum(
+        "bqkgd,bqkgd->bkgq", do.astype(jnp.float32), out.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )  # [B,Kh,G,Sq]
+    deltas = jnp.moveaxis(delta_full.reshape(b, kh, g, nq, qc), 3, 0)
+    lse_q = jnp.moveaxis(lse.reshape(b, kh, g, nq, qc), 3, 0)
+    ks = _chunk(k, nk)  # [nk, B, kc, Kh, D]
+    vs = _chunk(v, nk)
+    kps = _chunk(k_pos[..., None], nk)[..., 0]
+
+    def q_body(carry, q_in):
+        dk_acc, dv_acc = carry  # [nk, B, kc, Kh, D] f32
+        qi, qp, do_c, lse_c, delta = q_in
+        qf = qi.astype(jnp.float32) * scale
+        dof = do_c.astype(jnp.float32)  # [B, qc, Kh, G, D]
+        with jax.named_scope("flashable"):
+            def kv_body(dq_c, inp):
+                kc_, vc, kp = inp
+                s = jnp.einsum("bqkgd,bckd->bkgqc", qf, kc_.astype(jnp.float32),
+                               preferred_element_type=jnp.float32)
+                mask = _mask_tile(qp, kp, b, qc, kc_.shape[1], causal, window)
+                s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+                p = jnp.exp(s - lse_c[..., None])  # normalized [B,Kh,G,qc,kc]
+                dv_c = jnp.einsum("bkgqc,bqkgd->bckd",
+                                  p.astype(jnp.bfloat16), dof.astype(jnp.bfloat16),
+                                  preferred_element_type=jnp.float32)
+                dp = jnp.einsum("bqkgd,bckd->bkgqc", dof, vc.astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+                ds = p * (dp - delta[..., None]) * scale  # includes d/ds scale
+                dsb = ds.astype(jnp.bfloat16)
+                dq_c = dq_c + jnp.einsum("bkgqc,bckd->bqkgd", dsb,
+                                         kc_.astype(jnp.bfloat16),
+                                         preferred_element_type=jnp.float32)
+                dk_c = jnp.einsum("bkgqc,bqkgd->bckd", dsb,
+                                  qi.astype(jnp.bfloat16),  # raw q: scale in ds
+                                  preferred_element_type=jnp.float32)
+                return dq_c, (dk_c, dv_c)
+
+            dq0 = jnp.zeros((b, qc, kh, g, d), jnp.float32)
+            dq_c, (dks, dvs) = jax.lax.scan(kv_body, dq0, (ks, vs, kps))
+        return (dk_acc + dks, dv_acc + dvs), dq_c
+
+    z = jnp.zeros((nk, b, kc, kh, d), jnp.float32)
+    (dk_s, dv_s), dqs = jax.lax.scan(
+        q_body, (z, z), (qs, qps, dos, lse_q, deltas)
+    )
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(b, sq, kh, g, d).astype(q.dtype)
+    dk = jnp.moveaxis(dk_s, 0, 1).reshape(b, skv, kh, d).astype(k.dtype)
+    dv = jnp.moveaxis(dv_s, 0, 1).reshape(b, skv, kh, d).astype(v.dtype)
+    return dq, dk, dv
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal, window, chunk, kv_chunk):
+    @jax.custom_vjp
+    def fa(q, k, v, q_pos, k_pos):
+        out, _ = _flash_fwd(q, k, v, q_pos, k_pos, causal, window, chunk, kv_chunk)
+        return out
+
+    def fwd(q, k, v, q_pos, k_pos):
+        out, lse = _flash_fwd(q, k, v, q_pos, k_pos, causal, window, chunk, kv_chunk)
+        return out, (q, k, v, q_pos, k_pos, out, lse)
+
+    def bwd(res, do):
+        q, k, v, q_pos, k_pos, out, lse = res
+        dq, dk, dv = _flash_bwd(
+            q, k, v, q_pos, k_pos, out, lse, do, causal, window, chunk, kv_chunk
+        )
+        import numpy as _np
+
+        f0 = lambda x: _np.zeros(x.shape, jax.dtypes.float0)
+        return dq, dk, dv, f0(q_pos), f0(k_pos)
+
+    fa.defvjp(fwd, bwd)
+    return fa
+
+
+# Perf A/B switch (EXPERIMENTS.md §Perf): True = custom flash VJP (backward
+# recomputes tiles, no T^2 residuals); False = plain autodiff through the
+# scan (saves stacked probability residuals — the pre-optimization baseline).
+import os as _os
+
+FLASH_VJP = _os.environ.get("REPRO_FLASH_VJP", "1") != "0"
+
+
+def flash_attention(
+    q: jax.Array,  # [B, Sq, Kh, G, D]
+    k: jax.Array,  # [B, Skv, Kh, D]
+    v: jax.Array,  # [B, Skv, Kh, D]
+    q_pos: jax.Array,  # [B, Sq] int32
+    k_pos: jax.Array,  # [B, Skv] int32
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    chunk: int = 1024,  # q-chunk
+    kv_chunk: int = 512,
+) -> jax.Array:
+    """Double-blocked online-softmax attention with a flash-style custom
+    VJP: the backward recomputes score tiles per chunk instead of saving
+    T^2 probability residuals (the XLA analogue of the FA2 kernel; the
+    Pallas TPU kernel in kernels/flash_attention implements the same
+    schedule in VMEM). Returns [B, Sq, Kh, G, D].
+    """
+    if FLASH_VJP:
+        return _make_flash(causal, window, int(chunk), int(kv_chunk))(
+            q, k, v, q_pos, k_pos
+        )
+    out, _ = _flash_fwd(q, k, v, q_pos, k_pos, causal, window,
+                        int(chunk), int(kv_chunk))
+    return out
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, S_max, Kh, D]  (ring buffer if windowed)
+    v: jax.Array
+    pos: jax.Array  # [] int32 — absolute next position
+
+    @staticmethod
+    def init(batch, s_max, kv_heads, head_dim, dtype=jnp.bfloat16):
+        z = jnp.zeros((batch, s_max, kv_heads, head_dim), dtype)
+        return KVCache(z, z, jnp.int32(0))
+
+
+@dataclasses.dataclass(frozen=True)
+class Attention:
+    dim: int
+    heads: int
+    kv_heads: int
+    head_dim: int | None = None
+    causal: bool = True
+    window: int | None = None  # SWA
+    rope: str = "rope"  # "rope" | "mrope" | "none"
+    rope_theta: float = 10000.0
+    mrope_sections: tuple = (16, 24, 24)
+    qkv_bias: bool = False  # phi4/qwen2 style
+    chunk: int = 1024
+    name: str = "attn"
+
+    @property
+    def hd(self):
+        return self.head_dim or self.dim // self.heads
+
+    @property
+    def groups(self):
+        return self.heads // self.kv_heads
+
+    def _dense(self, out_dim, out_axis, bias):
+        return QuantDense(self.dim, out_dim, use_bias=bias, in_axis="embed", out_axis=out_axis)
+
+    def init(self, key):
+        ks = jax.random.split(key, 4)
+        h, kh, d = self.heads, self.kv_heads, self.hd
+        return {
+            "wq": self._dense(h * d, "heads", self.qkv_bias).init(ks[0]),
+            "wk": self._dense(kh * d, "kv_heads", self.qkv_bias).init(ks[1]),
+            "wv": self._dense(kh * d, "kv_heads", self.qkv_bias).init(ks[2]),
+            "wo": QuantDense(h * d, self.dim, use_bias=False, in_axis="heads", out_axis="embed").init(ks[3]),
+        }
+
+    def specs(self):
+        return {
+            "wq": self._dense(1, "heads", self.qkv_bias).specs(),
+            "wk": self._dense(1, "kv_heads", self.qkv_bias).specs(),
+            "wv": self._dense(1, "kv_heads", self.qkv_bias).specs(),
+            "wo": {"w": ("heads", "embed")},
+        }
+
+    def _qkv(self, p, x, policy, positions):
+        b, s, _ = x.shape
+        h, kh, d = self.heads, self.kv_heads, self.hd
+        q = self._dense(h * d, "heads", self.qkv_bias).apply(p["wq"], x, policy).reshape(b, s, h, d)
+        k = self._dense(kh * d, "kv_heads", self.qkv_bias).apply(p["wk"], x, policy).reshape(b, s, kh, d)
+        v = self._dense(kh * d, "kv_heads", self.qkv_bias).apply(p["wv"], x, policy).reshape(b, s, kh, d)
+        if self.rope == "rope":
+            q, k = rotary.apply_rope(q, k, positions, d, self.rope_theta)
+        elif self.rope == "mrope":
+            q, k = rotary.apply_mrope(q, k, positions, d, self.mrope_sections, self.rope_theta)
+        return q, k, v
+
+    def apply(self, p, x, policy: Policy, positions=None, kv=None, kv_positions=None):
+        """Training / prefill path. x: [B,S,dim]. If kv given: cross-attn."""
+        b, s, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        pos1d = positions if positions.ndim == 2 else positions[..., 0]
+        q, k, v = self._qkv(p, x, policy, positions)
+        if kv is not None:  # cross attention: keys/values from encoder states
+            kx = kv
+            bk, sk, _ = kx.shape
+            kh, d = self.kv_heads, self.hd
+            k = self._dense(kh * d, "kv_heads", self.qkv_bias).apply(p["wk"], kx, policy).reshape(bk, sk, kh, d)
+            v = self._dense(kh * d, "kv_heads", self.qkv_bias).apply(p["wv"], kx, policy).reshape(bk, sk, kh, d)
+            kpos = (
+                kv_positions
+                if kv_positions is not None
+                else jnp.broadcast_to(jnp.arange(sk, dtype=jnp.int32), (bk, sk))
+            )
+            causal = False
+        else:
+            kpos = pos1d
+            causal = self.causal
+        qg = q.reshape(b, s, self.kv_heads, self.groups, self.hd)
+        out = flash_attention(
+            qg, k, v, pos1d, kpos,
+            causal=causal, window=self.window, chunk=min(self.chunk, k.shape[1]),
+        ).reshape(b, s, self.heads * self.hd)
+        return QuantDense(self.heads * self.hd, self.dim, use_bias=False, in_axis="heads", out_axis="embed").apply(p["wo"], out, policy)
+
+    def decode(self, p, x, cache: KVCache, policy: Policy, positions3=None):
+        """One-token decode. x: [B,1,dim]. Returns (out, new_cache)."""
+        b, s, _ = x.shape
+        assert s == 1
+        s_max = cache.k.shape[1]
+        pos = cache.pos
+        positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+        if self.rope == "mrope":
+            # text continuation: t == h == w == pos (matches training path)
+            rp = (
+                positions3
+                if positions3 is not None
+                else jnp.broadcast_to(pos.astype(jnp.int32), (b, 1, 3))
+            )
+        else:
+            rp = positions
+        q, k, v = self._qkv(p, x, policy, rp)
+        slot = (pos % s_max).astype(jnp.int32)  # ring buffer when windowed
+        ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), slot, axis=1)
+        # absolute positions stored in the ring: slot i holds pos p iff
+        # p % s_max == i and p <= pos. Reconstruct:
+        idx = jnp.arange(s_max, dtype=jnp.int32)
+        wrap = (pos // s_max) - (idx > slot)
+        abs_pos = wrap * s_max + idx  # [S_max], negative -> never written
+        valid = (abs_pos >= 0) & (abs_pos <= pos)
+        if self.window is not None:
+            valid &= pos - abs_pos < self.window
+        qg = q.reshape(b, 1, self.kv_heads, self.groups, self.hd).astype(jnp.float32)
+        scale = 1.0 / jnp.sqrt(self.hd).astype(jnp.float32)
+        sc = jnp.einsum(
+            "bqkgd,bckd->bkgqc", qg * scale, ck.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        sc = jnp.where(valid[None, None, None, None, :], sc, NEG_INF)
+        w = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum(
+            "bkgqc,bckd->bqkgd", w, cv.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        ).astype(x.dtype).reshape(b, 1, self.heads * self.hd)
+        out = QuantDense(self.heads * self.hd, self.dim, use_bias=False, in_axis="heads", out_axis="embed").apply(p["wo"], out, policy)
+        return out, KVCache(ck, cv, pos + 1)

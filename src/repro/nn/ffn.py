@@ -1,0 +1,59 @@
+"""Feed-forward blocks. SwiGLU's sigmoid can run through the paper's
+two-region FloatSD8 quantizer (beyond-paper extension of §III-C, enabled by
+``Policy.sigmoid_quant`` + ``FFN.quant_silu``)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..core.policy import Policy
+from ..core.qsigmoid import qsigmoid
+from .linear import QuantDense
+
+__all__ = ["FFN"]
+
+
+def _silu(x, quantized: bool):
+    return x * (qsigmoid(x) if quantized else jax.nn.sigmoid(x))
+
+
+@dataclasses.dataclass(frozen=True)
+class FFN:
+    dim: int
+    hidden: int
+    kind: str = "swiglu"  # "swiglu" | "gelu" | "geglu"
+    quant_silu: bool = False  # FloatSD8 two-region sigmoid inside SiLU
+    name: str = "ffn"
+
+    def _in(self):
+        return QuantDense(self.dim, self.hidden, use_bias=False, in_axis="embed", out_axis="mlp")
+
+    def _out(self):
+        return QuantDense(self.hidden, self.dim, use_bias=False, in_axis="mlp", out_axis="embed")
+
+    def init(self, key):
+        ks = jax.random.split(key, 3)
+        p = {"wi": self._in().init(ks[0]), "wo": self._out().init(ks[1])}
+        if self.kind in ("swiglu", "geglu"):
+            p["wg"] = self._in().init(ks[2])
+        return p
+
+    def specs(self):
+        s = {"wi": self._in().specs(), "wo": self._out().specs()}
+        if self.kind in ("swiglu", "geglu"):
+            s["wg"] = self._in().specs()
+        return s
+
+    def apply(self, p, x, policy: Policy):
+        h = self._in().apply(p["wi"], x, policy)
+        if self.kind == "swiglu":
+            g = self._in().apply(p["wg"], x, policy)
+            h = _silu(g, self.quant_silu and policy.sigmoid_quant) * h
+        elif self.kind == "geglu":
+            g = self._in().apply(p["wg"], x, policy)
+            h = jax.nn.gelu(g) * h
+        else:
+            h = jax.nn.gelu(h)
+        return self._out().apply(p["wo"], h, policy)

@@ -1,0 +1,172 @@
+"""LSTM with FloatSD8 training semantics — the paper's core (Eqs. 1-6).
+
+Quantization sites per §III:
+  * all eight gate matmuls: FloatSD8 weights x FP8 activations (x_t and
+    h_{t-1} both pass the activation quantizer),
+  * f, i, o gates: two-region FloatSD8 sigmoid (Eqs. 7-8),
+  * g gate and tanh(c_t): tanh LUT emitting FP8,
+  * cell state c_t: kept FP16 (the MAC's accumulation format),
+so every element-wise product in Eqs. (5)-(6) is FloatSD8 x FP — exactly the
+multiplier the paper's MAC implements.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+import os
+
+from ..core.policy import Policy
+from ..core.qsigmoid import qsigmoid, qtanh_fp8
+from . import module as M
+from .linear import quant_act, quant_einsum, quant_weight
+
+__all__ = ["LSTMCell", "LSTMLayer", "BiLSTM", "LSTMState"]
+
+# Perf A/B switch (EXPERIMENTS.md §Perf hillclimb #2): hoist the T-invariant
+# weight fake-quantization out of the time-step scan. Numerically identical
+# (fake-quant is deterministic); REPRO_LSTM_HOIST=0 restores the naive
+# quantize-inside-step baseline.
+HOIST_WQUANT = os.environ.get("REPRO_LSTM_HOIST", "1") != "0"
+
+
+class LSTMState(NamedTuple):
+    h: jax.Array  # [B, H]
+    c: jax.Array  # [B, H]
+
+
+@dataclasses.dataclass(frozen=True)
+class LSTMCell:
+    in_dim: int
+    hidden: int
+    name: str = "lstm_cell"
+
+    def init(self, key):
+        kx, kh = jax.random.split(key)
+        h = self.hidden
+        # gate order: i, f, g, o (forget-bias +1: standard, keeps parity
+        # with the PyTorch baselines the paper trains against)
+        b = jnp.zeros((4 * h,), jnp.float32).at[h : 2 * h].set(1.0)
+        return {
+            "wx": M.uniform_init(kx, (self.in_dim, 4 * h), 1.0 / h**0.5),
+            "wh": M.uniform_init(kh, (h, 4 * h), 1.0 / h**0.5),
+            "b": b,
+        }
+
+    def specs(self):
+        return {"wx": ("embed", "hidden4"), "wh": ("hidden", "hidden4"), "b": ("hidden4",)}
+
+    def step(self, p, x_t, state: LSTMState, policy: Policy,
+             prequantized: bool = False):
+        """One time step. x_t: [B, in_dim].
+
+        `prequantized=True`: p["wx"]/p["wh"] already passed the weight
+        quantizer (hoisted out of the time scan by LSTMLayer.apply — the
+        quantize-at-use is T-invariant, so doing it per step is pure waste;
+        EXPERIMENTS.md §Perf hillclimb #2). x_t is then also already
+        act-quantized; h still quantizes per step (it changes each step).
+        """
+        h = self.hidden
+        cdt = policy.cdt() or x_t.dtype
+        # Eq. (1)-(4) matmuls: FloatSD8 weights, FP8 activations (x and h)
+        if prequantized:
+            from .linear import policy_einsum
+
+            hq = quant_act(state.h.astype(x_t.dtype), policy)
+            z = (
+                policy_einsum("bd,dk->bk", x_t.astype(cdt), p["wx"], policy).astype(cdt)
+                + policy_einsum("bd,dk->bk", hq.astype(cdt), p["wh"], policy).astype(cdt)
+                + p["b"].astype(cdt)
+            )
+        else:
+            z = (
+                quant_einsum("bd,dk->bk", x_t, p["wx"], policy)
+                + quant_einsum("bd,dk->bk", state.h.astype(x_t.dtype), p["wh"], policy)
+                + p["b"].astype(cdt)
+            )
+        zi, zf, zg, zo = jnp.split(z, 4, axis=-1)
+        if policy.sigmoid_quant:
+            i_t, f_t, o_t = qsigmoid(zi), qsigmoid(zf), qsigmoid(zo)
+            g_t = qtanh_fp8(zg)
+        else:
+            i_t, f_t, o_t = jax.nn.sigmoid(zi), jax.nn.sigmoid(zf), jax.nn.sigmoid(zo)
+            g_t = jnp.tanh(zg)
+        # Eq. (5): FloatSD8 (f,i) x FP products, FP16 cell state
+        c_dt = jnp.float16 if policy.master_dtype == "fp16" else jnp.float32
+        c_t = (f_t * state.c.astype(f_t.dtype) + i_t * g_t).astype(c_dt)
+        # Eq. (6)
+        tc = qtanh_fp8(c_t.astype(cdt)) if policy.sigmoid_quant else jnp.tanh(c_t.astype(cdt))
+        h_t = (o_t * tc).astype(cdt)
+        return h_t, LSTMState(h_t, c_t)
+
+
+@dataclasses.dataclass(frozen=True)
+class LSTMLayer:
+    in_dim: int
+    hidden: int
+    reverse: bool = False
+    name: str = "lstm"
+
+    def init(self, key):
+        return LSTMCell(self.in_dim, self.hidden).init(key)
+
+    def specs(self):
+        return LSTMCell(self.in_dim, self.hidden).specs()
+
+    def apply(self, p, xs, policy: Policy, state: LSTMState | None = None):
+        """xs: [B, S, in_dim] -> ([B, S, H], final_state)."""
+        cell = LSTMCell(self.in_dim, self.hidden)
+        b = xs.shape[0]
+        cdt = policy.cdt() or xs.dtype
+        c_dt = jnp.float16 if policy.master_dtype == "fp16" else jnp.float32
+        if state is None:
+            state = LSTMState(
+                jnp.zeros((b, self.hidden), cdt), jnp.zeros((b, self.hidden), c_dt)
+            )
+        else:  # normalize external (cache) dtypes to the policy's
+            state = LSTMState(state.h.astype(cdt), state.c.astype(c_dt))
+        xs_t = jnp.swapaxes(quant_act(xs, policy), 0, 1)  # [S, B, D]
+
+        if HOIST_WQUANT:
+            # quantize-at-use ONCE, outside the scan (T-invariant); STE
+            # gradients still flow to the raw master weights.
+            pq = dict(p)
+            pq["wx"] = quant_weight(p["wx"], policy)
+            pq["wh"] = quant_weight(p["wh"], policy)
+
+            def body(st, x_t):
+                h_t, st2 = cell.step(pq, x_t, st, policy, prequantized=True)
+                return st2, h_t
+        else:
+            def body(st, x_t):
+                h_t, st2 = cell.step(p, x_t, st, policy)
+                return st2, h_t
+
+        final, hs = jax.lax.scan(body, state, xs_t, reverse=self.reverse)
+        return jnp.swapaxes(hs, 0, 1), final
+
+
+@dataclasses.dataclass(frozen=True)
+class BiLSTM:
+    in_dim: int
+    hidden: int  # per direction
+    name: str = "bilstm"
+
+    def init(self, key):
+        kf, kb = jax.random.split(key)
+        return {
+            "fwd": LSTMLayer(self.in_dim, self.hidden).init(kf),
+            "bwd": LSTMLayer(self.in_dim, self.hidden, reverse=True).init(kb),
+        }
+
+    def specs(self):
+        s = LSTMLayer(self.in_dim, self.hidden).specs()
+        return {"fwd": s, "bwd": s}
+
+    def apply(self, p, xs, policy: Policy):
+        hf, _ = LSTMLayer(self.in_dim, self.hidden).apply(p["fwd"], xs, policy)
+        hb, _ = LSTMLayer(self.in_dim, self.hidden, reverse=True).apply(p["bwd"], xs, policy)
+        return jnp.concatenate([hf, hb], axis=-1)

@@ -1,0 +1,164 @@
+"""Mamba (S6) block for the Jamba hybrid (arXiv:2403.19887 cfg: expand=2,
+d_state=16, d_conv=4). Selective scan runs as a chunked lax.scan (sequential
+across chunks, bounded transients) — the TPU-native replacement for the
+paper's CUDA kernel (DESIGN.md §3). All projections are QuantDense sites, so
+FloatSD8 weights + FP8 activations apply; the SiLU gates can use the
+two-region quantized sigmoid."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.policy import Policy
+from ..core.qsigmoid import qsigmoid
+from . import module as M
+from .linear import quant_act, quant_einsum
+
+__all__ = ["Mamba", "MambaCache"]
+
+
+def _silu(x, q):
+    return x * (qsigmoid(x) if q else jax.nn.sigmoid(x))
+
+
+class MambaCache(NamedTuple):
+    ssm: jax.Array  # [B, d_inner, d_state]
+    conv: jax.Array  # [B, d_conv-1, d_inner]
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba:
+    dim: int
+    expand: int = 2
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int | None = None
+    quant_silu: bool = False
+    name: str = "mamba"
+
+    @property
+    def d_inner(self):
+        return self.expand * self.dim
+
+    @property
+    def rank(self):
+        return self.dt_rank or max(1, self.dim // 16)
+
+    def init(self, key):
+        ks = jax.random.split(key, 7)
+        di, ds, r = self.d_inner, self.d_state, self.rank
+        a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None], (di, 1))
+        return {
+            "in_proj": M.truncated_normal_init(ks[0], (self.dim, 2 * di)),
+            "conv_w": M.truncated_normal_init(ks[1], (self.d_conv, di), 0.5),
+            "conv_b": jnp.zeros((di,), jnp.float32),
+            "x_proj": M.truncated_normal_init(ks[2], (di, r + 2 * ds)),
+            "dt_proj": M.truncated_normal_init(ks[3], (r, di)),
+            "dt_bias": jnp.full((di,), -4.6, jnp.float32),  # softplus^-1(0.01)
+            "a_log": jnp.log(a),
+            "d": jnp.ones((di,), jnp.float32),
+            "out_proj": M.truncated_normal_init(ks[4], (di, self.dim)),
+        }
+
+    def specs(self):
+        return {
+            "in_proj": ("embed", "mlp"),
+            "conv_w": (None, "mlp"),
+            "conv_b": ("mlp",),
+            "x_proj": ("mlp", None),
+            "dt_proj": (None, "mlp"),
+            "dt_bias": ("mlp",),
+            "a_log": ("mlp", None),
+            "d": ("mlp",),
+            "out_proj": ("mlp", "embed"),
+        }
+
+    def _pre(self, p, u, policy):
+        """Shared projections: u [B,S,dim] -> x,z,dt,Bm,Cm."""
+        di, ds, r = self.d_inner, self.d_state, self.rank
+        xz = quant_einsum("bsd,dk->bsk", u, p["in_proj"], policy)
+        x, z = jnp.split(xz, 2, axis=-1)
+        return x, z
+
+    def _ssm_params(self, p, x, policy):
+        ds, r = self.d_state, self.rank
+        proj = quant_einsum("bsd,dk->bsk", x, p["x_proj"], policy)
+        dt_r, bm, cm = jnp.split(proj, [r, r + ds], axis=-1)
+        dt = quant_einsum("bsr,rd->bsd", dt_r, p["dt_proj"], policy)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+        return dt, bm.astype(jnp.float32), cm.astype(jnp.float32)
+
+    def apply(self, p, u, policy: Policy, chunk: int = 256):
+        """u: [B, S, dim] -> [B, S, dim]."""
+        b, s, _ = u.shape
+        di, ds = self.d_inner, self.d_state
+        cdt = policy.cdt() or u.dtype
+        x, z = self._pre(p, quant_act(u, policy), policy)
+        # causal depthwise conv, k=d_conv
+        xp = jnp.pad(x, ((0, 0), (self.d_conv - 1, 0), (0, 0)))
+        xc = sum(
+            xp[:, i : i + s, :] * p["conv_w"][i].astype(x.dtype)
+            for i in range(self.d_conv)
+        ) + p["conv_b"].astype(x.dtype)
+        x = _silu(xc, self.quant_silu and policy.sigmoid_quant)
+        dt, bm, cm = self._ssm_params(p, x, policy)
+        a = -jnp.exp(p["a_log"])  # [di, ds]
+
+        n = max(1, s // chunk)
+        while s % n:
+            n -= 1
+        csz = s // n
+
+        def to_chunks(t):
+            return jnp.moveaxis(t.reshape(b, n, csz, *t.shape[2:]), 1, 0)
+
+        xs, dts, bs, cs = map(to_chunks, (x.astype(jnp.float32), dt, bm, cm))
+
+        def chunk_body(h, inp):
+            xch, dtc, bc, cc = inp  # [B,csz,...]
+
+            def step(hh, t):
+                xt, dtt, bt, ct = t
+                da = jnp.exp(dtt[:, :, None] * a[None])  # [B,di,ds]
+                hh = hh * da + (dtt * xt)[:, :, None] * bt[:, None, :]
+                y = jnp.einsum("bdn,bn->bd", hh, ct)
+                return hh, y
+
+            h, ys = jax.lax.scan(
+                step, h, tuple(jnp.swapaxes(t, 0, 1) for t in (xch, dtc, bc, cc))
+            )
+            return h, jnp.swapaxes(ys, 0, 1)  # [B,csz,di]
+
+        h0 = jnp.zeros((b, di, ds), jnp.float32)
+        _, ys = jax.lax.scan(chunk_body, h0, (xs, dts, bs, cs))
+        y = jnp.moveaxis(ys, 0, 1).reshape(b, s, di)
+        y = y + x.astype(jnp.float32) * p["d"]
+        y = y.astype(cdt) * _silu(z, self.quant_silu and policy.sigmoid_quant)
+        return quant_einsum("bsd,dk->bsk", y, p["out_proj"], policy)
+
+    def decode(self, p, u, cache: MambaCache, policy: Policy):
+        """One-token step. u: [B,1,dim] -> ([B,1,dim], new cache)."""
+        b = u.shape[0]
+        di, ds = self.d_inner, self.d_state
+        cdt = policy.cdt() or u.dtype
+        x, z = self._pre(p, quant_act(u, policy), policy)  # [B,1,di]
+        x1 = x[:, 0]
+        # conv ring: cache.conv holds previous d_conv-1 inputs
+        window = jnp.concatenate([cache.conv, x1[:, None, :]], axis=1)  # [B,k,di]
+        xc = (
+            jnp.einsum("bkd,kd->bd", window.astype(jnp.float32), p["conv_w"])
+            + p["conv_b"]
+        ).astype(x.dtype)
+        xa = _silu(xc, self.quant_silu and policy.sigmoid_quant)[:, None, :]
+        dt, bm, cm = self._ssm_params(p, xa, policy)
+        a = -jnp.exp(p["a_log"])
+        da = jnp.exp(dt[:, 0, :, None] * a[None])
+        h = cache.ssm * da + (dt[:, 0] * xa[:, 0].astype(jnp.float32))[:, :, None] * bm[:, 0][:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, cm[:, 0])
+        y = y + xa[:, 0].astype(jnp.float32) * p["d"]
+        y = (y.astype(cdt) * _silu(z[:, 0], self.quant_silu and policy.sigmoid_quant))[:, None, :]
+        out = quant_einsum("bsd,dk->bsk", y, p["out_proj"], policy)
+        return out, MambaCache(h, window[:, 1:])

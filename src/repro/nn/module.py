@@ -1,0 +1,120 @@
+"""Minimal functional module substrate.
+
+Every layer in `repro.nn` is a frozen dataclass with two methods:
+
+    init(key)  -> params        (nested dict of jnp arrays)
+    specs()    -> spec tree     (same structure; leaves = tuple of LOGICAL
+                                 axis names, one per array dim)
+
+Logical axis names are mapped to physical mesh axes by
+``repro.distributed.sharding.logical_to_mesh`` — this is the MaxText-style
+separation that lets one model definition run on any mesh.
+
+Stacked (scanned) parameters get a leading "layers" axis; `stack_init` /
+`scan_layers` handle stacking and remat.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "truncated_normal_init",
+    "zeros_init",
+    "ones_init",
+    "uniform_init",
+    "stack_init",
+    "stack_specs",
+    "scan_layers",
+    "tree_size",
+    "count_params",
+]
+
+Params = Any  # nested dict of arrays
+Specs = Any  # nested dict of tuples
+
+
+def truncated_normal_init(key, shape, stddev: float | None = None, dtype=jnp.float32):
+    if stddev is None:  # fan-in scaling
+        stddev = 1.0 / np.sqrt(shape[0] if len(shape) > 1 else shape[-1])
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def zeros_init(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def uniform_init(key, shape, scale, dtype=jnp.float32):
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def stack_init(layer_init: Callable, n: int):
+    """init for n stacked copies of a layer: vmap over split keys."""
+
+    def init(key):
+        keys = jax.random.split(key, n)
+        return jax.vmap(layer_init)(keys)
+
+    return init
+
+
+def stack_specs(specs: Specs) -> Specs:
+    """Prepend the scan axis name to every leaf spec."""
+    return jax.tree_util.tree_map(
+        lambda s: ("layers",) + tuple(s),
+        specs,
+        is_leaf=lambda s: type(s) is tuple,
+    )
+
+
+def scan_layers(
+    body: Callable,
+    stacked_params: Params,
+    x: jax.Array,
+    *,
+    remat: str = "none",  # "none" | "full" | "dots"
+    unroll: int = 1,
+    extra_carry: Any = None,
+):
+    """x -> scan(body) over the leading 'layers' axis of stacked_params.
+
+    body(carry, layer_params) -> (carry, None). carry is (x, extra_carry) if
+    extra_carry is not None else x. Remat wraps the body — "full" recomputes
+    everything in backward (min memory), "dots" saves matmul outputs
+    (jax.checkpoint_policies.checkpoint_dots).
+    """
+    fn = body
+    if remat == "full":
+        fn = jax.checkpoint(body, prevent_cse=False)
+    elif remat == "dots":
+        fn = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            prevent_cse=False,
+        )
+    carry = x if extra_carry is None else (x, extra_carry)
+    carry, _ = jax.lax.scan(fn, carry, stacked_params, unroll=unroll)
+    return carry
+
+
+def tree_size(tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))
+
+
+count_params = tree_size
+
+
+def module(cls):
+    """decorator: frozen dataclass."""
+    return dataclasses.dataclass(frozen=True)(cls)

@@ -1,0 +1,199 @@
+"""Mixture-of-Experts with grouped capacity-based sort/scatter dispatch.
+
+Tokens are split into `dispatch_groups` groups (aligned with the data-parallel
+mesh axis, so each group's routing — top-k, sort, scatter — is device-local
+under pjit; no global sort). Per group, assignments are slotted into an
+[E, C, d] buffer via scatter, batch-GEMMed ('gecd,edh->gech'), and gathered
+back. The buffer is sharded E->"model" (expert parallelism) x group->"data";
+XLA inserts the token<->expert all-to-alls from the sharding constraints.
+
+Never materializes a [tokens, experts, capacity] dispatch tensor. Router
+softmax/top-k stays fp32 (routing is not a matmul site in the paper's
+scheme); expert weights are FloatSD8 like any other weight.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..core.policy import Policy
+from . import module as M
+from .ffn import _silu
+from .linear import quant_act, quant_einsum
+
+__all__ = ["MoE"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoE:
+    dim: int
+    hidden: int  # per-expert FFN hidden
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    dispatch_groups: int = 16  # aligned with the "data" mesh axis
+    kind: str = "swiglu"
+    quant_silu: bool = False
+    name: str = "moe"
+
+    def init(self, key):
+        kr, k1, k2, k3 = jax.random.split(key, 4)
+        e, d, h = self.n_experts, self.dim, self.hidden
+        return {
+            "router": M.truncated_normal_init(kr, (d, e), 0.02),
+            "wi": M.truncated_normal_init(k1, (e, d, h)),
+            "wg": M.truncated_normal_init(k2, (e, d, h)),
+            "wo": M.truncated_normal_init(k3, (e, h, d), 1.0 / h**0.5),
+        }
+
+    def specs(self):
+        return {
+            "router": ("embed", None),
+            "wi": ("expert", "embed", "expert_inner"),
+            "wg": ("expert", "embed", "expert_inner"),
+            "wo": ("expert", "expert_inner", "embed"),
+        }
+
+    def capacity(self, n_tokens: int) -> int:
+        c = int(self.capacity_factor * self.top_k * n_tokens / self.n_experts)
+        return max(8, min(n_tokens * self.top_k, -(-c // 8) * 8))
+
+    def _groups(self) -> int:
+        """Dispatch groups = DP shard count of the active mesh (routing is
+        then device-local); falls back to the static default."""
+        from ..distributed.sharding import active_mesh
+
+        mesh = active_mesh()
+        if mesh is None:
+            return self.dispatch_groups
+        g = 1
+        for a in ("pod", "data"):
+            if a in mesh.shape:
+                g *= mesh.shape[a]
+        return g
+
+    # ------------------------------------------------------------------
+    def _dispatch_one(self, p, xg, policy: Policy, cap: int):
+        """Route one token group. xg: [t, d] -> (y [t, d], aux)."""
+        t, d = xg.shape
+        e, k = self.n_experts, self.top_k
+
+        logits = jnp.einsum(
+            "td,de->te", xg.astype(jnp.float32), p["router"].astype(jnp.float32)
+        )
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, expert_idx = jax.lax.top_k(probs, k)  # [t, k]
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+        # slot assignment: rank within expert via stable sort
+        flat_expert = expert_idx.reshape(-1)  # [t*k]
+        order = jnp.argsort(flat_expert, stable=True)
+        sorted_e = flat_expert[order]
+        seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))
+        rank_sorted = jnp.arange(t * k) - seg_start[sorted_e]
+        rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+        keep = rank < cap  # capacity overflow dropped
+
+        slot_e = jnp.where(keep, flat_expert, e)  # e == drop bucket
+        slot_c = jnp.where(keep, rank, 0).astype(jnp.int32)
+
+        xq = quant_act(xg, policy)  # fp8 activations entering expert matmuls
+        # Dispatch buffer STORED in fp8 when the policy already quantizes
+        # activations to fp8 — the values are on the fp8 grid, so the cast
+        # is exact, and the scatter traffic + dispatch A2A bytes halve
+        # (EXPERIMENTS.md §Perf HC4 it.4).
+        bdt = policy.act_dtypes()[0] if policy.act_fwd == "fp8" else xq.dtype
+        src = jnp.repeat(xq.astype(bdt), k, axis=0)
+        # Scatter into a buffer that is REPLICATED over the model axis (the
+        # constraint below); the EP reshard afterwards is then a local slice.
+        # Without this, the SPMD partitioner emulates a cross-shard scatter
+        # with [t*k, d]-sized u32/f32 all-reduces (fwd AND bwd) — measured
+        # 2x ~35 s per step on kimi-k2 (EXPERIMENTS.md §Perf HC4 it.3).
+        buf = jnp.zeros((e + 1, cap, d), bdt)
+        buf = buf.at[slot_e, slot_c].set(src, mode="drop")
+        buf = _shard(buf, (None, None, None))  # replicated scatter output
+
+        # load-balance aux (Switch-style)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32), axis=0)
+        aux = e * jnp.sum(me * ce)
+        return buf[:e], (slot_e, slot_c, keep, gate), aux
+
+    def _combine_one(self, out_e, route, cap: int):
+        """Combine expert outputs back to token rows.
+
+        Gate-scaling happens in EXPERT-land (local under EP) and the
+        combine is a scatter-ADD into [t, d] token rows — so the SPMD
+        partitioner's cross-shard reduction moves t rows, not t*k
+        gather rows (8x for top-8; measured in EXPERIMENTS.md §Perf HC4).
+        REPRO_MOE_GATHER_COMBINE=1 restores the gather-based baseline.
+        """
+        import os
+
+        slot_e, slot_c, keep, gate = route
+        t, k = gate.shape
+        d = out_e.shape[-1]
+        e = self.n_experts
+        if os.environ.get("REPRO_MOE_GATHER_COMBINE", "0") == "1":
+            padded = jnp.concatenate(
+                [out_e, jnp.zeros((1, cap, d), out_e.dtype)], axis=0
+            )
+            gathered = padded[slot_e, slot_c]  # [t*k, d]
+            w = jnp.where(keep, gate.reshape(-1), 0.0)[:, None].astype(gathered.dtype)
+            return (gathered * w).reshape(t, k, d).sum(axis=1)
+
+        # gate weights scattered to their slots: scale rows where they live
+        gbuf = (
+            jnp.zeros((e + 1, cap), out_e.dtype)
+            .at[slot_e, slot_c]
+            .set(jnp.where(keep, gate.reshape(-1), 0.0).astype(out_e.dtype),
+                 mode="drop")
+        )
+        scaled = out_e * gbuf[:e, :, None]  # local under EP
+        # token index of every slot (empty slots -> t, dropped)
+        tok_buf = (
+            jnp.full((e + 1, cap), t, jnp.int32)
+            .at[slot_e, slot_c]
+            .set(jnp.arange(t * k, dtype=jnp.int32) // k, mode="drop")
+        )
+        y = (
+            jnp.zeros((t + 1, d), out_e.dtype)
+            .at[tok_buf[:e].reshape(-1)]
+            .add(scaled.reshape(-1, d), mode="drop")
+        )
+        return y[:t]
+
+    def apply(self, p, x, policy: Policy):
+        """x: [B, S, d] -> ([B, S, d], aux load-balance loss)."""
+        b, s, d = x.shape
+        t = b * s
+        g = math.gcd(t, self._groups())
+        tg = t // g
+        cap = self.capacity(tg)
+        xf = _shard(x.reshape(g, tg, d), ("batch", None, None))
+
+        bufs, routes, auxs = jax.vmap(
+            lambda xg: self._dispatch_one(p, xg, policy, cap)
+        )(xf)
+        bufs = _shard(bufs, ("batch", "expert", None, None))  # [g, E, C, d]
+
+        cdt = policy.cdt() or x.dtype
+        be = bufs.astype(cdt)
+        hi = quant_einsum("gecd,edh->gech", be, p["wi"], policy)
+        hg = quant_einsum("gecd,edh->gech", be, p["wg"], policy)
+        act = _silu(hg, self.quant_silu and policy.sigmoid_quant) * hi
+        out_e = quant_einsum("gech,ehd->gecd", act, p["wo"], policy)
+        out_e = _shard(out_e, ("batch", "expert", None, None))
+
+        y = jax.vmap(lambda o, r: self._combine_one(o, r, cap))(out_e, routes)
+        y = _shard(y, ("batch", None, None))
+        return y.reshape(b, s, d).astype(x.dtype), jnp.mean(auxs)
+
+
+def _shard(x, logical_axes):
+    from ..distributed.sharding import constrain
+
+    return constrain(x, logical_axes)

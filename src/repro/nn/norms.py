@@ -1,0 +1,55 @@
+"""Normalization layers (kept in fp32 — norm stats are accumulation-
+sensitive; the paper quantizes matmul operands, not norm internals)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["RMSNorm", "LayerNorm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RMSNorm:
+    dim: int
+    eps: float = 1e-6
+    name: str = "rmsnorm"
+
+    def init(self, key):
+        del key
+        return {"scale": jnp.ones((self.dim,), jnp.float32)}
+
+    def specs(self):
+        return {"scale": ("embed",)}
+
+    def apply(self, p, x):
+        dt = x.dtype
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jnp.reciprocal(jnp.sqrt(var + self.eps))
+        return (y * p["scale"]).astype(dt)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerNorm:
+    dim: int
+    eps: float = 1e-5
+    name: str = "layernorm"
+
+    def init(self, key):
+        del key
+        return {
+            "scale": jnp.ones((self.dim,), jnp.float32),
+            "bias": jnp.zeros((self.dim,), jnp.float32),
+        }
+
+    def specs(self):
+        return {"scale": ("embed",), "bias": ("embed",)}
+
+    def apply(self, p, x):
+        dt = x.dtype
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jnp.reciprocal(jnp.sqrt(var + self.eps))
+        return (y * p["scale"] + p["bias"]).astype(dt)

@@ -1,0 +1,59 @@
+"""RoPE and M-RoPE (Qwen2-VL §2.1) position embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rope_freqs", "apply_rope", "apply_mrope"]
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def _rotate(x, sin, cos):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(q, k, positions, head_dim: int, theta: float = 10000.0):
+    """q,k: [B, S, H, D]; positions: [B, S] int32."""
+    freqs = rope_freqs(head_dim, theta)  # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    q = _rotate(q.astype(jnp.float32), sin, cos).astype(q.dtype)
+    k = _rotate(k.astype(jnp.float32), sin, cos).astype(k.dtype)
+    return q, k
+
+
+def apply_mrope(
+    q,
+    k,
+    positions3,
+    head_dim: int,
+    sections=(16, 24, 24),
+    theta: float = 10000.0,
+):
+    """Multimodal RoPE: positions3 [B, S, 3] = (t, h, w) ids; frequency
+    channels are split into `sections` (in D/2 units), each section driven by
+    its own position id. For pure-text, t == h == w == arange -> reduces to
+    1-D RoPE exactly."""
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    freqs = rope_freqs(head_dim, theta)  # [D/2]
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=head_dim // 2
+    )  # [D/2] in {0,1,2}
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec_id[None, None, :], positions3.shape[:2] + (head_dim // 2,)).astype(jnp.int32),
+        axis=-1,
+    )  # [B, S, D/2]
+    ang = pos * freqs
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    q = _rotate(q.astype(jnp.float32), sin, cos).astype(q.dtype)
+    k = _rotate(k.astype(jnp.float32), sin, cos).astype(k.dtype)
+    return q, k

@@ -1,0 +1,258 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time mixing with
+data-dependent decay. The receptance gate is a *native* fit for the paper's
+two-region FloatSD8 sigmoid (DESIGN.md §5). State is O(1) per token
+([B, H, K, V]), which is why rwkv6 runs the 500k long-context shape.
+
+Faithful simplifications (documented): the token-shift lerp uses a single
+learned mix per projection (RWKV6's 5-way LoRA mix collapsed to its static
+term); decay LoRA rank 64. Both preserve shapes, state layout, and FLOP
+structure of the published block.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.policy import Policy
+from ..core.qsigmoid import qsigmoid
+from . import module as M
+from .linear import quant_act, quant_einsum
+
+__all__ = ["RWKV6TimeMix", "RWKV6ChannelMix", "RWKVState"]
+
+# Perf A/B switch (EXPERIMENTS.md §Perf hillclimb #3): chunked wkv evaluation
+# (linear-attention chunkwise form — state hops HBM once per CHUNK tokens
+# instead of once per token; intra-chunk is exact via a [L,L,K] log-decay
+# tile, MXU-friendly). 0 = per-token sequential scan (paper-era baseline).
+RWKV_CHUNK = int(os.environ.get("REPRO_RWKV_CHUNK", "16"))
+
+
+class RWKVState(NamedTuple):
+    s: jax.Array  # [B, H, K, V] wkv state
+    x_tm: jax.Array  # [B, dim] prev token (time-mix shift)
+    x_cm: jax.Array  # [B, dim] prev token (channel-mix shift)
+
+
+def _sigmoid(x, q):
+    return qsigmoid(x) if q else jax.nn.sigmoid(x)
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6TimeMix:
+    dim: int
+    head_dim: int = 64
+    decay_rank: int = 64
+    name: str = "rwkv_tmix"
+
+    @property
+    def heads(self):
+        return self.dim // self.head_dim
+
+    def init(self, key):
+        ks = jax.random.split(key, 8)
+        d, r = self.dim, self.decay_rank
+        h, hd = self.heads, self.head_dim
+        return {
+            "mix": M.uniform_init(ks[0], (5, d), 0.5) + 0.5,  # r,k,v,w,g lerps
+            "wr": M.truncated_normal_init(ks[1], (d, d)),
+            "wk": M.truncated_normal_init(ks[2], (d, d)),
+            "wv": M.truncated_normal_init(ks[3], (d, d)),
+            "wg": M.truncated_normal_init(ks[4], (d, d)),
+            "wo": M.truncated_normal_init(ks[5], (d, d)),
+            "w0": jnp.full((d,), -6.0, jnp.float32),  # decay base
+            "w_lora_a": M.truncated_normal_init(ks[6], (d, r), 0.01),
+            "w_lora_b": M.truncated_normal_init(ks[7], (r, d), 0.01),
+            "u": jnp.zeros((h, hd), jnp.float32),  # bonus
+            "ln_scale": jnp.ones((d,), jnp.float32),
+        }
+
+    def specs(self):
+        return {
+            "mix": (None, "embed"),
+            "wr": ("embed", "heads"),
+            "wk": ("embed", "heads"),
+            "wv": ("embed", "heads"),
+            "wg": ("embed", "heads"),
+            "wo": ("heads", "embed"),
+            "w0": ("heads",),
+            "w_lora_a": ("embed", None),
+            "w_lora_b": (None, "heads"),
+            "u": ("kv_heads", None),
+            "ln_scale": ("heads",),
+        }
+
+    def _proj(self, p, x, xprev, policy):
+        """token-shift lerp + the five projections. x,xprev: [B,S,d]."""
+        mix = p["mix"]
+
+        def lerp(i):
+            m = mix[i].astype(x.dtype)
+            return x * m + xprev * (1 - m)
+
+        r = quant_einsum("bsd,dk->bsk", lerp(0), p["wr"], policy)
+        k = quant_einsum("bsd,dk->bsk", lerp(1), p["wk"], policy)
+        v = quant_einsum("bsd,dk->bsk", lerp(2), p["wv"], policy)
+        wl = jnp.einsum(
+            "bsd,dr,rk->bsk",
+            lerp(3).astype(jnp.float32), p["w_lora_a"], p["w_lora_b"],
+        )
+        w = jnp.exp(-jnp.exp(p["w0"] + wl))  # data-dependent decay in (0,1)
+        g = quant_einsum("bsd,dk->bsk", lerp(4), p["wg"], policy)
+        return r, k, v, w, g
+
+    def _heads(self, t):
+        b, s, d = t.shape
+        return t.reshape(b, s, self.heads, self.head_dim)
+
+    def _wkv_sequential(self, rh, kh, vh, wh, u, s0):
+        """Per-token scan (baseline). rh/kh/vh/wh: [B,S,H,hd]."""
+
+        def step(st, t):
+            rt, kt, vt, wt = t  # [B,H,hd]
+            kv = jnp.einsum("bhk,bhv->bhkv", kt.astype(jnp.float32), vt.astype(jnp.float32))
+            y = jnp.einsum(
+                "bhk,bhkv->bhv", rt.astype(jnp.float32), st + u[None, :, :, None] * kv
+            )
+            st = st * wt[..., None] + kv
+            return st, y
+
+        sw = lambda t: jnp.swapaxes(t, 0, 1)  # [S,B,H,hd]
+        s_fin, ys = jax.lax.scan(step, s0, (sw(rh), sw(kh), sw(vh), sw(wh)))
+        return jnp.swapaxes(ys, 0, 1), s_fin
+
+    def _wkv_chunked(self, rh, kh, vh, wh, u, s0, chunk: int):
+        """Chunkwise-parallel wkv (hillclimb #3; exact — validated against
+        the sequential scan in tests/test_rwkv_chunked.py).
+
+        Recurrence  S_t = diag(w_t) S_{t-1} + k_t v_t^T,
+                    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T).
+        With b_t = cumsum(log w) inside a chunk (b_{-1}=0):
+          y_t   = (r_t . e^{b_{t-1}}) S_0                      (inter)
+                + sum_{i<t} A_ti v_i,  A_ti = sum_k r_tk k_ik e^{b_{t-1,k}-b_{i,k}}
+                + (r_t . u . k_t) v_t                          (bonus)
+          S_L   = diag(e^{b_{L-1}}) S_0 + sum_i diag(e^{b_{L-1}-b_i}) k_i v_i
+        All exponents in the inter/state terms are <= 0 (safe); the intra
+        A-tile uses the exact [L,L,K] log-difference (no clamping), which is
+        why the chunk stays small — its VMEM-scale tile is the thing a fused
+        TPU kernel keeps on-chip ('flashable' scope).
+        """
+        b, s, h, hd = rh.shape
+        nc = s // chunk
+        shp = lambda t: t.reshape(b, nc, chunk, h, hd)
+        rc = shp(rh.astype(jnp.float32))
+        kc = shp(kh.astype(jnp.float32))
+        vc = shp(vh.astype(jnp.float32))
+        logw = shp(jnp.log(jnp.maximum(wh, 1e-38)))
+
+        def chunk_body(st, t):
+            rt, kt, vt, lw = t  # [B,L,H,K]
+            with jax.named_scope("flashable"):
+                bcum = jnp.cumsum(lw, axis=1)  # b_t, inclusive  [B,L,H,K]
+                bprev = bcum - lw  # b_{t-1} (zero at t=0)
+                blast = bcum[:, -1]  # [B,H,K]
+                q_in = rt * jnp.exp(bprev)  # decayed receptance
+                y_inter = jnp.einsum("blhk,bhkv->blhv", q_in, st)
+                # intra-chunk: exact pairwise log-decay tile [B,H,L,L,K]
+                ldiff = bprev[:, :, None] - bcum[:, None, :, :, :]  # t,i
+                a = jnp.einsum(
+                    "blhk,bihk,blihk->blih",
+                    rt, kt, jnp.exp(jnp.minimum(ldiff, 0.0)),
+                )
+                mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+                a = jnp.where(mask[None, :, :, None], a, 0.0)
+                y_intra = jnp.einsum("blih,bihv->blhv", a, vt)
+                y_bonus = (
+                    jnp.sum(rt * u[None, None] * kt, -1, keepdims=True) * vt
+                )
+                # chunk-end state: decays <= 0 -> safe factorization
+                kd = kt * jnp.exp(blast[:, None] - bcum)
+                st_new = st * jnp.exp(blast)[..., None] + jnp.einsum(
+                    "blhk,blhv->bhkv", kd, vt
+                )
+            return st_new, y_inter + y_intra + y_bonus
+
+        sw = lambda t: jnp.swapaxes(t, 0, 1)  # [NC,B,L,H,hd]
+        s_fin, ys = jax.lax.scan(
+            chunk_body, s0, (sw(rc), sw(kc), sw(vc), sw(logw))
+        )
+        y = jnp.swapaxes(ys, 0, 1).reshape(b, s, h, hd)
+        return y, s_fin
+
+    def apply(self, p, x, policy: Policy, state: RWKVState | None = None):
+        """x: [B,S,d] -> ([B,S,d], final_state_s). wkv scan (chunked or
+        sequential per RWKV_CHUNK)."""
+        b, s, d = x.shape
+        h, hd = self.heads, self.head_dim
+        cdt = policy.cdt() or x.dtype
+        xq = quant_act(x, policy)
+        xprev = jnp.concatenate([jnp.zeros_like(xq[:, :1]), xq[:, :-1]], axis=1)
+        if state is not None:
+            xprev = xprev.at[:, 0].set(state.x_tm.astype(xq.dtype))
+        r, k, v, w, g = self._proj(p, xq, xprev, policy)
+        rh, kh, vh = map(self._heads, (r, k, v))
+        wh = self._heads(w.astype(jnp.float32))
+        u = p["u"]
+
+        s0 = (
+            state.s
+            if state is not None
+            else jnp.zeros((b, h, hd, hd), jnp.float32)
+        )
+        if RWKV_CHUNK and s % RWKV_CHUNK == 0 and s > 1:
+            ys, s_fin = self._wkv_chunked(rh, kh, vh, wh, u, s0, RWKV_CHUNK)
+        else:
+            ys, s_fin = self._wkv_sequential(rh, kh, vh, wh, u, s0)
+        y = ys.reshape(b, s, d)
+        # group-norm per head then output gate
+        yh = y.reshape(b, s, h, hd)
+        yh = yh * jax.lax.rsqrt(jnp.mean(yh * yh, -1, keepdims=True) + 1e-6)
+        y = (yh.reshape(b, s, d) * p["ln_scale"]).astype(cdt)
+        y = y * _sigmoid(g, policy.sigmoid_quant)  # receptance-style gate
+        out = quant_einsum("bsd,dk->bsk", y, p["wo"], policy)
+        return out, (s_fin, xq[:, -1])
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6ChannelMix:
+    dim: int
+    hidden: int
+    name: str = "rwkv_cmix"
+
+    def init(self, key):
+        ks = jax.random.split(key, 3)
+        return {
+            "mix": M.uniform_init(ks[0], (2, self.dim), 0.5) + 0.5,
+            "wk": M.truncated_normal_init(ks[1], (self.dim, self.hidden)),
+            "wv": M.truncated_normal_init(ks[2], (self.hidden, self.dim)),
+            "wr": M.truncated_normal_init(ks[0], (self.dim, self.dim)),
+        }
+
+    def specs(self):
+        return {
+            "mix": (None, "embed"),
+            "wk": ("embed", "mlp"),
+            "wv": ("mlp", "embed"),
+            "wr": ("embed", "embed2"),
+        }
+
+    def apply(self, p, x, policy: Policy, x_prev_last=None):
+        b, s, d = x.shape
+        xq = quant_act(x, policy)
+        xprev = jnp.concatenate([jnp.zeros_like(xq[:, :1]), xq[:, :-1]], axis=1)
+        if x_prev_last is not None:
+            xprev = xprev.at[:, 0].set(x_prev_last.astype(xq.dtype))
+        m = p["mix"].astype(x.dtype)
+        xk = xq * m[0] + xprev * (1 - m[0])
+        xr = xq * m[1] + xprev * (1 - m[1])
+        k = quant_einsum("bsd,dk->bsk", xk, p["wk"], policy)
+        k = jnp.square(jax.nn.relu(k))
+        kv = quant_einsum("bsh,hd->bsd", k, p["wv"], policy)
+        # the paper's technique, natively: sigmoid receptance -> FloatSD8
+        r = _sigmoid(
+            quant_einsum("bsd,dk->bsk", xr, p["wr"], policy), policy.sigmoid_quant
+        )
+        return r * kv, xq[:, -1]

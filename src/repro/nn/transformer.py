@@ -1,0 +1,233 @@
+"""Composable decoder blocks + scan-over-layers stacks.
+
+A Stack is a list of homogeneous *groups*; each group scans a period of
+sub-blocks (so Jamba's [mamba x7, attn x1] interleave with MoE every other
+layer scans over 4 groups of 8 sub-layers). Dense/MoE/SSM stacks are the
+degenerate 1-sub-block case. Remat policy applies to the scan body.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.policy import Policy
+from ..distributed.sharding import constrain
+from . import module as M
+from .attention import Attention, KVCache
+from .ffn import FFN
+from .lstm import LSTMState
+from .mamba import Mamba, MambaCache
+from .moe import MoE
+from .norms import LayerNorm, RMSNorm
+from .rwkv import RWKV6ChannelMix, RWKV6TimeMix, RWKVState
+
+__all__ = ["Block", "Stack"]
+
+
+def _norm(kind, dim):
+    return RMSNorm(dim) if kind == "rmsnorm" else LayerNorm(dim)
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    """One residual block: mixer (attn | mamba | rwkv) + mlp (ffn | moe)."""
+
+    dim: int
+    mixer: str  # "attn" | "attn_swa" | "mamba" | "rwkv"
+    mlp: str  # "ffn" | "moe" | "none"  (rwkv has its own channel mix)
+    attn: Attention | None = None
+    mamba_mod: Mamba | None = None
+    rwkv_mod: RWKV6TimeMix | None = None
+    ffn_mod: FFN | None = None
+    moe_mod: MoE | None = None
+    cmix_mod: RWKV6ChannelMix | None = None
+    norm: str = "rmsnorm"
+
+    def init(self, key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {"norm1": _norm(self.norm, self.dim).init(k1)}
+        if self.mixer in ("attn", "attn_swa"):
+            p["mixer"] = self.attn.init(k2)
+        elif self.mixer == "mamba":
+            p["mixer"] = self.mamba_mod.init(k2)
+        else:
+            p["mixer"] = self.rwkv_mod.init(k2)
+        if self.mlp != "none":
+            p["norm2"] = _norm(self.norm, self.dim).init(k3)
+            p["mlp"] = (self.moe_mod if self.mlp == "moe" else self.ffn_mod).init(k4)
+        elif self.mixer == "rwkv":
+            p["norm2"] = _norm(self.norm, self.dim).init(k3)
+            p["mlp"] = self.cmix_mod.init(k4)
+        return p
+
+    def specs(self):
+        s = {"norm1": _norm(self.norm, self.dim).specs()}
+        if self.mixer in ("attn", "attn_swa"):
+            s["mixer"] = self.attn.specs()
+        elif self.mixer == "mamba":
+            s["mixer"] = self.mamba_mod.specs()
+        else:
+            s["mixer"] = self.rwkv_mod.specs()
+        if self.mlp != "none":
+            s["norm2"] = _norm(self.norm, self.dim).specs()
+            s["mlp"] = (self.moe_mod if self.mlp == "moe" else self.ffn_mod).specs()
+        elif self.mixer == "rwkv":
+            s["norm2"] = _norm(self.norm, self.dim).specs()
+            s["mlp"] = self.cmix_mod.specs()
+        return s
+
+    # ----- full-sequence path (train / prefill) --------------------------
+    def apply(self, p, x, policy: Policy, positions=None):
+        n1 = _norm(self.norm, self.dim)
+        aux = jnp.float32(0.0)
+        h = n1.apply(p["norm1"], x)
+        if self.mixer in ("attn", "attn_swa"):
+            mix = self.attn.apply(p["mixer"], h, policy, positions=positions)
+        elif self.mixer == "mamba":
+            mix = self.mamba_mod.apply(p["mixer"], h, policy)
+        else:
+            mix, _ = self.rwkv_mod.apply(p["mixer"], h, policy)
+        x = x + mix
+        x = constrain(x, ("batch", "seq", "act_embed"))
+        if self.mlp != "none":
+            h2 = _norm(self.norm, self.dim).apply(p["norm2"], x)
+            if self.mlp == "moe":
+                y, aux = self.moe_mod.apply(p["mlp"], h2, policy)
+            else:
+                y = self.ffn_mod.apply(p["mlp"], h2, policy)
+            x = x + y
+        elif self.mixer == "rwkv":
+            h2 = _norm(self.norm, self.dim).apply(p["norm2"], x)
+            y, _ = self.cmix_mod.apply(p["mlp"], h2, policy)
+            x = x + y
+        x = constrain(x, ("batch", "seq", "act_embed"))
+        return x, aux
+
+    # ----- cache structure for decode ------------------------------------
+    def init_cache(self, batch, s_max, dtype=jnp.bfloat16):
+        if self.mixer in ("attn", "attn_swa"):
+            s_eff = min(s_max, self.attn.window or s_max)
+            return KVCache.init(batch, s_eff, self.attn.kv_heads, self.attn.hd, dtype)
+        if self.mixer == "mamba":
+            m = self.mamba_mod
+            return MambaCache(
+                jnp.zeros((batch, m.d_inner, m.d_state), jnp.float32),
+                jnp.zeros((batch, m.d_conv - 1, m.d_inner), dtype),
+            )
+        r = self.rwkv_mod
+        return RWKVState(
+            jnp.zeros((batch, r.heads, r.head_dim, r.head_dim), jnp.float32),
+            jnp.zeros((batch, self.dim), dtype),
+            jnp.zeros((batch, self.dim), dtype),
+        )
+
+    def cache_specs(self):
+        """Logical-axis tuples mirroring init_cache (for decode sharding)."""
+        if self.mixer in ("attn", "attn_swa"):
+            return KVCache(
+                ("batch", "seq", "act_kv_heads", None),
+                ("batch", "seq", "act_kv_heads", None),
+                (),
+            )
+        if self.mixer == "mamba":
+            return MambaCache(("batch", "act_mlp", None), ("batch", None, "act_mlp"))
+        return RWKVState(
+            ("batch", "act_heads", None, None), ("batch", None), ("batch", None)
+        )
+
+    def decode(self, p, x, cache, policy: Policy, positions3=None):
+        n1 = _norm(self.norm, self.dim)
+        h = n1.apply(p["norm1"], x)
+        if self.mixer in ("attn", "attn_swa"):
+            mix, cache = self.attn.decode(p["mixer"], h, cache, policy, positions3)
+        elif self.mixer == "mamba":
+            mix, cache = self.mamba_mod.decode(p["mixer"], h, cache, policy)
+        else:
+            st = RWKVState(cache.s, cache.x_tm, cache.x_cm)
+            mix, (s_new, x_tm) = self.rwkv_mod.apply(
+                p["mixer"], h, policy, state=st
+            )
+            cache = RWKVState(s_new, x_tm, cache.x_cm)
+        x = x + mix
+        if self.mlp != "none":
+            h2 = _norm(self.norm, self.dim).apply(p["norm2"], x)
+            if self.mlp == "moe":
+                y, _ = self.moe_mod.apply(p["mlp"], h2, policy)
+            else:
+                y = self.ffn_mod.apply(p["mlp"], h2, policy)
+            x = x + y
+        elif self.mixer == "rwkv":
+            h2 = _norm(self.norm, self.dim).apply(p["norm2"], x)
+            y, x_cm = self.cmix_mod.apply(p["mlp"], h2, policy, cache.x_cm)
+            cache = RWKVState(cache.s, cache.x_tm, x_cm)
+            x = x + y
+        return x, cache
+
+
+@dataclasses.dataclass(frozen=True)
+class Stack:
+    """n_groups x (period sub-blocks), scanned over groups."""
+
+    blocks: tuple  # period sub-block definitions (len == period)
+    n_groups: int
+    remat: str = "dots"
+
+    def init(self, key):
+        def group_init(k):
+            ks = jax.random.split(k, len(self.blocks))
+            return {f"b{i}": b.init(ks[i]) for i, b in enumerate(self.blocks)}
+
+        return M.stack_init(group_init, self.n_groups)(key)
+
+    def specs(self):
+        s = {f"b{i}": b.specs() for i, b in enumerate(self.blocks)}
+        return M.stack_specs(s)
+
+    def apply(self, p, x, policy: Policy, positions=None):
+        def body(carry, gp):
+            x, aux = carry
+            for i, b in enumerate(self.blocks):
+                x, a = b.apply(gp[f"b{i}"], x, policy, positions=positions)
+                aux = aux + a
+            return (x, aux), None
+
+        fn = body
+        if self.remat == "full":
+            fn = jax.checkpoint(body, prevent_cse=False)
+        elif self.remat == "dots":
+            fn = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+                prevent_cse=False,
+            )
+        (x, aux), _ = jax.lax.scan(fn, (x, jnp.float32(0.0)), p)
+        return x, aux
+
+    def init_cache(self, batch, s_max, dtype=jnp.bfloat16):
+        def one_group(_):
+            return {
+                f"b{i}": b.init_cache(batch, s_max, dtype)
+                for i, b in enumerate(self.blocks)
+            }
+
+        caches = [one_group(g) for g in range(self.n_groups)]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
+
+    def cache_specs(self):
+        one = {f"b{i}": b.cache_specs() for i, b in enumerate(self.blocks)}
+        return M.stack_specs(one)
+
+    def decode(self, p, x, caches, policy: Policy, positions3=None):
+        def body(x, inp):
+            gp, gc = inp
+            new_c = {}
+            for i, b in enumerate(self.blocks):
+                x, c = b.decode(gp[f"b{i}"], x, gc[f"b{i}"], policy, positions3)
+                new_c[f"b{i}"] = c
+            return x, new_c
+
+        x, new_caches = jax.lax.scan(body, x, (p, caches))
+        return x, new_caches

@@ -1,0 +1,10 @@
+"""Optimizers with FP16 master copies + FP8 gradient pipeline."""
+from . import grad_compress, optimizers, train_state
+from .optimizers import Optimizer, adafactor, adam, get_optimizer, sgd
+from .train_state import TrainState, init_state, make_train_step
+
+__all__ = [
+    "grad_compress", "optimizers", "train_state",
+    "Optimizer", "adafactor", "adam", "get_optimizer", "sgd",
+    "TrainState", "init_state", "make_train_step",
+]

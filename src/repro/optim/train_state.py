@@ -1,0 +1,89 @@
+"""TrainState: the paper's full update pipeline as one jittable step.
+
+  loss*1024 -> backward (acts/act-grads FP8 inside the model) ->
+  weight grads FP8 (grad_quant) -> unscale f32, finite check ->
+  optimizer update -> FP16 master add -> (re)quantize-at-use next step.
+
+Skip-on-nonfinite keeps dynamic loss scaling sound; with static scaling
+(paper) a nonfinite step is skipped the same way (equivalent to PyTorch's
+GradScaler semantics the baselines use).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import loss_scaling as ls
+from ..core.fp8 import grad_quant
+from ..core.policy import Policy
+from .optimizers import Optimizer
+
+__all__ = ["TrainState", "make_train_step"]
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any  # master copy (policy.master_dtype)
+    opt_state: Any
+    scale: ls.LossScaleState
+
+
+def init_state(params, opt: Optimizer, policy: Policy, dynamic_scale=False) -> TrainState:
+    mdt = policy.mdt()
+    master = jax.tree_util.tree_map(lambda p: p.astype(mdt), params)
+    st = (
+        ls.dynamic_init() if dynamic_scale else ls.static_init(policy.loss_scale)
+    )
+    return TrainState(jnp.zeros((), jnp.int32), master, opt.init(master), st)
+
+
+def make_train_step(loss_fn, opt: Optimizer, policy: Policy, lr: float = 1e-3,
+                    grad_clip: float | None = 1.0):
+    """loss_fn(params, batch, policy) -> scalar. Returns jittable step fn."""
+
+    def step(state: TrainState, batch):
+        def scaled_loss(p):
+            l = loss_fn(p, batch, policy)
+            return ls.scale_loss(l.astype(jnp.float32), state.scale), l
+
+        grads, raw_loss = jax.grad(scaled_loss, has_aux=True)(state.params)
+        if policy.grad_quant == "fp8":
+            # paper §III-D: ALL gradients FP8 (scaled into fp8 range by ls)
+            grads = grad_quant(grads)
+        grads, finite = ls.unscale_and_check(grads, state.scale)
+        if grad_clip is not None:
+            gnorm = jnp.sqrt(
+                sum(
+                    jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree_util.tree_leaves(grads)
+                )
+            )
+            coef = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * coef.astype(g.dtype), grads)
+
+        updates, new_opt = opt.update(grads, state.opt_state, state.params, lr)
+
+        def apply(p, u):
+            # FP16 master + update addition (f32 add, stored back at mdt)
+            return (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(apply, state.params, updates)
+        # skip-on-nonfinite: keep old state when grads overflowed
+        new_params = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(finite, n, o), new_params, state.params
+        )
+        new_opt = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(finite, n, o) if isinstance(n, jax.Array) and n.shape == getattr(o, "shape", None) else n,
+            new_opt, state.opt_state,
+        )
+        new_scale = ls.adjust(state.scale, finite)
+        metrics = {
+            "loss": raw_loss,
+            "grads_finite": finite,
+            "loss_scale": new_scale.scale,
+        }
+        return TrainState(state.step + 1, new_params, new_opt, new_scale), metrics
+
+    return step

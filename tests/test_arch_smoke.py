@@ -1,0 +1,101 @@
+"""Per-assigned-architecture smoke tests (deliverable f).
+
+Each arch instantiates its REDUCED same-family config (ArchConfig.reduced():
+small width, few experts, tiny vocab, stub frontends) and runs one
+forward/train step and one decode step on CPU, asserting output shapes and
+finiteness. The FULL configs are exercised only via the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.core.policy import get_policy
+from repro.models import build
+from repro.optim import adam
+from repro.optim.train_state import init_state, make_train_step
+
+POLICY = get_policy("floatsd8_table6")
+B, S = 2, 16
+
+
+def _batch(cfg, rng):
+    b = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+    }
+    if cfg.family == "audio":
+        b["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.enc_seq, cfg.d_model)), jnp.float32
+        )
+    if cfg.family == "vlm":
+        b["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_patches, cfg.d_model)), jnp.float32
+        )
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_config_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build(cfg)
+    rng = np.random.default_rng(hash(arch) % 2**31)
+    batch = _batch(cfg, rng)
+
+    params = model.init(jax.random.PRNGKey(0))
+    # forward: loss is finite
+    loss = model.loss(params, batch, POLICY)
+    assert jnp.isfinite(loss), (arch, float(loss))
+
+    # one optimizer step under the paper's Table-VI policy
+    opt = adam()
+    state = init_state(params, opt, POLICY)
+    step = jax.jit(make_train_step(model.loss, opt, POLICY, lr=1e-3))
+    state, metrics = step(state, batch)
+    assert bool(metrics["grads_finite"]), arch
+    assert jnp.isfinite(metrics["loss"]), arch
+    for leaf in jax.tree_util.tree_leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32)))), arch
+
+
+@pytest.mark.parametrize(
+    "arch", [a for a in ARCH_IDS if get_config(a).family != "audio"]
+)
+def test_reduced_config_decode_step(arch):
+    """One serve_step: new token against a small cache; shapes + finite."""
+    cfg = get_config(arch).reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    if cfg.family == "lstm":
+        caches = model.init_cache(B, POLICY)
+    else:
+        caches = model.init_cache(B, 32)
+    tokens = jnp.zeros((B, 1), jnp.int32)
+    logits, new_caches = model.decode_step(params, tokens, caches, POLICY)
+    vpad = cfg.vocab if cfg.family == "lstm" else cfg.vocab_padded()
+    assert logits.shape == (B, 1, vpad), (arch, logits.shape)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), arch
+    # cache structure is preserved
+    assert jax.tree_util.tree_structure(caches) == jax.tree_util.tree_structure(
+        new_caches
+    )
+
+
+def test_whisper_decode_with_encoder_context():
+    """Whisper's decode: encoder once -> cross-KV prefill -> token steps."""
+    cfg = get_config("whisper_large_v3").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(0)
+    frames = jnp.asarray(
+        rng.standard_normal((B, cfg.enc_seq, cfg.d_model)), jnp.float32
+    )
+    enc = model.encode(params, frames, POLICY)
+    assert enc.shape == (B, cfg.enc_seq, cfg.d_model)
+    caches = model.init_cache(B, 32)
+    caches = model.prefill_cross(params, frames, caches, POLICY)
+    logits, _ = model.decode_step(
+        params, jnp.zeros((B, 1), jnp.int32), caches, POLICY
+    )
+    assert logits.shape[0] == B and bool(jnp.all(jnp.isfinite(logits)))

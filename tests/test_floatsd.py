@@ -1,0 +1,144 @@
+"""Unit + property tests for the FloatSD8 format (paper §III-A, Table I)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import floatsd
+
+jax.config.update("jax_enable_x64", False)
+
+
+def test_mantissa_set_has_31_distinct_values():
+    # Paper: "out of the 35 combinations, only 31 distinct combinations exist"
+    assert floatsd.MANTISSA_VALUES.size == 31
+    assert floatsd.MANTISSA_VALUES.min() == -4.5
+    assert floatsd.MANTISSA_VALUES.max() == 4.5
+    # symmetric set
+    np.testing.assert_allclose(
+        floatsd.MANTISSA_VALUES, -floatsd.MANTISSA_VALUES[::-1]
+    )
+
+
+def test_msg_values_match_table1():
+    # Table I: 3-digit group values are exactly {+-4, +-2, +-1, 0}
+    msgs = sorted({m for (m, s) in floatsd.MANTISSA_TO_SD.values()})
+    assert msgs == [-4, -2, -1, 0, 1, 2, 4]
+    sgs = sorted({s for (m, s) in floatsd.MANTISSA_TO_SD.values()})
+    assert sgs == [-2, -1, 0, 1, 2]
+
+
+def test_at_most_two_partial_products():
+    # the entire hardware claim: <= 2 non-zero SD digits per weight
+    for v, (m, s) in floatsd.MANTISSA_TO_SD.items():
+        assert (m != 0) + (s != 0) <= 2
+        assert m + s / 4.0 == v
+
+
+def test_exact_values_roundtrip():
+    # every representable value must quantize to itself
+    for bias in (-10, -7, 0, 3):
+        grid = floatsd.floatsd8_value_grid(bias)
+        x = jnp.asarray(np.concatenate([grid, -grid]), jnp.float32)
+        q = floatsd.quantize(x, bias=bias).values
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(x))
+
+
+def test_encode_decode_roundtrip():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(512,)).astype(np.float32))
+    codes, bias = floatsd.encode(x)
+    back = floatsd.decode(codes, bias)
+    q = floatsd.quantize(x, bias=bias).values
+    np.testing.assert_allclose(np.asarray(back), np.asarray(q), rtol=0, atol=0)
+    assert codes.dtype == jnp.uint8
+
+
+def test_quantize_is_nearest_value():
+    # brute-force nearest against the full grid
+    rng = np.random.default_rng(1)
+    x = rng.uniform(-6, 6, size=(4096,)).astype(np.float32)
+    bias = 0
+    grid = floatsd.floatsd8_value_grid(bias)
+    full = np.concatenate([-grid[::-1], grid])
+    q = np.asarray(floatsd.quantize(jnp.asarray(x), bias=bias).values)
+    dist_q = np.abs(x - q)
+    dist_best = np.min(np.abs(x[:, None] - full[None, :]), axis=1)
+    np.testing.assert_allclose(dist_q, dist_best, rtol=1e-6, atol=1e-7)
+
+
+def test_hole_in_grid_handled():
+    # 3.0 is exactly representable as 1.5 * 2^1 even though the bias-0
+    # mantissa grid jumps 2.5 -> 3.5
+    q = floatsd.quantize(jnp.asarray([3.0, -3.0]), bias=0).values
+    np.testing.assert_array_equal(np.asarray(q), [3.0, -3.0])
+
+
+def test_auto_bias_covers_tensor():
+    rng = np.random.default_rng(2)
+    for scale in (1e-3, 1.0, 37.0):
+        x = jnp.asarray(rng.normal(scale=scale, size=(1024,)).astype(np.float32))
+        q, bias = floatsd.quantize(x)
+        amax = float(jnp.max(jnp.abs(x)))
+        # top of range covers max|x| and is tight (within one exponent step)
+        top = 4.5 * 2.0 ** (7 + int(bias))
+        assert top >= amax * 0.999
+        assert top <= amax * 2 * 1.001
+        # relative error bounded: worst-case mantissa gap is 1.0 around 3.0
+        rel = np.abs(np.asarray(q) - np.asarray(x)) / (np.abs(np.asarray(x)) + 1e-30)
+        big = np.abs(np.asarray(x)) > 2.0 ** (int(bias) + 2)
+        assert rel[big].max() < 0.25
+
+
+def test_ste_gradient_is_identity():
+    x = jnp.asarray([0.3, -1.7, 2.2], jnp.float32)
+    g = jax.grad(lambda v: jnp.sum(floatsd.quantize_ste(v, jnp.int32(-3)) * 3.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0)
+
+
+def test_zero_and_saturation():
+    q = floatsd.quantize(jnp.asarray([0.0, 1e9, -1e9]), bias=0).values
+    np.testing.assert_array_equal(np.asarray(q), [0.0, 576.0, -576.0])
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.lists(
+        st.floats(-1e4, 1e4, allow_nan=False, width=32), min_size=1, max_size=64
+    ),
+    st.integers(-12, 4),
+)
+def test_property_quantization_invariants(xs, bias):
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    q = np.asarray(floatsd.quantize(x, bias=bias).values)
+    grid = floatsd.floatsd8_value_grid(bias)
+    full = np.concatenate([-grid[::-1], grid])
+    # 1) idempotent  2) sign-preserving  3) output on the representable grid
+    q2 = np.asarray(floatsd.quantize(jnp.asarray(q), bias=bias).values)
+    np.testing.assert_array_equal(q, q2)
+    assert np.all(np.sign(q) * np.sign(np.asarray(x)) >= 0)
+    for v in q:
+        assert np.min(np.abs(full - v)) < 1e-6 * max(1.0, abs(v))
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_property_encode_decode_consistent(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(scale=rng.uniform(0.01, 10), size=(64,)), jnp.float32)
+    codes, bias = floatsd.encode(x)
+    np.testing.assert_array_equal(
+        np.asarray(floatsd.decode(codes, bias)),
+        np.asarray(floatsd.quantize(x, bias=bias).values),
+    )
+
+
+def test_partial_product_count_le_2():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    codes, _ = floatsd.encode(x)
+    pp = np.asarray(floatsd.partial_product_count(codes))
+    assert pp.max() <= 2
+    assert pp.min() >= 0

@@ -1,0 +1,51 @@
+"""Hoisted weight-quantization (perf hillclimb #2) must be numerically
+identical to the naive quantize-inside-step path: same forward outputs,
+same gradients to the master weights (STE)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import get_policy
+from repro.nn import lstm as lstm_mod
+from repro.nn.lstm import LSTMLayer
+
+
+def _run(hoist: bool, policy_name="floatsd8_table6"):
+    old = lstm_mod.HOIST_WQUANT
+    lstm_mod.HOIST_WQUANT = hoist
+    try:
+        policy = get_policy(policy_name)
+        layer = LSTMLayer(12, 16)
+        p = layer.init(jax.random.PRNGKey(0))
+        xs = jax.random.normal(jax.random.PRNGKey(1), (4, 9, 12))
+
+        def loss(p):
+            h, _ = layer.apply(p, xs, policy)
+            return jnp.sum(h.astype(jnp.float32) ** 2)
+
+        val, grads = jax.value_and_grad(loss)(p)
+        h, fin = layer.apply(p, xs, policy)
+        return val, grads, h, fin
+    finally:
+        lstm_mod.HOIST_WQUANT = old
+
+
+def test_hoist_matches_naive_forward_and_grads():
+    v0, g0, h0, f0 = _run(False)
+    v1, g1, h1, f1 = _run(True)
+    np.testing.assert_allclose(np.asarray(h0), np.asarray(h1), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(float(v0), float(v1), rtol=1e-6)
+    for k in g0:
+        np.testing.assert_allclose(
+            np.asarray(g0[k], np.float32), np.asarray(g1[k], np.float32),
+            rtol=1e-5, atol=1e-6, err_msg=k,
+        )
+
+
+def test_hoist_matches_fp32_policy_too():
+    v0, g0, h0, _ = _run(False, "fp32")
+    v1, g1, h1, _ = _run(True, "fp32")
+    np.testing.assert_allclose(np.asarray(h0), np.asarray(h1), rtol=1e-6)
+    for k in g0:
+        np.testing.assert_allclose(np.asarray(g0[k]), np.asarray(g1[k]),
+                                   rtol=1e-5, atol=1e-6, err_msg=k)

@@ -1,0 +1,68 @@
+"""Pallas chunked-wkv kernel (interpret mode) vs the per-token recurrence."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.rwkv_wkv.kernel import wkv_pallas
+from repro.kernels.rwkv_wkv.ops import wkv
+from repro.kernels.rwkv_wkv.ref import wkv_ref
+
+
+def _mk(bh, s, k, v=None, w0=-2.0, seed=0):
+    rng = np.random.default_rng(seed + bh + s + k)
+    v = v or k
+    r = jnp.asarray(rng.standard_normal((bh, s, k)), jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((bh, s, k)), jnp.float32)
+    vv = jnp.asarray(rng.standard_normal((bh, s, v)), jnp.float32)
+    w = jnp.asarray(np.exp(-np.exp(rng.standard_normal((bh, s, k)) * 0.3 + w0)),
+                    jnp.float32)
+    u = jnp.asarray(rng.standard_normal((bh, k)) * 0.1, jnp.float32)
+    return r, kk, vv, w, u
+
+
+@pytest.mark.parametrize("bh,s,k", [(2, 64, 32), (4, 128, 64), (1, 32, 128)])
+@pytest.mark.parametrize("w0", [-6.0, -2.0, 1.0])
+def test_kernel_matches_recurrence(bh, s, k, w0):
+    r, kk, vv, w, u = _mk(bh, s, k, w0=w0)
+    got = wkv(r, kk, vv, w, u, chunk=16, interpret=True)
+    want = wkv_ref(r, kk, vv, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32])
+def test_kernel_chunk_independence(chunk):
+    r, kk, vv, w, u = _mk(1, 64, 32)
+    a = wkv_pallas(r, kk, vv, w, u, chunk=chunk, interpret=True)
+    b = wkv_ref(r, kk, vv, w, u)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_kernel_fallback_indivisible():
+    r, kk, vv, w, u = _mk(2, 50, 32)
+    got = wkv(r, kk, vv, w, u, chunk=16, interpret=True)
+    want = wkv_ref(r, kk, vv, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_agrees_with_model_chunked_path():
+    """kernel == nn/rwkv.py's XLA chunked path (same math, per head)."""
+    from repro.nn.rwkv import RWKV6TimeMix
+
+    tm = RWKV6TimeMix(dim=64, head_dim=32)  # 2 heads
+    bh, s, hd = 2 * 2, 32, 32  # B=2 x H=2 flattened
+    r, kk, vv, w, u = _mk(bh, s, hd, seed=3)
+    got = wkv(r, kk, vv, w, u, chunk=16, interpret=True)
+
+    b, h = 2, 2
+    rs = r.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    ks = kk.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    vs = vv.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    ws = w.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    us = u.reshape(b, h, hd)[0]  # heads share per-head u rows in this test
+    ys, _ = tm._wkv_chunked(rs, ks, vs, ws, us, jnp.zeros((b, h, hd, hd)), 16)
+    want = ys.transpose(0, 2, 1, 3).reshape(bh, s, hd)
+    # u differs per (b,h) row in `got` vs shared in model path; rebuild got
+    got2 = wkv(r, kk, vv, w, jnp.tile(us, (b, 1)), chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
