@@ -1,0 +1,108 @@
+"""Serving-path benchmark: chunked prefill vs one-token-per-step, packed
+FloatSD8 codes vs dense f32 weights.
+
+Runs the same synthetic request set through four ServeEngine configs on the
+reduced WikiText-2 LM and reports batched steps, prefill/decode split,
+throughput, slot utilization, and TTFT. ``chunk=1`` reproduces the seed
+launch/serve.py loop exactly (a length-L prompt costs L steps); ``chunk=C``
+costs ceil(L/C) prefill steps — the step-count reduction is the
+device-independent win (on accelerators, batched steps ~ latency).
+
+    PYTHONPATH=src python benchmarks/bench_serving.py --requests 32 --batch 8
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core.policy import get_policy
+from repro.models.lstm_models import WikiText2LM
+from repro.serving import ServeEngine, synthetic_prompts
+
+
+def run_config(model, params, policy, prompts, *, lanes, chunk, packed, max_new):
+    engine = ServeEngine(
+        model, params, policy, lanes=lanes, chunk=chunk, packed=packed
+    )
+    reqs = engine.submit_all([p.copy() for p in prompts], max_new=max_new)
+    metrics = engine.run()
+    outs = [tuple(r.out) for r in sorted(reqs, key=lambda r: r.rid)]
+    return metrics.report(), outs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--vocab", type=int, default=4000)
+    ap.add_argument("--d-model", type=int, default=192)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    model = WikiText2LM(
+        vocab=args.vocab, emb=args.d_model, hidden=args.d_model, n_layers=2
+    )
+    policy = get_policy("floatsd8_table6")
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    prompts = synthetic_prompts(args.requests, args.vocab, rng)
+
+    configs = [
+        ("seed loop   (chunk=1, dense f32)", dict(chunk=1, packed=False)),
+        ("chunked     (chunk=%d, dense f32)" % args.chunk,
+         dict(chunk=args.chunk, packed=False)),
+        ("seed loop   (chunk=1, packed u8)", dict(chunk=1, packed=True)),
+        ("chunked     (chunk=%d, packed u8)" % args.chunk,
+         dict(chunk=args.chunk, packed=True)),
+    ]
+    rows, outs = [], {}
+    for name, kw in configs:
+        rep, out = run_config(
+            model, params, policy, prompts,
+            lanes=args.batch, max_new=args.max_new, **kw,
+        )
+        rows.append((name, rep))
+        outs[name] = out
+
+    hdr = (f"{'config':36} {'steps':>6} {'prefill':>8} {'decode':>7} "
+           f"{'gen tok/s':>10} {'total tok/s':>12} {'slot util':>10} "
+           f"{'ttft ms':>8}")
+    print(hdr)
+    print("-" * len(hdr))
+    for name, r in rows:
+        print(
+            f"{name:36} {r['steps']:>6} {r['prefill_steps']:>8} "
+            f"{r['decode_steps']:>7} {r['gen_tok_per_s']:>10.1f} "
+            f"{r['total_tok_per_s']:>12.1f} {r['slot_util']:>10.0%} "
+            f"{r['ttft_mean_s']*1e3:>8.0f}"
+        )
+
+    # Token agreement is informational: greedy argmax on an *untrained*
+    # model has near-uniform logits, and XLA lowers the S=1 and S=chunk
+    # einsums with different reduction orders (1-ulp f32 noise), which can
+    # flip near-ties. The rigorous chunked-prefill equivalence (identical
+    # recurrent states / logits, identical tokens on a trained-size model)
+    # is asserted in tests/test_serving.py.
+    ref = outs[configs[0][0]]
+    n = len(ref)
+    for name, _ in configs[1:]:
+        agree = sum(a == b for a, b in zip(ref, outs[name])) / n
+        print(f"token agreement vs seed: {name}: {agree:.0%}")
+
+    seed_steps = rows[0][1]["steps"]
+    chunk_steps = rows[1][1]["steps"]
+    verdict = "PASS" if chunk_steps < seed_steps else "FAIL"
+    print(
+        f"chunked prefill batched steps: {chunk_steps} vs seed {seed_steps} "
+        f"({1 - chunk_steps / seed_steps:.0%} fewer) -> {verdict}"
+    )
+    if verdict == "FAIL":
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

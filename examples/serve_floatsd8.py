@@ -1,24 +1,23 @@
-"""Serving demo: FloatSD8 deployment format + batched generation.
+"""Serving demo: FloatSD8 deployment format + continuous batching.
 
-Shows the inference-accelerator story of paper §V: weights stored as 1-byte
-FloatSD8 codes (7.66x-smaller MAC on the ASIC; 2x HBM traffic reduction on
-TPU), decode-at-use, batched multi-request generation through the LSTM LM's
-recurrent cache.
+Shows the inference-accelerator story of paper §V end-to-end: a quick
+pretrain, then the model is packed to 1-byte FloatSD8 codes and served
+through ``repro.serving.ServeEngine`` — continuous batching, chunked
+prefill, decode-at-use from uint8 codes (the PE's VMEM decode).
 
     PYTHONPATH=src python examples/serve_floatsd8.py --requests 8 --batch 4
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import floatsd
 from repro.core.policy import get_policy
 from repro.models.task_zoo import make_task
+from repro.serving import ServeEngine, synthetic_prompts
 
 
 def main():
@@ -26,6 +25,7 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--steps-pretrain", type=int, default=40)
     a = ap.parse_args()
 
@@ -43,49 +43,24 @@ def main():
         state, _ = step_fn(state, batch)
     params = state.params
 
-    # --- deployment format: every weight matrix -> uint8 codes + bias -------
-    leaves = jax.tree_util.tree_leaves(params)
-    n_bytes_fp32 = sum(l.size * 4 for l in leaves)
-    packed = jax.tree_util.tree_map(
-        lambda w: floatsd.encode(w) if w.ndim >= 2 else w, params,
+    # --- deployment format + serving loop, all inside the engine ----------
+    engine = ServeEngine(
+        model, params, policy, lanes=a.batch, chunk=a.chunk, packed=True
     )
-    n_bytes_fsd8 = sum(
-        (l.size if l.dtype == jnp.uint8 else l.size * l.dtype.itemsize)
-        for l in jax.tree_util.tree_leaves(packed)
+    s = engine.store
+    print(
+        f"weights: {s.dense_nbytes/2**20:.1f} MiB dense -> "
+        f"{s.packed_nbytes/2**20:.1f} MiB FloatSD8 "
+        f"({s.compression:.2f}x smaller)"
     )
-    print(f"weights: {n_bytes_fp32/2**20:.1f} MiB fp32 -> "
-          f"{n_bytes_fsd8/2**20:.1f} MiB FloatSD8 "
-          f"({n_bytes_fp32/n_bytes_fsd8:.2f}x smaller)")
-
-    # decode-at-use (the PE's VMEM decode): unpack back to dense for serving
-    serving_params = jax.tree_util.tree_map(
-        lambda w: floatsd.decode(*w, dtype=jnp.float32) if isinstance(w, tuple) else w,
-        packed, is_leaf=lambda x: isinstance(x, tuple),
-    )
-
-    # --- batched generation --------------------------------------------------
-    B = a.batch
-    caches = model.init_cache(B, policy)
-
-    @jax.jit
-    def decode(params, toks, caches):
-        return model.decode_step(params, toks, caches, policy)
 
     rng = np.random.default_rng(0)
-    cur = jnp.asarray(rng.integers(0, model.vocab, (B, 1)), jnp.int32)
-    outs = [[] for _ in range(B)]
-    t0 = time.time()
-    for _ in range(a.max_new):
-        logits, caches = decode(serving_params, cur, caches)
-        nxt = jnp.argmax(logits[:, -1, :], -1)
-        for i in range(B):
-            outs[i].append(int(nxt[i]))
-        cur = nxt[:, None].astype(jnp.int32)
-    dt = time.time() - t0
-    print(f"generated {B}x{a.max_new} tokens in {dt:.1f}s "
-          f"({B*a.max_new/dt:.1f} tok/s)")
-    for i, o in enumerate(outs[:4]):
-        print(f"  lane {i}: {o[:12]}...")
+    prompts = synthetic_prompts(a.requests, model.vocab, rng, lo=4, hi=16)
+    reqs = engine.submit_all(prompts, max_new=a.max_new)
+    metrics = engine.run()
+    print(metrics.format())
+    for r in sorted(reqs, key=lambda r: r.rid)[:4]:
+        print(f"  request {r.rid} (prompt {r.prompt_len} tok): {r.out[:12]}...")
     print("serve demo OK")
 
 

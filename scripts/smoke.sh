@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 verification + a small serving smoke on the reduced config.
+# Usage: scripts/smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== serving smoke (8 requests, packed FloatSD8 weights) =="
+python -m repro.launch.serve --requests 8 --batch 4 --max-new 8
+
+echo "smoke OK"

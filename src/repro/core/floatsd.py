@@ -125,6 +125,33 @@ class QuantResult(NamedTuple):
     bias: jax.Array  # scalar int32 per-tensor exponent bias
 
 
+def exp2i(k: jax.Array) -> jax.Array:
+    """Exact 2^k as f32 for integer k in the normal range [-126, 127].
+
+    jnp.exp2 lowers to exp(k*ln2) on some backends and is ~1 ulp off even
+    for integer arguments, which puts quantize() outputs slightly OFF the
+    representable grid and breaks the serving weight-store invariant
+    decode(encode(w)) == quantize(w).values. Building the float from its
+    exponent bits is exact by construction. k is clamped to the normal
+    range: below -126 the bit pattern would wrap into the sign bit (a
+    fit_bias of ~-135 is reachable for tensors with max|x| ~1e-38), so tiny
+    tensors saturate to 2^-126 instead of producing garbage scales.
+    """
+    k = jnp.clip(jnp.asarray(k, jnp.int32), -126, 127)
+    return jax.lax.bitcast_convert_type(
+        ((k + 127).astype(jnp.uint32) << 23), jnp.float32
+    )
+
+
+def _clamp_bias(bias) -> jax.Array:
+    """Clamp the per-tensor bias so every reachable exponent e + bias
+    (e in [0, 7]) stays in f32's normal range. Applied identically by
+    quantize/encode/decode so the decode(encode(w)) == quantize(w).values
+    invariant holds even for tensors with max|x| near the subnormal floor
+    (fit_bias can otherwise reach < -126)."""
+    return jnp.clip(jnp.asarray(bias, jnp.int32), -126, 127 - (EXP_LEVELS - 1))
+
+
 def fit_bias(x: jax.Array) -> jax.Array:
     """Per-tensor exponent bias: put max|x| in the top exponent bin.
 
@@ -132,7 +159,8 @@ def fit_bias(x: jax.Array) -> jax.Array:
     """
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
     amax = jnp.where(jnp.isfinite(amax) & (amax > 0), amax, 1.0)
-    return jnp.ceil(jnp.log2(amax / 4.5)).astype(jnp.int32) - (EXP_LEVELS - 1)
+    raw = jnp.ceil(jnp.log2(amax / 4.5)).astype(jnp.int32) - (EXP_LEVELS - 1)
+    return _clamp_bias(raw)
 
 
 def _count_idx(mids: jax.Array, n: jax.Array) -> jax.Array:
@@ -163,9 +191,9 @@ def quantize(x: jax.Array, bias: jax.Array | int | None = None) -> QuantResult:
     """
     if bias is None:
         bias = fit_bias(x)
-    bias = jnp.asarray(bias, jnp.int32)
+    bias = _clamp_bias(bias)
     xf = x.astype(jnp.float32)
-    scale = jnp.exp2(bias.astype(jnp.float32))
+    scale = exp2i(bias)
     n = jnp.abs(xf) / scale
     # clamp into representable window, saturating rounding at the top
     top = _GRID_POS[-1]
@@ -208,9 +236,9 @@ def encode(x: jax.Array, bias: jax.Array | int | None = None) -> tuple[jax.Array
     """
     if bias is None:
         bias = fit_bias(x)
-    bias = jnp.asarray(bias, jnp.int32)
+    bias = _clamp_bias(bias)
     xf = x.astype(jnp.float32)
-    scale = jnp.exp2(bias.astype(jnp.float32))
+    scale = exp2i(bias)
     n = jnp.clip(jnp.abs(xf) / scale, 0.0, _GRID_POS[-1])
     gidx = _count_idx(jnp.asarray(_GRID_MID, jnp.float32), n)
     e = jnp.asarray(_GRID_E, jnp.int32)[gidx]
@@ -229,8 +257,8 @@ def decode(codes: jax.Array, bias: jax.Array | int, dtype=jnp.float32) -> jax.Ar
     e = c >> 5
     midx = c & 0x1F
     m = _MANTISSA_J[jnp.clip(midx, 0, 30)]
-    bias = jnp.asarray(bias, jnp.int32)
-    return (m * jnp.exp2((e + bias).astype(jnp.float32))).astype(dtype)
+    bias = _clamp_bias(bias)
+    return (m * exp2i(e + bias)).astype(dtype)
 
 
 # aliases used by the serving/storage path

@@ -160,7 +160,9 @@ def parse_hlo(text: str) -> dict:
         if not m:
             continue
         name, type_str, opcode, operands, attrs = m.groups()
-        ops = [o.strip().lstrip("%") for o in _split_top(operands)]
+        # Operand entries are "<type> %name" in post-optimization HLO text;
+        # keep only the bare instruction name so type/def lookups resolve.
+        ops = [o.strip().split()[-1].lstrip("%") for o in _split_top(operands)]
         cur[name] = Instr(name, type_str, opcode, ops, attrs, line)
     comps["__entry__"] = entry
     return comps

@@ -1,38 +1,27 @@
-"""Batched serving driver (the paper's inference-accelerator workload).
+"""Batched serving CLI — thin wrapper over ``repro.serving.ServeEngine``.
 
-Serves the WikiText-2 LSTM LM (or a reduced assigned arch) with a
-continuous-batching request loop: a fixed pool of B decode lanes, each lane
-bound to a request; when a request finishes (EOS / max tokens) the lane is
-re-armed with the next queued request without stalling the other lanes —
-the recurrent state (LSTM) or KV cache (transformer) slot is reset in place
-via a jitted masked-reset step (no per-lane host round trips).
-
-Weights are served from FloatSD8 codes (1 byte/weight — the deployment
-format; decode-at-use matches the PE's VMEM decode).
+Continuous batching over a fixed pool of decode lanes, chunked prefill,
+FIFO or shortest-prompt-first admission, and weights served from packed
+uint8 FloatSD8 codes (1 byte/weight, decode-at-use — the paper PE's
+deployment format). See src/repro/serving/README.md for the engine
+lifecycle.
 
   PYTHONPATH=src python -m repro.launch.serve --requests 32 --batch 8 \
       --max-new 32 --policy floatsd8_table6            # reduced config
   ... --full                                            # paper-scale 85M LM
+  ... --chunk 1 --dense                                 # seed-equivalent loop
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import get_config
 from ..core.policy import get_policy
 from ..models import build
-
-
-def sample_requests(n, vocab, rng, lo=4, hi=24):
-    """Synthetic request stream: prompt token arrays."""
-    for _ in range(n):
-        plen = int(rng.integers(lo, hi))
-        yield rng.integers(0, vocab, plen).astype(np.int32)
+from ..serving import ADMISSION_POLICIES, ServeEngine, synthetic_prompts
 
 
 def main():
@@ -42,6 +31,12 @@ def main():
     ap.add_argument("--batch", type=int, default=8, help="decode lanes")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="prefill chunk: prompt tokens consumed per step")
+    ap.add_argument("--admission", default="fifo", choices=ADMISSION_POLICIES)
+    ap.add_argument("--dense", action="store_true",
+                    help="serve dense f32 weights (fake-quant at use) "
+                         "instead of packed uint8 codes")
     ap.add_argument("--full", action="store_true", help="paper-scale model")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -58,76 +53,29 @@ def main():
     rng = np.random.default_rng(args.seed)
     params = model.init(jax.random.PRNGKey(args.seed))
 
-    B = args.batch
-    caches = (
-        model.init_cache(B, policy)
-        if cfg.family == "lstm"
-        else model.init_cache(B, 2048)
+    engine = ServeEngine(
+        model,
+        params,
+        policy,
+        lanes=args.batch,
+        chunk=args.chunk,
+        admission=args.admission,
+        packed=not args.dense,
+        cache_len=None if cfg.family == "lstm" else 2048,
     )
-
-    @jax.jit
-    def step(params, tokens, caches, reset_mask):
-        """One decode step; lanes with reset_mask=1 get zeroed state first."""
-        caches = jax.tree_util.tree_map(
-            lambda c: c * (1 - reset_mask.astype(c.dtype)).reshape(
-                (B,) + (1,) * (c.ndim - 1)
-            ),
-            caches,
+    if engine.store is not None:
+        s = engine.store
+        print(
+            f"weights: {s.dense_nbytes/2**20:.1f} MiB dense -> "
+            f"{s.packed_nbytes/2**20:.1f} MiB packed FloatSD8 "
+            f"({s.compression:.2f}x smaller, {s.n_packed} tensors packed)",
+            flush=True,
         )
-        logits, caches = model.decode_step(params, tokens, caches, policy)
-        return jnp.argmax(logits[:, -1, :], -1), caches
-
-    queue = list(sample_requests(args.requests, cfg.vocab, rng))
-    lanes = [None] * B  # per-lane request record or None
-    cur = np.zeros((B, 1), np.int32)
-    reset = np.zeros((B,), np.int32)
-    done = emitted = steps = 0
-
-    def arm(i):
-        """Bind the next queued request to lane i (host-side bookkeeping)."""
-        nonlocal lanes
-        if queue:
-            prompt = queue.pop(0)
-            lanes[i] = {"prompt": prompt, "pos": 1, "out": [],
-                        "remaining": args.max_new}
-            cur[i, 0] = int(prompt[0])
-            reset[i] = 1
-        else:
-            lanes[i] = None
-            cur[i, 0] = 0
-
-    for i in range(B):
-        arm(i)
-
-    t0 = time.time()
-    while any(l is not None for l in lanes):
-        nxt, caches = step(params, jnp.asarray(cur), caches, jnp.asarray(reset))
-        nxt = np.asarray(nxt)
-        reset[:] = 0
-        steps += 1
-        for i, l in enumerate(lanes):
-            if l is None:
-                continue
-            if l["pos"] < len(l["prompt"]):  # still force-feeding the prompt
-                cur[i, 0] = int(l["prompt"][l["pos"]])
-                l["pos"] += 1
-                continue
-            tok = int(nxt[i])
-            l["out"].append(tok)
-            l["remaining"] -= 1
-            emitted += 1
-            if l["remaining"] <= 0:
-                done += 1
-                arm(i)
-            else:
-                cur[i, 0] = tok
-    dt = time.time() - t0
-    print(
-        f"served {done} requests, {emitted} tokens in {dt:.1f}s "
-        f"({emitted/dt:.1f} tok/s, {steps} batched steps, "
-        f"lane util {emitted/max(steps*B,1):.0%})",
-        flush=True,
+    engine.submit_all(
+        synthetic_prompts(args.requests, cfg.vocab, rng), max_new=args.max_new
     )
+    metrics = engine.run()
+    print(metrics.format(), flush=True)
 
 
 if __name__ == "__main__":

@@ -234,13 +234,14 @@ class WikiText2LM:
             s["proj"] = proj.specs()
         return s
 
-    def logits(self, p, tokens, policy: Policy, states=None):
+    def logits(self, p, tokens, policy: Policy, states=None, lengths=None):
         emb, layers, proj = self._mods()
         x = emb.apply(p["embed"], tokens, policy)
         new_states = []
         for i, l in enumerate(layers):
             x, st = l.apply(
-                p[f"lstm{i}"], x, policy, None if states is None else states[i]
+                p[f"lstm{i}"], x, policy,
+                None if states is None else states[i], lengths=lengths,
             )
             new_states.append(st)
         if proj is not None:
@@ -274,6 +275,22 @@ class WikiText2LM:
             for l in layers
         ]
 
-    def decode_step(self, p, tokens, states, policy: Policy):
-        lg, new_states = self.logits(p, tokens, policy, states)
+    def decode_step(self, p, tokens, states, policy: Policy, lengths=None):
+        """One batched serving step over a [B, S] token block.
+
+        ``p`` may be a dense param tree or a packed FloatSD8 weight-store
+        tree (``serving.weight_store.PackedTensor`` leaves, 1 byte/weight);
+        packed leaves are decoded at use — under jit the uint8 codes are the
+        resident buffers and the f32 view is a fused temporary, matching the
+        paper PE's decode-in-VMEM. (ServeEngine unpacks before calling, so
+        this is a no-op there; the call here makes decode_step usable with a
+        packed store directly, without the engine.) ``lengths`` ([B] int32)
+        marks how many of the S positions are valid per lane (chunked
+        prefill); the recurrent state freezes past each lane's length.
+        """
+        from ..serving.weight_store import unpack_tree
+
+        lg, new_states = self.logits(
+            unpack_tree(p), tokens, policy, states, lengths=lengths
+        )
         return lg, new_states

@@ -116,8 +116,24 @@ class LSTMLayer:
     def specs(self):
         return LSTMCell(self.in_dim, self.hidden).specs()
 
-    def apply(self, p, xs, policy: Policy, state: LSTMState | None = None):
-        """xs: [B, S, in_dim] -> ([B, S, H], final_state)."""
+    def apply(
+        self,
+        p,
+        xs,
+        policy: Policy,
+        state: LSTMState | None = None,
+        lengths: jax.Array | None = None,
+    ):
+        """xs: [B, S, in_dim] -> ([B, S, H], final_state).
+
+        ``lengths`` (optional, [B] int32): per-lane count of valid positions.
+        Lane b's recurrent state freezes once t >= lengths[b] — later
+        positions are padding and must not perturb the carried state. This is
+        the masking primitive behind the serving engine's chunked prefill,
+        where one batched step advances every lane a *different* number of
+        tokens (prefill lanes up to `chunk`, decode lanes exactly 1).
+        Only meaningful for forward layers.
+        """
         cell = LSTMCell(self.in_dim, self.hidden)
         b = xs.shape[0]
         cdt = policy.cdt() or xs.dtype
@@ -136,16 +152,34 @@ class LSTMLayer:
             pq = dict(p)
             pq["wx"] = quant_weight(p["wx"], policy)
             pq["wh"] = quant_weight(p["wh"], policy)
-
-            def body(st, x_t):
-                h_t, st2 = cell.step(pq, x_t, st, policy, prequantized=True)
-                return st2, h_t
+            prequantized = True
         else:
+            pq = p
+            prequantized = False
+
+        if lengths is None:
             def body(st, x_t):
-                h_t, st2 = cell.step(p, x_t, st, policy)
+                h_t, st2 = cell.step(pq, x_t, st, policy, prequantized=prequantized)
                 return st2, h_t
 
-        final, hs = jax.lax.scan(body, state, xs_t, reverse=self.reverse)
+            final, hs = jax.lax.scan(body, state, xs_t, reverse=self.reverse)
+        else:
+            if self.reverse:
+                raise ValueError("lengths-masked scan requires a forward layer")
+            lens = jnp.asarray(lengths, jnp.int32)
+
+            def body(carry, x_t):
+                st, t = carry
+                h_t, st2 = cell.step(pq, x_t, st, policy, prequantized=prequantized)
+                keep = (t < lens)[:, None]
+                st2 = LSTMState(
+                    jnp.where(keep, st2.h, st.h), jnp.where(keep, st2.c, st.c)
+                )
+                return (st2, t + 1), h_t
+
+            (final, _), hs = jax.lax.scan(
+                body, (state, jnp.zeros((), jnp.int32)), xs_t
+            )
         return jnp.swapaxes(hs, 0, 1), final
 
 

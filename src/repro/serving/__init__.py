@@ -1,0 +1,18 @@
+"""repro.serving — continuous-batching FloatSD8 inference engine.
+
+See README.md in this directory for the engine lifecycle and the packed
+weight memory model.
+"""
+from .engine import Lane, ServeEngine
+from .metrics import RequestRecord, ServeMetrics
+from .scheduler import ADMISSION_POLICIES, Request, Scheduler, synthetic_prompts
+from .state_pool import StatePool, masked_reset
+from .weight_store import PackedTensor, WeightStore, pack_tree, tree_nbytes, unpack_tree
+
+__all__ = [
+    "ServeEngine", "Lane",
+    "ServeMetrics", "RequestRecord",
+    "Scheduler", "Request", "ADMISSION_POLICIES", "synthetic_prompts",
+    "StatePool", "masked_reset",
+    "WeightStore", "PackedTensor", "pack_tree", "unpack_tree", "tree_nbytes",
+]

@@ -1,0 +1,276 @@
+"""ServeEngine: continuous-batching inference over packed FloatSD8 weights.
+
+Lifecycle per request: queue -> (admission to a free lane) -> chunked
+prefill -> decode -> retire. All B lanes advance in ONE jitted step per
+iteration:
+
+  * each active lane contributes a per-lane length k: a prefilling lane
+    consumes ``min(remaining_prompt, chunk)`` tokens, a decoding lane
+    exactly 1;
+  * the token block is [B, S] with S in {1, chunk} (bucketed so jit
+    compiles at most two shapes); positions >= k are padding and the
+    lengths-masked LSTM scan freezes that lane's state there;
+  * lanes freshly re-armed get their state slab zeroed by a masked reset
+    fused into the same step;
+  * the step consuming a lane's final prompt token doubles as its first
+    generation step (the last valid logit predicts token 1) — a prompt of
+    length L costs ceil(L/chunk) steps instead of the L steps the old
+    one-token-per-step force-feed loop paid.
+
+Weights are served from the packed uint8 store by default (decode-at-use
+inside the jitted step); ``packed=False`` keeps the seed's dense
+fake-quant-at-use path for A/B comparison.
+"""
+from __future__ import annotations
+
+import inspect
+import time
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .metrics import ServeMetrics
+from .scheduler import Request, Scheduler
+from .state_pool import StatePool, masked_reset
+from .weight_store import WeightStore, unpack_tree
+
+__all__ = ["ServeEngine", "Lane"]
+
+
+class Lane:
+    """Host-side bookkeeping for one decode lane."""
+
+    __slots__ = ("req", "pos", "next_token")
+
+    def __init__(self, req: Request):
+        self.req = req
+        self.pos = 0  # prompt tokens consumed so far
+        self.next_token = 0  # token to feed when decoding
+
+    @property
+    def prefilling(self) -> bool:
+        return self.pos < self.req.prompt_len
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        model,
+        params,
+        policy,
+        lanes: int = 8,
+        chunk: int = 8,
+        admission: str = "fifo",
+        packed: bool = True,
+        cache_len: int | None = None,
+        greedy: bool = True,
+    ):
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        del greedy  # argmax decoding only, for now
+        self.model = model
+        self.policy = policy
+        self.lanes_n = lanes
+        self.scheduler = Scheduler(admission)
+        self.metrics = ServeMetrics(lanes)
+
+        # Packed path: weights become uint8 codes; re-running the fake-quant
+        # weight pass on already-decoded grid values would be redundant work
+        # (decode(encode(w)) == quantize(w).values, see weight_store), so
+        # the serving policy drops weight_quant.
+        if packed and policy.weight_quant != "floatsd8":
+            raise ValueError(
+                f"packed=True serves FloatSD8-quantized weights, but policy "
+                f"{policy.name!r} has weight_quant={policy.weight_quant!r} — "
+                f"serving packed would silently change the model's outputs; "
+                f"pass packed=False (CLI: --dense) for unquantized policies"
+            )
+        if packed:
+            self.store: Optional[WeightStore] = WeightStore.pack(params)
+            self.serve_params = self.store.tree
+            self.serve_policy = policy.replace(weight_quant="none")
+        else:
+            self.store = None
+            self.serve_params = params
+            self.serve_policy = policy
+
+        # Models without lengths support (transformer KV decode) can only
+        # advance lanes in lockstep -> force one-token steps.
+        self._supports_lengths = (
+            "lengths" in inspect.signature(model.decode_step).parameters
+        )
+        self.chunk = chunk if self._supports_lengths else 1
+
+        self.pool = StatePool.for_model(model, lanes, policy, cache_len=cache_len)
+        # Continuous batching (re-arming a used lane) requires every cache
+        # leaf to be lane-major so masked_reset can actually clear it; a
+        # cache with shared leaves (scalar positions, layer-major stacks)
+        # would silently leak the previous request's state into the next.
+        # Shape alone can't prove lane-majorness (a layer-major stack whose
+        # group count happens to equal `lanes` would false-positive), so
+        # require lengths support too: a model that freezes state per-lane
+        # necessarily keeps its recurrent state lane-major.
+        self._rearmable = self._supports_lengths and all(
+            hasattr(l, "ndim") and l.ndim >= 1 and l.shape[0] == lanes
+            for l in jax.tree_util.tree_leaves(self.pool.caches)
+        )
+        self._lanes: list[Lane | None] = [None] * lanes
+        self._lane_used = [False] * lanes
+        self._reset = np.zeros((lanes,), np.int32)
+        self._rid = 0
+
+        model_ = model
+        pol = self.serve_policy
+        supports_lengths = self._supports_lengths
+
+        def _step(params, tokens, lengths, caches, reset_mask):
+            caches = masked_reset(caches, reset_mask)
+            # decode-at-use: no-op on dense trees, so models never need to
+            # know about the packed format themselves
+            params = unpack_tree(params)
+            if supports_lengths:
+                logits, caches = model_.decode_step(
+                    params, tokens, caches, pol, lengths=lengths
+                )
+                idx = jnp.clip(lengths - 1, 0, tokens.shape[1] - 1)
+                last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0, :]
+            else:
+                logits, caches = model_.decode_step(params, tokens, caches, pol)
+                last = logits[:, -1, :]
+            nxt = jnp.argmax(last, -1).astype(jnp.int32)
+            return nxt, caches
+
+        # Donate the cache slab: the pre-step state is never read after the
+        # call (pool.swap installs the result), so XLA can update the lane
+        # state in place instead of keeping two copies live per step.
+        self._step = jax.jit(_step, donate_argnums=(3,))
+
+    # -- request intake --------------------------------------------------
+    def submit(self, prompt, max_new: int = 32) -> Request:
+        req = Request(rid=self._rid, prompt=np.asarray(prompt), max_new=max_new)
+        self._rid += 1
+        return self.scheduler.submit(req)
+
+    def submit_all(self, prompts: Iterable, max_new: int = 32) -> list[Request]:
+        return [self.submit(p, max_new) for p in prompts]
+
+    # -- lane lifecycle --------------------------------------------------
+    def _arm_free_lanes(self) -> None:
+        for i in range(self.lanes_n):
+            if self._lanes[i] is None and self.scheduler:
+                if self._lane_used[i] and not self._rearmable:
+                    raise RuntimeError(
+                        "cannot re-arm a used lane: this model's cache has "
+                        "non-lane-major leaves that masked_reset cannot "
+                        "clear per-lane; serve at most `lanes` requests per "
+                        "engine (or use an LSTM-family model)"
+                    )
+                req = self.scheduler.pop()
+                self._lanes[i] = Lane(req)
+                self._lane_used[i] = True
+                self._reset[i] = 1
+
+    def _retire(self, i: int) -> None:
+        lane = self._lanes[i]
+        self.metrics.on_retire(lane.req)
+        self._lanes[i] = None
+
+    # -- the batched step ------------------------------------------------
+    def step_once(self) -> bool:
+        """Advance every active lane one scheduling quantum. Returns False
+        when there is nothing left to do."""
+        self._arm_free_lanes()
+        active = [i for i, l in enumerate(self._lanes) if l is not None]
+        if not active:
+            return False
+
+        B, chunk = self.lanes_n, self.chunk
+        ks = np.zeros((B,), np.int32)
+        any_prefill = False
+        for i in active:
+            lane = self._lanes[i]
+            if lane.prefilling:
+                ks[i] = min(lane.req.prompt_len - lane.pos, chunk)
+                if ks[i] > 1:
+                    any_prefill = True
+            else:
+                ks[i] = 1
+        # Bucket the block width to {1, chunk} so jit sees two shapes total.
+        S = chunk if any_prefill else 1
+        tokens = np.zeros((B, S), np.int32)
+        for i in active:
+            lane = self._lanes[i]
+            k = int(ks[i])
+            if lane.prefilling:
+                tokens[i, :k] = lane.req.prompt[lane.pos : lane.pos + k]
+            else:
+                tokens[i, 0] = lane.next_token
+
+        # Hand the device a buffer we will never touch again: jnp.asarray
+        # can zero-copy ALIAS a numpy array on CPU, and jit dispatch is
+        # async — mutating self._reset in place after the call would race
+        # the computation reading it (observed: lost resets corrupting
+        # re-armed lanes). A fresh zeros array per step sidesteps aliasing;
+        # tokens/ks are likewise freshly allocated and never mutated.
+        reset, self._reset = self._reset, np.zeros((B,), np.int32)
+        nxt, caches = self._step(
+            self.serve_params,
+            jnp.asarray(tokens),
+            jnp.asarray(ks),
+            self.pool.caches,
+            jnp.asarray(reset),
+        )
+        nxt = np.asarray(nxt)  # sync point: step outputs are materialized
+        self.pool.swap(caches)
+
+        self.metrics.on_step(
+            width=S,
+            active=len(active),
+            useful=int(ks.sum()),
+            any_prefill=any_prefill,
+        )
+        now = time.monotonic()
+        for i in active:
+            lane = self._lanes[i]
+            if lane.prefilling:
+                lane.pos += int(ks[i])
+                self.metrics.prompt_tokens += int(ks[i])
+                if not lane.prefilling:
+                    # final prompt chunk consumed: this step's last valid
+                    # logit is the first generated token
+                    self._emit(lane, int(nxt[i]), now, first=True)
+            else:
+                self._emit(lane, int(nxt[i]), now)
+            if lane.req.done:
+                self._retire(i)
+        return True
+
+    def _emit(self, lane: Lane, tok: int, now: float, first: bool = False) -> None:
+        if first and lane.req.t_first is None:
+            lane.req.t_first = now
+        lane.req.out.append(tok)
+        lane.next_token = tok
+        self.metrics.emitted += 1
+
+    # -- drain -----------------------------------------------------------
+    def run(self) -> ServeMetrics:
+        """Serve until the queue and all lanes are drained."""
+        # Fail fast instead of raising mid-run (discarding finished work):
+        # a non-rearmable cache can serve at most `lanes` requests total.
+        outstanding = len(self.scheduler) + sum(
+            l is not None for l in self._lanes
+        )
+        if not self._rearmable and outstanding > self.lanes_n:
+            raise ValueError(
+                f"{outstanding} requests queued but this model's cache "
+                f"cannot be reset per-lane (non-lane-major leaves); submit "
+                f"at most lanes={self.lanes_n} requests per engine, or use "
+                f"an LSTM-family model for continuous batching"
+            )
+        self.metrics.start()
+        while self.step_once():
+            pass
+        self.metrics.stop()
+        return self.metrics

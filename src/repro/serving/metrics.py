@@ -1,0 +1,123 @@
+"""Serving metrics: per-request latency plus aggregate throughput/utilization.
+
+Tracked per batched step (the engine's unit of device work):
+  * steps / prefill_steps / decode_steps — a prefill step is any step whose
+    token block is wider than one position;
+  * token-slot accounting — each step offers B*S token slots; ``useful``
+    slots actually advanced a lane (prompt tokens consumed or tokens
+    generated), the rest were padding or idle lanes. ``slot_util`` is the
+    fraction of device work that was useful — the number chunked prefill
+    exists to raise;
+  * lane occupancy — fraction of lanes bound to a request per step.
+
+Per retired request: time-to-first-token (submit -> first generated token)
+and total latency (submit -> retire).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["RequestRecord", "ServeMetrics"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestRecord:
+    rid: int
+    prompt_len: int
+    new_tokens: int
+    ttft: float  # submit -> first generated token (seconds)
+    latency: float  # submit -> done (seconds)
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    lanes: int
+    steps: int = 0
+    prefill_steps: int = 0
+    decode_steps: int = 0
+    emitted: int = 0  # generated tokens
+    prompt_tokens: int = 0  # prompt tokens consumed by prefill
+    token_slots: int = 0  # sum over steps of B * S
+    useful_slots: int = 0  # slots that advanced some lane
+    lane_slots: int = 0  # sum over steps of B
+    active_lane_slots: int = 0  # sum over steps of #active lanes
+    records: list = dataclasses.field(default_factory=list)
+    t_start: Optional[float] = None
+    t_stop: Optional[float] = None
+
+    # -- lifecycle -------------------------------------------------------
+    def start(self) -> None:
+        self.t_start = time.monotonic()
+
+    def stop(self) -> None:
+        self.t_stop = time.monotonic()
+
+    @property
+    def elapsed(self) -> float:
+        if self.t_start is None:
+            return 0.0
+        end = self.t_stop if self.t_stop is not None else time.monotonic()
+        return max(end - self.t_start, 1e-9)
+
+    # -- per-step / per-request hooks -----------------------------------
+    def on_step(self, width: int, active: int, useful: int, any_prefill: bool) -> None:
+        self.steps += 1
+        if any_prefill:
+            self.prefill_steps += 1
+        else:
+            self.decode_steps += 1
+        self.token_slots += self.lanes * width
+        self.useful_slots += useful
+        self.lane_slots += self.lanes
+        self.active_lane_slots += active
+
+    def on_retire(self, req, now: float | None = None) -> None:
+        now = time.monotonic() if now is None else now
+        t0 = req.t_submit if req.t_submit is not None else now
+        t1 = req.t_first if req.t_first is not None else now
+        self.records.append(
+            RequestRecord(
+                rid=req.rid,
+                prompt_len=req.prompt_len,
+                new_tokens=len(req.out),
+                ttft=t1 - t0,
+                latency=now - t0,
+            )
+        )
+
+    # -- aggregation -----------------------------------------------------
+    def report(self) -> dict:
+        dt = self.elapsed
+        ttfts = np.array([r.ttft for r in self.records]) if self.records else np.zeros(0)
+        lats = np.array([r.latency for r in self.records]) if self.records else np.zeros(0)
+        return {
+            "requests": len(self.records),
+            "steps": self.steps,
+            "prefill_steps": self.prefill_steps,
+            "decode_steps": self.decode_steps,
+            "emitted_tokens": self.emitted,
+            "prompt_tokens": self.prompt_tokens,
+            "elapsed_s": dt,
+            "gen_tok_per_s": self.emitted / dt,
+            "total_tok_per_s": (self.emitted + self.prompt_tokens) / dt,
+            "lane_occupancy": self.active_lane_slots / max(self.lane_slots, 1),
+            "slot_util": self.useful_slots / max(self.token_slots, 1),
+            "ttft_mean_s": float(ttfts.mean()) if ttfts.size else 0.0,
+            "ttft_p95_s": float(np.percentile(ttfts, 95)) if ttfts.size else 0.0,
+            "latency_mean_s": float(lats.mean()) if lats.size else 0.0,
+        }
+
+    def format(self) -> str:
+        r = self.report()
+        return (
+            f"served {r['requests']} requests, {r['emitted_tokens']} tokens "
+            f"(+{r['prompt_tokens']} prompt) in {r['elapsed_s']:.1f}s | "
+            f"{r['gen_tok_per_s']:.1f} gen tok/s, {r['total_tok_per_s']:.1f} total tok/s | "
+            f"{r['steps']} steps ({r['prefill_steps']} prefill / {r['decode_steps']} decode) | "
+            f"lane occupancy {r['lane_occupancy']:.0%}, slot util {r['slot_util']:.0%} | "
+            f"ttft mean {r['ttft_mean_s']*1e3:.0f}ms p95 {r['ttft_p95_s']*1e3:.0f}ms"
+        )

@@ -1,0 +1,100 @@
+"""Continuous-batching request queue with pluggable admission policies.
+
+Requests enter a queue and are *admitted* to a free decode lane by the
+engine; a lane runs chunked prefill over the request's prompt, then decodes
+until ``max_new`` tokens are emitted, then retires and frees the lane for
+the next admission — other lanes never stall.
+
+Admission policies:
+  * ``fifo`` — arrival order (fair, default);
+  * ``sjf``  — shortest-prompt-first (minimizes mean time-to-first-token
+    when prompt lengths are skewed; classic shortest-job-first trade-off:
+    long prompts can starve under sustained load).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import heapq
+import itertools
+import time
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["Request", "Scheduler", "ADMISSION_POLICIES", "synthetic_prompts"]
+
+ADMISSION_POLICIES = ("fifo", "sjf")
+
+
+def synthetic_prompts(n, vocab, rng, lo=4, hi=24):
+    """Synthetic request workload: n int32 prompt arrays with lengths in
+    [lo, hi). Shared by the serve CLI, the serving benchmark, and tests so
+    the three always sample the same distribution."""
+    return [
+        rng.integers(0, vocab, int(rng.integers(lo, hi))).astype(np.int32)
+        for _ in range(n)
+    ]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus its lifecycle timestamps."""
+
+    rid: int
+    prompt: np.ndarray  # int32 [L], L >= 1
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    t_submit: Optional[float] = None
+    t_first: Optional[float] = None  # first generated token (TTFT anchor)
+    t_done: Optional[float] = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size < 1:
+            raise ValueError("empty prompt")
+        if self.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.size)
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new
+
+
+class Scheduler:
+    """Admission queue. ``submit`` enqueues; ``pop`` yields the next request
+    to bind to a freed lane under the configured policy."""
+
+    def __init__(self, policy: str = "fifo"):
+        if policy not in ADMISSION_POLICIES:
+            raise ValueError(f"unknown admission policy {policy!r}; "
+                             f"choose from {ADMISSION_POLICIES}")
+        self.policy = policy
+        self._fifo: collections.deque = collections.deque()
+        self._heap: list = []
+        self._seq = itertools.count()
+
+    def submit(self, req: Request, now: float | None = None) -> Request:
+        req.t_submit = time.monotonic() if now is None else now
+        if self.policy == "fifo":
+            self._fifo.append(req)
+        else:  # sjf: stable tie-break on arrival order
+            heapq.heappush(self._heap, (req.prompt_len, next(self._seq), req))
+        return req
+
+    def pop(self) -> Request | None:
+        if self.policy == "fifo":
+            return self._fifo.popleft() if self._fifo else None
+        if self._heap:
+            return heapq.heappop(self._heap)[2]
+        return None
+
+    def __len__(self) -> int:
+        return len(self._fifo) + len(self._heap)
+
+    def __bool__(self) -> bool:
+        return len(self) > 0

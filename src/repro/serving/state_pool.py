@@ -1,0 +1,71 @@
+"""Preallocated per-lane recurrent-state slab with jitted masked reset.
+
+A serving engine keeps B decode lanes alive for the whole process; each
+lane's recurrent state (LSTM h/c — or a KV cache for attention models)
+lives at a fixed batch index of one preallocated pytree of device arrays.
+Re-arming a lane with a new request must zero exactly that lane's slices
+without host round trips or disturbing its neighbours: ``masked_reset`` is
+a pure tree_map the engine calls *inside* its jitted step so the zeroing
+fuses with the step itself (generalizing the inline tree_map the old
+launch/serve.py script hard-coded).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["StatePool", "masked_reset"]
+
+
+def masked_reset(caches: Any, mask: jax.Array) -> Any:
+    """Zero lane b of every lane-major leaf where mask[b] != 0. jit-safe.
+
+    Leaves whose leading dim is not the lane count (scalar position
+    counters, layer-major stacks in some KV cache layouts) are passed
+    through untouched — they are shared across lanes and cannot be reset
+    per-lane; models relying on such leaves only get lockstep (chunk=1)
+    serving from the engine.
+    """
+    mask = jnp.asarray(mask)
+    lanes = mask.shape[0]
+
+    def _z(c):
+        if c.ndim == 0 or c.shape[0] != lanes:
+            return c
+        keep = (mask == 0).reshape((lanes,) + (1,) * (c.ndim - 1))
+        return jnp.where(keep, c, jnp.zeros_like(c))
+
+    return jax.tree_util.tree_map(_z, caches)
+
+
+_jit_masked_reset = jax.jit(masked_reset)
+
+
+class StatePool:
+    """Owns the lane-state pytree and its lifecycle (allocate/reset/swap)."""
+
+    def __init__(self, caches: Any, lanes: int):
+        self.caches = caches
+        self.lanes = lanes
+
+    @classmethod
+    def for_model(cls, model, lanes: int, policy=None, cache_len: int | None = None):
+        """Allocate via the model's init_cache. LSTM-family models take the
+        policy (state dtypes follow it); attention models take a max
+        sequence length for their KV slab."""
+        if cache_len is not None:
+            caches = model.init_cache(lanes, cache_len)
+        else:
+            caches = model.init_cache(lanes, policy)
+        return cls(caches, lanes)
+
+    def reset(self, mask) -> None:
+        """Eager (host-initiated) masked reset; the engine normally folds
+        this into its jitted step instead."""
+        self.caches = _jit_masked_reset(self.caches, jnp.asarray(mask))
+
+    def swap(self, new_caches: Any) -> None:
+        """Install the post-step state (called once per engine step)."""
+        self.caches = new_caches

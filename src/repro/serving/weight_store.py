@@ -1,0 +1,119 @@
+"""Packed FloatSD8 weight store — the serving deployment format.
+
+Every matmul-site weight tensor (ndim >= 2, floating) is packed once at
+engine construction to uint8 FloatSD8 codes + a per-tensor int32 exponent
+bias via ``core.floatsd.encode``. The resident serving footprint is then
+1 byte/weight (vs 4 for f32); ``unpack_tree`` is the jit-compatible
+decode-at-use view — called inside the jitted serve step, the uint8 codes
+are the long-lived buffers and the decoded f32 tensors are fused
+temporaries, mirroring the paper PE's decode-in-VMEM datapath.
+
+Round-trip guarantee (tested in tests/test_serving.py): for any tensor,
+``decode(*encode(w)) == quantize(w).values`` exactly — encode picks the
+canonical (exponent, mantissa-index) pair for the same nearest grid value
+the fake-quant path rounds to, and both mantissa and 2^(e+bias) are exact
+in f32. A model served from decoded codes therefore computes the same
+function as the training-time fake-quant path (which is why the engine
+drops the redundant ``weight_quant`` pass when serving packed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import floatsd
+
+__all__ = ["PackedTensor", "WeightStore", "pack_tree", "unpack_tree", "tree_nbytes"]
+
+
+class PackedTensor(NamedTuple):
+    """A FloatSD8-packed tensor: uint8 codes + scalar int32 exponent bias.
+
+    NamedTuple => a pytree node, so packed trees pass through jit/tree_map
+    transparently with codes/bias as leaves.
+    """
+
+    codes: jax.Array  # uint8, same shape as the dense tensor
+    bias: jax.Array  # int32 scalar (per-tensor exponent bias)
+
+
+def _is_packed(x) -> bool:
+    return isinstance(x, PackedTensor)
+
+
+def _packable(x, min_ndim: int) -> bool:
+    return (
+        hasattr(x, "ndim")
+        and x.ndim >= min_ndim
+        and jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+    )
+
+
+def pack_tree(params: Any, min_ndim: int = 2) -> Any:
+    """Dense param tree -> tree with PackedTensor at every packable leaf.
+
+    ``min_ndim=2`` packs exactly the quantized matmul sites (weight
+    matrices, embedding tables); 1-D biases and scalars stay dense, matching
+    the policy's quantization sites.
+    """
+
+    def _pack(w):
+        if _packable(w, min_ndim):
+            codes, bias = floatsd.encode(w)
+            return PackedTensor(codes, bias)
+        return w
+
+    return jax.tree_util.tree_map(_pack, params)
+
+
+def unpack_tree(tree: Any, dtype=jnp.float32) -> Any:
+    """Decode-at-use view: PackedTensor leaves -> dense ``dtype`` tensors.
+
+    jit-compatible and a no-op on trees without packed leaves, so callers
+    (e.g. ``WikiText2LM.decode_step``) can apply it unconditionally.
+    """
+    return jax.tree_util.tree_map(
+        lambda x: floatsd.decode(x.codes, x.bias, dtype=dtype) if _is_packed(x) else x,
+        tree,
+        is_leaf=_is_packed,
+    )
+
+
+def tree_nbytes(tree: Any) -> int:
+    """Total bytes of every array leaf (PackedTensor counts codes + bias)."""
+    return sum(
+        l.size * jnp.asarray(l).dtype.itemsize for l in jax.tree_util.tree_leaves(tree)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightStore:
+    """The packed serving weights plus size bookkeeping."""
+
+    tree: Any  # pytree with PackedTensor leaves at packed sites
+    dense_nbytes: int
+    n_packed: int  # number of tensors packed to codes
+
+    @classmethod
+    def pack(cls, params: Any, min_ndim: int = 2) -> "WeightStore":
+        packed = pack_tree(params, min_ndim=min_ndim)
+        n = sum(
+            _is_packed(x)
+            for x in jax.tree_util.tree_leaves(packed, is_leaf=_is_packed)
+        )
+        return cls(tree=packed, dense_nbytes=tree_nbytes(params), n_packed=n)
+
+    @property
+    def packed_nbytes(self) -> int:
+        return tree_nbytes(self.tree)
+
+    @property
+    def compression(self) -> float:
+        return self.dense_nbytes / max(self.packed_nbytes, 1)
+
+    def materialize(self, dtype=jnp.float32) -> Any:
+        """Dense decoded params (mainly for tests / offline inspection)."""
+        return unpack_tree(self.tree, dtype=dtype)

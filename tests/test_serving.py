@@ -1,0 +1,402 @@
+"""repro.serving tests: weight-store round-trip vs fake-quant, masked lane
+reset isolation, chunked-prefill equivalence vs token-by-token feeding, and
+scheduler/engine arm-retire ordering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import floatsd
+from repro.core.policy import get_policy
+from repro.models.lstm_models import WikiText2LM
+from repro.serving import (
+    Request,
+    Scheduler,
+    ServeEngine,
+    WeightStore,
+    masked_reset,
+    pack_tree,
+    synthetic_prompts,
+    unpack_tree,
+)
+
+POLICY = get_policy("floatsd8_table6")
+
+
+def tiny_model():
+    return WikiText2LM(vocab=300, emb=32, hidden=32, n_layers=2)
+
+
+def tiny_params(model, seed=0):
+    return model.init(jax.random.PRNGKey(seed))
+
+
+_TRAINED = {}
+
+
+def trained_params(model):
+    """Briefly-pretrained params: an untrained model's logits are near-ties
+    everywhere, which makes greedy streams meaninglessly sensitive to 1-ulp
+    lowering noise; ~30 SGD steps give decisive argmax margins."""
+    key = (model.vocab, model.emb, model.hidden, model.n_layers)
+    if key not in _TRAINED:
+        from repro.data import synthetic
+        from repro.optim import sgd
+        from repro.optim.train_state import init_state, make_train_step
+
+        data = synthetic.wikitext2(batch=32, seq=24, vocab=model.vocab)
+        opt = sgd(0.9)
+        state = init_state(model.init(jax.random.PRNGKey(0)), opt, POLICY)
+        step_fn = jax.jit(make_train_step(model.loss, opt, POLICY, lr=1.0))
+        for _ in range(30):
+            batch = {k: jnp.asarray(v) for k, v in next(data.batches).items()}
+            state, _ = step_fn(state, batch)
+        _TRAINED[key] = state.params
+    return _TRAINED[key]
+
+
+def make_prompts(n, vocab, rng, lo=2, hi=14):
+    return synthetic_prompts(n, vocab, rng, lo=lo, hi=hi)
+
+
+# ---------------------------------------------------------------------------
+# weight store
+# ---------------------------------------------------------------------------
+
+
+def test_exp2i_exact_powers_of_two():
+    ks = jnp.arange(-126, 128)
+    want = (2.0 ** np.arange(-126, 128, dtype=np.float64)).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(floatsd.exp2i(ks)), want)
+
+
+def test_weight_store_roundtrip_matches_fake_quant():
+    """decode(encode(w)) must be BIT-identical to the training-time
+    fake-quant path — the invariant that lets the engine serve from codes
+    with weight_quant dropped."""
+    model = tiny_model()
+    params = tiny_params(model)
+    store = WeightStore.pack(params)
+    dense = store.materialize()
+    for path, w in jax.tree_util.tree_leaves_with_path(params):
+        if w.ndim < 2:
+            continue
+        dec = dense
+        for k in path:
+            dec = dec[k.key]
+        fq = floatsd.quantize(w).values
+        np.testing.assert_array_equal(np.asarray(dec), np.asarray(fq), err_msg=str(path))
+
+
+def test_weight_store_roundtrip_tiny_magnitudes():
+    """fit_bias would hit < -126 for near-subnormal tensors; the shared
+    bias clamp must keep decode(encode(w)) == quantize(w).values there."""
+    w = jnp.array([[1e-36, 2.5e-37], [5e-37, 9e-37]], jnp.float32)
+    codes, bias = floatsd.encode(w)
+    np.testing.assert_array_equal(
+        np.asarray(floatsd.decode(codes, bias)),
+        np.asarray(floatsd.quantize(w).values),
+    )
+
+
+def test_weight_store_packs_matmul_sites_only():
+    model = tiny_model()
+    params = tiny_params(model)
+    store = WeightStore.pack(params)
+    # every >=2-D float leaf became uint8 codes; 1-D biases stayed dense
+    assert store.n_packed == sum(
+        1 for l in jax.tree_util.tree_leaves(params) if l.ndim >= 2
+    )
+    from repro.serving import PackedTensor
+
+    packed_leaves = jax.tree_util.tree_leaves(
+        store.tree, is_leaf=lambda x: isinstance(x, PackedTensor)
+    )
+    for l in packed_leaves:
+        if isinstance(l, PackedTensor):
+            assert l.codes.dtype == jnp.uint8
+            assert l.bias.dtype == jnp.int32
+        else:
+            assert l.ndim < 2  # only sub-matmul leaves stay dense
+    # ~4x smaller overall (weight matrices dominate the tiny LM less than
+    # the real one, so allow slack)
+    assert store.compression > 3.0
+    # unpack is identity on dense trees
+    same = unpack_tree(params)
+    for a, b in zip(jax.tree_util.tree_leaves(same), jax.tree_util.tree_leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pack_tree_roundtrip_under_jit():
+    """unpack_tree(packed) must be traceable (decode-at-use inside jit)."""
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    packed = pack_tree({"w": w})
+
+    @jax.jit
+    def use(p):
+        return unpack_tree(p)["w"].sum()
+
+    ref = np.asarray(floatsd.quantize(w).values).sum()
+    np.testing.assert_allclose(float(use(packed)), ref, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# state pool
+# ---------------------------------------------------------------------------
+
+
+def test_masked_reset_isolates_lanes():
+    key = jax.random.PRNGKey(0)
+    caches = {
+        "a": jax.random.normal(key, (3, 4)),
+        "nested": [jax.random.normal(key, (3, 2, 5))],
+    }
+    out = masked_reset(caches, jnp.array([0, 1, 0]))
+    np.testing.assert_array_equal(np.asarray(out["a"][1]), 0.0)
+    np.testing.assert_array_equal(np.asarray(out["nested"][0][1]), 0.0)
+    # untouched lanes are bit-identical
+    np.testing.assert_array_equal(np.asarray(out["a"][0]), np.asarray(caches["a"][0]))
+    np.testing.assert_array_equal(np.asarray(out["a"][2]), np.asarray(caches["a"][2]))
+    np.testing.assert_array_equal(
+        np.asarray(out["nested"][0][2]), np.asarray(caches["nested"][0][2])
+    )
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_state_equivalence():
+    """Feeding a prompt in one lengths-masked chunk must produce the SAME
+    recurrent state as feeding it token by token: the per-step matmul inside
+    the scan is shape-identical either way, so states match bitwise."""
+    model = tiny_model()
+    params = tiny_params(model)
+    B = 2
+    rng = np.random.default_rng(0)
+    lens = [7, 3]
+    prompts = [rng.integers(0, model.vocab, l).astype(np.int32) for l in lens]
+
+    # token-by-token
+    states = model.init_cache(B, POLICY)
+    for t in range(max(lens)):
+        toks = np.zeros((B, 1), np.int32)
+        k = np.zeros((B,), np.int32)
+        for i, p in enumerate(prompts):
+            if t < len(p):
+                toks[i, 0] = p[t]
+                k[i] = 1
+        _, states = model.decode_step(
+            params, jnp.asarray(toks), states, POLICY, lengths=jnp.asarray(k)
+        )
+
+    # one chunked step with per-lane lengths
+    S = max(lens)
+    toks = np.zeros((B, S), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, : len(p)] = p
+    states2 = model.init_cache(B, POLICY)
+    _, states2 = model.decode_step(
+        params, jnp.asarray(toks), states2, POLICY,
+        lengths=jnp.asarray(lens, np.int32),
+    )
+
+    for s1, s2 in zip(states, states2):
+        np.testing.assert_array_equal(np.asarray(s1.h), np.asarray(s2.h))
+        np.testing.assert_array_equal(np.asarray(s1.c), np.asarray(s2.c))
+
+
+def _reference_rollout(model, params, prompt, max_new, margin_floor=1e-5):
+    """Single-lane greedy rollout -> (tokens, n_decisive).
+
+    n_decisive = length of the stream prefix where every argmax had a top-2
+    logit margin > margin_floor. Within that prefix the greedy stream is
+    invariant to XLA lowering differences (reduction-order noise is ~1e-7
+    absolute); past it, argmax near-ties make exact comparison meaningless.
+    """
+    ones = jnp.ones((1,), jnp.int32)
+
+    def step(tok, states):
+        lg, st = model.decode_step(
+            params, jnp.asarray([[tok]], jnp.int32), states, POLICY, lengths=ones
+        )
+        return np.asarray(lg[0, -1, :]), st
+
+    states = model.init_cache(1, POLICY)
+    logits = None
+    for t in prompt:
+        logits, states = step(int(t), states)
+    out, n_decisive, decisive = [], 0, True
+    for _ in range(max_new):
+        top2 = np.sort(logits)[-2:]
+        decisive = decisive and (top2[1] - top2[0]) > margin_floor
+        nxt = int(logits.argmax())
+        out.append(nxt)
+        if decisive:
+            n_decisive += 1
+        logits, states = step(nxt, states)
+    return out, n_decisive
+
+
+def test_chunked_prefill_tokens_match_token_by_token():
+    """End-to-end engine equivalence on the tiny model: for every request,
+    the greedy streams from chunk in {1, 3, 8} x {packed, dense} engines all
+    match the single-lane reference over its margin-decisive prefix."""
+    model = tiny_model()
+    params = trained_params(model)
+    rng = np.random.default_rng(0)
+    prompts = make_prompts(8, model.vocab, rng)
+    max_new = 5
+
+    refs = [_reference_rollout(model, params, p, max_new) for p in prompts]
+    # the trained model must give us something substantive to compare
+    assert sum(n for _, n in refs) >= max_new * len(prompts) // 2
+
+    for kw in (
+        dict(chunk=1, packed=True),
+        dict(chunk=3, packed=True),
+        dict(chunk=8, packed=True),
+        dict(chunk=8, packed=False),
+    ):
+        eng = ServeEngine(model, params, POLICY, lanes=3, **kw)
+        reqs = eng.submit_all([p.copy() for p in prompts], max_new=max_new)
+        eng.run()
+        for r in sorted(reqs, key=lambda r: r.rid):
+            ref_out, n = refs[r.rid]
+            assert len(r.out) == max_new
+            assert r.out[:n] == ref_out[:n], (kw, r.rid)
+
+
+def test_chunked_prefill_strictly_fewer_steps():
+    model = tiny_model()
+    params = tiny_params(model)
+    rng = np.random.default_rng(1)
+    prompts = make_prompts(10, model.vocab, rng, lo=6, hi=20)
+
+    steps = {}
+    for chunk in (1, 8):
+        eng = ServeEngine(model, params, POLICY, lanes=4, chunk=chunk, packed=True)
+        eng.submit_all([p.copy() for p in prompts], max_new=4)
+        m = eng.run()
+        assert m.emitted == 10 * 4
+        steps[chunk] = m.steps
+    assert steps[8] < steps[1], steps
+
+
+# ---------------------------------------------------------------------------
+# scheduler / engine lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_fifo_and_sjf_ordering():
+    lens = [5, 2, 9, 1, 2]
+    fifo, sjf = Scheduler("fifo"), Scheduler("sjf")
+    for sched in (fifo, sjf):
+        for i, l in enumerate(lens):
+            sched.submit(Request(rid=i, prompt=np.zeros(l, np.int32), max_new=1))
+    assert [fifo.pop().rid for _ in lens] == [0, 1, 2, 3, 4]
+    # sjf: by prompt length, arrival order breaks ties (rid 1 before rid 4)
+    assert [sjf.pop().rid for _ in lens] == [3, 1, 4, 0, 2]
+    assert fifo.pop() is None and sjf.pop() is None
+
+
+def test_scheduler_rejects_bad_requests():
+    with pytest.raises(ValueError):
+        Request(rid=0, prompt=np.zeros(0, np.int32), max_new=1)
+    with pytest.raises(ValueError):
+        Request(rid=0, prompt=np.zeros(3, np.int32), max_new=0)
+    with pytest.raises(ValueError):
+        Scheduler("lifo")
+
+
+def test_engine_arm_retire_ordering_and_completion():
+    """More requests than lanes: every request completes with exactly
+    max_new tokens, FIFO admission binds in rid order, and freed lanes are
+    re-armed with the next queued request."""
+    model = tiny_model()
+    params = tiny_params(model)
+    rng = np.random.default_rng(2)
+    # equal-length prompts => deterministic retire order == admission order
+    prompts = [rng.integers(0, model.vocab, 6).astype(np.int32) for _ in range(7)]
+    eng = ServeEngine(model, params, POLICY, lanes=2, chunk=4, admission="fifo")
+    eng.submit_all(prompts, max_new=3)
+    m = eng.run()
+    assert len(m.records) == 7
+    assert all(r.new_tokens == 3 for r in m.records)
+    assert [r.rid for r in m.records] == sorted(r.rid for r in m.records)
+    # all lanes drained
+    assert all(l is None for l in eng._lanes)
+    assert not eng.scheduler
+
+
+def test_engine_sjf_admits_short_prompts_first():
+    model = tiny_model()
+    params = tiny_params(model)
+    rng = np.random.default_rng(3)
+    lens = [12, 3, 12, 3, 12, 3]
+    prompts = [rng.integers(0, model.vocab, l).astype(np.int32) for l in lens]
+    eng = ServeEngine(model, params, POLICY, lanes=1, chunk=4, admission="sjf")
+    reqs = eng.submit_all(prompts, max_new=2)
+    eng.run()
+    order = sorted(reqs, key=lambda r: r.t_first)
+    # the three short prompts (rids 1,3,5) finish prefill before any long one
+    assert [r.rid for r in order[:3]] == [1, 3, 5]
+
+
+def test_engine_rejects_packed_with_unquantized_policy():
+    """packed=True under a policy that doesn't quantize weights would
+    silently change served outputs — must refuse."""
+    model = tiny_model()
+    params = tiny_params(model)
+    with pytest.raises(ValueError):
+        ServeEngine(model, params, get_policy("fp32"), lanes=2, packed=True)
+    ServeEngine(model, params, get_policy("fp32"), lanes=2, packed=False)
+
+
+def test_engine_fails_fast_when_cache_not_rearmable():
+    """A model whose cache can't be reset per-lane must refuse more
+    requests than lanes up front, not mid-run after work is done."""
+    model = tiny_model()
+    params = tiny_params(model)
+    eng = ServeEngine(model, params, POLICY, lanes=2)
+    eng._rearmable = False  # simulate a shared-leaf (e.g. KV pos) cache
+    eng.submit_all([np.ones(3, np.int32)] * 3, max_new=2)
+    with pytest.raises(ValueError):
+        eng.run()
+    assert eng.metrics.steps == 0  # refused before any device work
+
+
+def test_model_decode_step_accepts_packed_store():
+    """decode_step works with a packed weight-store tree directly (no
+    engine), matching the dense fake-quant path."""
+    model = tiny_model()
+    params = tiny_params(model)
+    store = WeightStore.pack(params)
+    toks = jnp.asarray([[1], [2]], jnp.int32)
+    ones = jnp.ones((2,), jnp.int32)
+    lg_p, _ = model.decode_step(
+        store.tree, toks, model.init_cache(2, POLICY),
+        POLICY.replace(weight_quant="none"), lengths=ones,
+    )
+    lg_d, _ = model.decode_step(
+        params, toks, model.init_cache(2, POLICY), POLICY, lengths=ones
+    )
+    np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_d), rtol=1e-5)
+
+
+def test_engine_metrics_token_accounting():
+    model = tiny_model()
+    params = tiny_params(model)
+    rng = np.random.default_rng(4)
+    prompts = make_prompts(5, model.vocab, rng)
+    eng = ServeEngine(model, params, POLICY, lanes=2, chunk=4)
+    eng.submit_all([p.copy() for p in prompts], max_new=3)
+    m = eng.run()
+    rep = m.report()
+    assert rep["emitted_tokens"] == 5 * 3
+    assert rep["prompt_tokens"] == sum(len(p) for p in prompts)
+    assert rep["steps"] == rep["prefill_steps"] + rep["decode_steps"]
+    assert 0.0 < rep["slot_util"] <= 1.0
+    assert 0.0 < rep["lane_occupancy"] <= 1.0
+    assert all(r.ttft <= r.latency for r in m.records)
