@@ -10,9 +10,16 @@ the TPU-relevant outputs are the *analytic* per-kernel roofline terms:
 
 Wall-clock compares the pure-jnp oracle paths under jit on CPU, verifying
 the quantized path's overhead structure (decode+matmul vs plain matmul).
+
+The ``--backend`` axis measures the DISPATCHED path (what nn/serving hot
+paths actually run) per backend, so the ref-vs-pallas delta is measured,
+not assumed:
+
+    PYTHONPATH=src python benchmarks/bench_kernels.py --backend both
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -20,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import floatsd
+from repro.kernels import dispatch as kd
 from repro.kernels.floatsd_matmul.ref import floatsd_matmul_ref
 from repro.kernels.lstm_cell.ref import lstm_cell_ref
 
@@ -87,5 +95,70 @@ def run(verbose: bool = True) -> dict:
     return out
 
 
-if __name__ == "__main__":
+def run_dispatch(backend: str, *, m=256, k=512, n=512, b=64, h=512,
+                 iters: int = 3, verbose: bool = True) -> dict:
+    """Time the dispatched hot-path ops under one backend and report the
+    resolver's decisions. On CPU the pallas numbers are interpret-mode
+    (validation, not speed); on TPU they are the compiled kernels."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32) * 0.05)
+    codes, bias = floatsd.encode(w)
+    z = jnp.asarray(rng.standard_normal((b, 4 * h)).astype(np.float32))
+    c = jnp.asarray(rng.standard_normal((b, h)).astype(np.float32))
+
+    out = {"backend": backend}
+    with kd.use_backend(backend):
+        kd.STATS.reset()
+        # jit the dispatched call like the real hot paths do (the resolver
+        # runs at trace time, under this backend context)
+        t_mm = _time(jax.jit(lambda a: kd.matmul(a, codes, bias)), x, iters=iters)
+        d_mm = kd.STATS.last["floatsd_matmul"]
+        t_cell = _time(jax.jit(lambda zz: kd.lstm_cell(zz, c)), z, iters=iters)
+        d_cell = kd.STATS.last["lstm_cell"]
+    out.update(
+        ms_matmul=round(t_mm * 1e3, 2),
+        ms_lstm_cell=round(t_cell * 1e3, 2),
+        matmul_ran=d_mm.backend,
+        lstm_cell_ran=d_cell.backend,
+        interpret=d_mm.interpret,
+    )
+    if verbose:
+        mode = " (interpret)" if d_mm.backend == "pallas" and d_mm.interpret else ""
+        print(f"  [{backend:6}] matmul[{m}x{k}x{n}] {out['ms_matmul']:>8}ms "
+              f"ran={d_mm.backend}{mode} | lstm_cell[B={b},H={h}] "
+              f"{out['ms_lstm_cell']:>8}ms ran={d_cell.backend}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=["ref", "pallas", "auto", "both"],
+                    default="both",
+                    help="dispatch backend to measure; 'both' reports the "
+                         "ref-vs-pallas delta")
+    ap.add_argument("--mkn", type=int, nargs=3, default=[256, 512, 512],
+                    metavar=("M", "K", "N"))
+    ap.add_argument("--bh", type=int, nargs=2, default=[64, 512],
+                    metavar=("B", "H"))
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args()
+
     run()
+    m, k, n = args.mkn
+    b, h = args.bh
+    print("dispatched hot-path ops per backend:")
+    backends = ["ref", "pallas"] if args.backend == "both" else [args.backend]
+    rows = [
+        run_dispatch(be, m=m, k=k, n=n, b=b, h=h, iters=args.iters)
+        for be in backends
+    ]
+    if len(rows) == 2:
+        r, p = rows
+        print(f"  ref-vs-pallas delta: matmul {p['ms_matmul']/max(r['ms_matmul'],1e-9):.2f}x, "
+              f"lstm_cell {p['ms_lstm_cell']/max(r['ms_lstm_cell'],1e-9):.2f}x "
+              f"({'interpret-mode validation, not speed' if p['interpret'] else 'compiled'})")
+
+
+if __name__ == "__main__":
+    main()

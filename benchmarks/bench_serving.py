@@ -8,7 +8,12 @@ launch/serve.py loop exactly (a length-L prompt costs L steps); ``chunk=C``
 costs ceil(L/C) prefill steps — the step-count reduction is the
 device-independent win (on accelerators, batched steps ~ latency).
 
+The ``--backend`` axis routes the engine's jitted step through the kernel
+dispatch layer's ref or pallas backend (``both`` serves the packed-chunked
+config under each and reports the measured delta + token agreement):
+
     PYTHONPATH=src python benchmarks/bench_serving.py --requests 32 --batch 8
+    PYTHONPATH=src python benchmarks/bench_serving.py --backend both
 """
 from __future__ import annotations
 
@@ -18,18 +23,25 @@ import jax
 import numpy as np
 
 from repro.core.policy import get_policy
+from repro.kernels import dispatch as kd
 from repro.models.lstm_models import WikiText2LM
 from repro.serving import ServeEngine, synthetic_prompts
 
 
-def run_config(model, params, policy, prompts, *, lanes, chunk, packed, max_new):
-    engine = ServeEngine(
-        model, params, policy, lanes=lanes, chunk=chunk, packed=packed
-    )
-    reqs = engine.submit_all([p.copy() for p in prompts], max_new=max_new)
-    metrics = engine.run()
+def run_config(model, params, policy, prompts, *, lanes, chunk, packed, max_new,
+               backend="auto"):
+    kd.STATS.reset()
+    with kd.use_backend(backend):
+        engine = ServeEngine(
+            model, params, policy, lanes=lanes, chunk=chunk, packed=packed
+        )
+        reqs = engine.submit_all([p.copy() for p in prompts], max_new=max_new)
+        metrics = engine.run()
     outs = [tuple(r.out) for r in sorted(reqs, key=lambda r: r.rid)]
-    return metrics.report(), outs
+    rep = metrics.report()
+    d = kd.STATS.last.get("floatsd_matmul")
+    rep["matmul_backend"] = d.backend if d else "-"
+    return rep, outs
 
 
 def main():
@@ -41,6 +53,11 @@ def main():
     ap.add_argument("--vocab", type=int, default=4000)
     ap.add_argument("--d-model", type=int, default=192)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", choices=["auto", "ref", "pallas", "both"],
+                    default="auto",
+                    help="kernel dispatch backend for the serve step; "
+                         "'both' also serves the packed-chunked config under "
+                         "ref AND pallas and reports the measured delta")
     args = ap.parse_args()
 
     model = WikiText2LM(
@@ -59,26 +76,55 @@ def main():
         ("chunked     (chunk=%d, packed u8)" % args.chunk,
          dict(chunk=args.chunk, packed=True)),
     ]
+    base_backend = args.backend if args.backend != "both" else "ref"
+    chunked_packed_name = "chunked     (chunk=%d, packed u8)" % args.chunk
+    pallas_name = chunked_packed_name + " [pallas]"
     rows, outs = [], {}
     for name, kw in configs:
         rep, out = run_config(
             model, params, policy, prompts,
-            lanes=args.batch, max_new=args.max_new, **kw,
+            lanes=args.batch, max_new=args.max_new, backend=base_backend, **kw,
         )
         rows.append((name, rep))
         outs[name] = out
+    if args.backend == "both":
+        rep, out = run_config(
+            model, params, policy, prompts, lanes=args.batch,
+            max_new=args.max_new, chunk=args.chunk, packed=True,
+            backend="pallas",
+        )
+        rows.append((pallas_name, rep))
+        outs[pallas_name] = out
 
-    hdr = (f"{'config':36} {'steps':>6} {'prefill':>8} {'decode':>7} "
+    hdr = (f"{'config':44} {'steps':>6} {'prefill':>8} {'decode':>7} "
            f"{'gen tok/s':>10} {'total tok/s':>12} {'slot util':>10} "
-           f"{'ttft ms':>8}")
+           f"{'ttft ms':>8} {'matmul':>7}")
     print(hdr)
     print("-" * len(hdr))
     for name, r in rows:
         print(
-            f"{name:36} {r['steps']:>6} {r['prefill_steps']:>8} "
+            f"{name:44} {r['steps']:>6} {r['prefill_steps']:>8} "
             f"{r['decode_steps']:>7} {r['gen_tok_per_s']:>10.1f} "
             f"{r['total_tok_per_s']:>12.1f} {r['slot_util']:>10.0%} "
-            f"{r['ttft_mean_s']*1e3:>8.0f}"
+            f"{r['ttft_mean_s']*1e3:>8.0f} {r['matmul_backend']:>7}"
+        )
+    if args.backend == "both":
+        rows_by_name = dict(rows)
+        ref_row = rows_by_name[chunked_packed_name]  # chunked packed under ref
+        pal_row = rows_by_name[pallas_name]
+        agree = sum(
+            a == b
+            for a, b in zip(outs[chunked_packed_name], outs[pallas_name])
+        ) / len(prompts)
+        assert pal_row["matmul_backend"] == "pallas", (
+            "pallas backend requested but the matmul resolved to "
+            f"{pal_row['matmul_backend']} — dispatch regression"
+        )
+        print(
+            f"ref-vs-pallas (chunked packed): tok/s "
+            f"{pal_row['total_tok_per_s']:.1f} vs {ref_row['total_tok_per_s']:.1f} "
+            f"({pal_row['total_tok_per_s']/max(ref_row['total_tok_per_s'],1e-9):.2f}x), "
+            f"token agreement {agree:.0%}"
         )
 
     # Token agreement is informational: greedy argmax on an *untrained*

@@ -1,13 +1,15 @@
 #!/usr/bin/env bash
-# Tier-1 verification + a small serving smoke on the reduced config.
+# Fast-tier verification (< 2 min): tier-1 tests minus the slow-marked
+# tier-2 set, plus a small serving smoke on the reduced config.
+# Full suite: scripts/test_full.sh
 # Usage: scripts/smoke.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests =="
-python -m pytest -x -q
+echo "== fast-tier tests (-m 'not slow') =="
+python -m pytest -x -q -m "not slow"
 
 echo "== serving smoke (8 requests, packed FloatSD8 weights) =="
 python -m repro.launch.serve --requests 8 --batch 4 --max-new 8

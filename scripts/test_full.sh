@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Full tier-1 suite: everything, including the slow-marked tier-2 tests
+# (trainer loops, end-to-end serving, property sweeps). ~9 min on the CPU
+# container. Fast loop: scripts/smoke.sh
+# Usage: scripts/test_full.sh [pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -q "$@"

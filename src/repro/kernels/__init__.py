@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Custom-kernel layer. Each op package ships <name>/kernel.py (Pallas) +
+# ops.py (explicit wrapper) + ref.py (jnp oracle). `dispatch.py` is the
+# execution backend: a registry + resolver that routes the nn/serving hot
+# paths to the Pallas kernels (compiled on TPU, interpret elsewhere) or the
+# oracles, with shape padding and recorded fallbacks. See kernels/README.md.

@@ -1,0 +1,478 @@
+"""Kernel dispatch layer: one registry routing every hot-path op to its
+Pallas kernel or its jnp oracle.
+
+The FloatSD8 kernels (``floatsd_matmul``, ``lstm_cell``, ``floatsd_quantize``,
+``qsigmoid``) each register a ``ref`` oracle and a ``pallas`` implementation.
+Resolution per call site weighs three things:
+
+  * **backend policy** — ``REPRO_KERNEL_BACKEND=ref|pallas|auto`` (env), a
+    ``use_backend(...)`` context override, or an explicit ``backend=``
+    argument; precedence: argument > context > env; default ``auto``.
+  * **platform** — Pallas runs compiled on TPU and in ``interpret=True``
+    validation mode everywhere else (``REPRO_KERNEL_INTERPRET=0|1``
+    overrides). ``auto`` therefore resolves to ``ref`` off-TPU — the
+    interpreter is a correctness tool, not a fast path — and ``pallas`` on
+    TPU. ``backend="pallas"`` forces the kernel path anywhere (interpreted
+    off-TPU), which is how the parity suite exercises it.
+  * **shape divisibility** — inputs the tiling doesn't divide are padded up
+    to tile multiples (zero activations x zero-code weights contribute an
+    exact 0.0) when the padded work stays under ``PAD_WASTE_MAX`` x the
+    exact work, instead of silently falling back to the oracle.
+
+Every resolution is recorded in ``STATS``: per-``(op, backend)`` counters
+plus the last ``Decision`` per op. Tests assert on these, so a tiling
+regression cannot quietly turn every call into jnp. Jit caveat: inside a
+jitted caller the resolver runs at trace time, so the counters count
+(shape-distinct) traces, not executions — which is exactly the granularity
+at which the backend choice is made.
+
+``PackedTensor`` lives here (re-exported by ``serving.weight_store``) so the
+nn layer can consume packed weights without depending on the serving stack.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+import os
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import floatsd
+from .floatsd_matmul.kernel import floatsd_matmul_pallas
+from .floatsd_matmul.ref import floatsd_matmul_ref
+from .floatsd_quantize.kernel import quantize_pallas
+from .lstm_cell.kernel import lstm_cell_pallas
+from .lstm_cell.ref import lstm_cell_ref
+from .qsigmoid.kernel import qsigmoid_pallas
+from .qsigmoid.ref import qsigmoid_ref
+
+__all__ = [
+    "BACKENDS", "PAD_WASTE_MAX", "PackedTensor", "Decision", "DispatchStats",
+    "STATS", "record", "backend_policy", "use_backend", "interpret_mode",
+    "matmul", "lstm_cell", "quantize", "qsigmoid", "packed_einsum",
+    "hoist_packed", "matmul_tiles", "lstm_tiles", "row_tile",
+    "OpSpec", "REGISTRY",
+]
+
+BACKENDS = ("ref", "pallas", "auto")
+
+# auto mode pads to tile multiples only while padded_work / exact_work stays
+# under this; beyond it the oracle is the better deal (forced pallas always
+# pads).
+PAD_WASTE_MAX = 2.0
+
+# uint8 code that decodes to exactly 0.0 at any bias: e=0, mantissa index of
+# 0.0 in the symmetric 31-entry grid.
+ZERO_CODE = int(np.searchsorted(floatsd.MANTISSA_VALUES, 0.0))
+
+
+class PackedTensor(NamedTuple):
+    """A FloatSD8-packed tensor: uint8 codes + scalar int32 exponent bias.
+
+    NamedTuple => a pytree node, so packed trees pass through jit/tree_map
+    transparently with codes/bias as leaves.
+    """
+
+    codes: jax.Array  # uint8, same shape as the dense tensor
+    bias: jax.Array  # int32 scalar (per-tensor exponent bias)
+
+
+def is_packed(x: Any) -> bool:
+    return isinstance(x, PackedTensor)
+
+
+# ---------------------------------------------------------------------------
+# backend policy + decision record
+# ---------------------------------------------------------------------------
+
+
+class Decision(NamedTuple):
+    op: str
+    backend: str  # "ref" | "pallas"
+    interpret: bool
+    padded: bool
+    reason: str
+
+
+class DispatchStats:
+    """Per-(op, backend) resolution counters + the last Decision per op."""
+
+    def __init__(self):
+        self.counts: collections.Counter = collections.Counter()
+        self.last: dict[str, Decision] = {}
+
+    def record(self, d: Decision) -> None:
+        self.counts[(d.op, d.backend)] += 1
+        self.last[d.op] = d
+
+    def count(self, op: str | None = None, backend: str | None = None) -> int:
+        return sum(
+            n for (o, b), n in self.counts.items()
+            if (op is None or o == op) and (backend is None or b == backend)
+        )
+
+    def reset(self) -> None:
+        self.counts.clear()
+        self.last.clear()
+
+    def snapshot(self) -> dict:
+        return dict(self.counts)
+
+
+STATS = DispatchStats()
+
+
+def record(op: str, backend: str, *, interpret: bool = False,
+           padded: bool = False, reason: str = "") -> Decision:
+    d = Decision(op, backend, interpret, padded, reason)
+    STATS.record(d)
+    return d
+
+
+_OVERRIDE: list[str] = []  # use_backend() stack
+
+
+def backend_policy(backend: str | None = None) -> str:
+    """Effective policy: explicit argument > use_backend() > env > auto."""
+    pol = backend or (_OVERRIDE[-1] if _OVERRIDE else None) or os.environ.get(
+        "REPRO_KERNEL_BACKEND", "auto"
+    ).lower()
+    if pol not in BACKENDS:
+        raise ValueError(f"REPRO_KERNEL_BACKEND must be one of {BACKENDS}, got {pol!r}")
+    return pol
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Force a backend for all dispatch resolutions inside the context."""
+    if name not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {name!r}")
+    _OVERRIDE.append(name)
+    try:
+        yield
+    finally:
+        _OVERRIDE.pop()
+
+
+def interpret_mode() -> bool:
+    """Pallas execution mode for this process: compiled on TPU, interpreted
+    elsewhere. REPRO_KERNEL_INTERPRET=0|1 overrides."""
+    env = os.environ.get("REPRO_KERNEL_INTERPRET")
+    if env is not None:
+        return env != "0"
+    return jax.default_backend() != "tpu"
+
+
+def _decide(op: str, native: bool, waste: float, backend: str | None) -> Decision:
+    """Pure resolution (no recording). ``native``: tiling divides as-is;
+    ``waste``: padded/exact work ratio if padding were used."""
+    pol = backend_policy(backend)
+    interp = interpret_mode()
+    if pol == "ref":
+        return Decision(op, "ref", False, False, "policy:ref")
+    if pol == "pallas":
+        if native:
+            return Decision(op, "pallas", interp, False, "policy:pallas")
+        return Decision(
+            op, "pallas", interp, True, f"policy:pallas, padded ({waste:.2f}x work)"
+        )
+    # auto
+    if interp:
+        return Decision(
+            op, "ref", False, False, "auto:off-tpu (interpret is validation-only)"
+        )
+    if native:
+        return Decision(op, "pallas", False, False, "auto:tpu, native tiles")
+    if waste <= PAD_WASTE_MAX:
+        return Decision(
+            op, "pallas", False, True,
+            f"auto:tpu, padded ({waste:.2f}x <= {PAD_WASTE_MAX}x)",
+        )
+    return Decision(
+        op, "ref", False, False,
+        f"auto:padding waste {waste:.2f}x > {PAD_WASTE_MAX}x",
+    )
+
+
+def _choose(op: str, native: bool, waste: float, backend: str | None) -> Decision:
+    d = _decide(op, native, waste, backend)
+    STATS.record(d)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# tile planning (shared with the per-kernel ops wrappers)
+# ---------------------------------------------------------------------------
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def matmul_tiles(m: int, n: int, k: int) -> tuple[int, int, int]:
+    """Largest power-of-two-halved MXU-aligned blocks dividing (m, n, k)."""
+    bm = max(8, min(256, m))
+    bn = min(256, n)
+    bk = min(512, k)
+    while m % bm:
+        bm //= 2
+    while n % bn:
+        bn //= 2
+    while k % bk:
+        bk //= 2
+    return bm, bn, bk
+
+
+def lstm_tiles(b: int, h: int) -> tuple[int, int]:
+    bb = 8
+    while b % bb == 0 and bb < 128:
+        bb *= 2
+    if b % bb:
+        bb //= 2
+    bh = 128
+    while h % bh == 0 and bh < 512:
+        bh *= 2
+    if h % bh:
+        bh //= 2
+    return bb, bh
+
+
+def row_tile(rows: int) -> int:
+    """Largest block <= 256 that divides ``rows`` by repeated halving (the
+    flattened-2D elementwise kernels: quantize, qsigmoid)."""
+    bm = min(256, rows)
+    while rows % bm:
+        bm //= 2
+    return max(bm, 1)
+
+
+def _matmul_geometry(m: int, k: int, n: int):
+    """(native, padded-work ratio, padded dims) for an [M,K]x[K,N] call —
+    the single source of the alignment arithmetic, shared by ``matmul`` and
+    ``hoist_packed`` so the hoist prediction can never diverge from the
+    per-call decision."""
+    mp, kp, np_ = _ceil_to(max(m, 1), 8), _ceil_to(k, 128), _ceil_to(n, 128)
+    native = (mp, kp, np_) == (m, k, n)
+    waste = (mp * kp * np_) / max(m * k * n, 1)
+    return native, waste, (mp, kp, np_)
+
+
+# ---------------------------------------------------------------------------
+# dispatched ops
+# ---------------------------------------------------------------------------
+
+
+def matmul(x, codes, bias, *, out_dtype=jnp.float32, precise: bool = True,
+           compute_dtype=None, backend: str | None = None):
+    """x [..., K] @ decode(codes [K, N]) -> [..., N], backend-resolved.
+
+    ``precise=True`` issues the kernel's MXU dot in f32 (parity with the
+    oracle to ~1e-6 relative); ``precise=False`` uses the bf16 issue dtype
+    (full MXU rate, the paper's accumulate-in-f32 datapath). An explicit
+    ``compute_dtype`` (e.g. a bf16-compute policy's cdt) overrides both.
+    """
+    if compute_dtype is None:
+        compute_dtype = jnp.float32 if precise else jnp.bfloat16
+    k = x.shape[-1]
+    k2, n = codes.shape
+    assert k == k2, (x.shape, codes.shape)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    native, waste, (mp, kp, np_) = _matmul_geometry(m, k, n)
+    dec = _choose("floatsd_matmul", native, waste, backend)
+    if dec.backend == "ref":
+        y = floatsd_matmul_ref(x2, codes, bias, out_dtype)
+    else:
+        xx, cc = x2, codes
+        if dec.padded:
+            xx = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+            cc = jnp.pad(codes, ((0, kp - k), (0, np_ - n)), constant_values=ZERO_CODE)
+        bm, bn, bk = matmul_tiles(xx.shape[0], cc.shape[1], xx.shape[1])
+        y = floatsd_matmul_pallas(
+            xx, cc, bias, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+            compute_dtype=compute_dtype,
+            interpret=dec.interpret,
+        )
+        if dec.padded:
+            y = y[:m, :n]
+    return y.reshape(*lead, n)
+
+
+def lstm_cell(z, c_prev, *, quantized: bool = True, c_dtype=jnp.float16,
+              backend: str | None = None):
+    """Fused gates -> (h, c), backend-resolved. z: [B, 4H] (i|f|g|o)."""
+    b, h4 = z.shape
+    h = h4 // 4
+    bp, hp = _ceil_to(max(b, 1), 8), _ceil_to(max(h, 1), 128)
+    native = (bp, hp) == (b, h)
+    waste = (bp * hp) / max(b * h, 1)
+    dec = _choose("lstm_cell", native, waste, backend)
+    if dec.backend == "ref":
+        return lstm_cell_ref(z, c_prev, quantized, c_dtype=c_dtype)
+    zz, cc = z, c_prev
+    if dec.padded:
+        zz = jnp.pad(
+            z.reshape(b, 4, h), ((0, bp - b), (0, 0), (0, hp - h))
+        ).reshape(bp, 4 * hp)
+        cc = jnp.pad(c_prev, ((0, bp - b), (0, hp - h)))
+    bb, bh = lstm_tiles(bp, hp)
+    h_t, c_t = lstm_cell_pallas(
+        zz, cc, bb=bb, bh=bh, quantized=quantized, c_dtype=c_dtype,
+        interpret=dec.interpret,
+    )
+    if dec.padded:
+        h_t, c_t = h_t[:b, :h], c_t[:b, :h]
+    return h_t, c_t
+
+
+def quantize(x, bias=None, *, backend: str | None = None):
+    """Any-shape tensor -> (uint8 FloatSD8 codes, int32 bias), resolved."""
+    if bias is None:
+        bias = floatsd.fit_bias(x)
+    n = x.size
+    # native = reshapes to [8k, 256] — rows a multiple of 8 so the layout is
+    # TPU-tileable (f32 min tile is 8x128); anything else pads to that
+    np_ = _ceil_to(max(n, 1), 8 * 256)
+    native = n > 0 and n % (8 * 256) == 0
+    waste = np_ / max(n, 1)
+    dec = _choose("floatsd_quantize", native, waste, backend)
+    if dec.backend == "ref":
+        codes, _ = floatsd.encode(x, bias)
+        return codes, bias
+    flat = x.reshape(-1)
+    if dec.padded:
+        flat = jnp.pad(flat, (0, np_ - n))
+    x2 = flat.reshape(-1, 256)
+    codes2 = quantize_pallas(
+        x2, bias, bm=row_tile(x2.shape[0]), bn=256, interpret=dec.interpret
+    )
+    return codes2.reshape(-1)[:n].reshape(x.shape), bias
+
+
+def qsigmoid(x, *, backend: str | None = None):
+    """Two-region FloatSD8 sigmoid for any-shape tensors, resolved."""
+    n = x.size
+    np_ = _ceil_to(max(n, 1), 8 * 256)
+    native = n > 0 and n % (8 * 256) == 0
+    waste = np_ / max(n, 1)
+    dec = _choose("qsigmoid", native, waste, backend)
+    if dec.backend == "ref":
+        return qsigmoid_ref(x)
+    flat = x.reshape(-1)
+    if dec.padded:
+        flat = jnp.pad(flat, (0, np_ - n))
+    x2 = flat.reshape(-1, 256)
+    y2 = qsigmoid_pallas(x2, bm=row_tile(x2.shape[0]), bn=256, interpret=dec.interpret)
+    return y2.reshape(-1)[:n].reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# packed-weight entry points (the nn/serving hot paths)
+# ---------------------------------------------------------------------------
+
+
+def packed_einsum(eq: str, x, packed: PackedTensor, *, out_dtype=jnp.float32,
+                  cast_dtype=None, backend: str | None = None):
+    """The weight-site einsums over a PackedTensor, backend-resolved.
+
+    Supports the two-operand contractions used at every weight site:
+    ``...d,df->...f`` / ``bd,dk->bk`` (contract w's first axis) and
+    ``...d,vd->...v`` (contract w's second axis — tied logits head). The
+    ref path decodes and einsums (bit-identical to the old unpack-then-
+    einsum serving step); the pallas path feeds the codes to the fused
+    decode+matmul kernel, transposing the (1-byte) codes when w is stored
+    [free, contract].
+    """
+    ins, out = eq.replace(" ", "").split("->")
+    xl, wl = ins.split(",")
+    cl = xl[-1]  # contraction label: x's last axis
+    if len(wl) != 2 or cl not in wl:
+        raise NotImplementedError(f"packed_einsum does not support {eq!r}")
+    transpose = wl[1] == cl  # w stored [free, contract], e.g. "vd"
+    wf = wl[0] if transpose else wl[1]
+    if out != xl[:-1] + wf:
+        raise NotImplementedError(f"packed_einsum does not support {eq!r}")
+    dec_backend = backend_policy(backend)
+    if dec_backend == "ref" or (dec_backend == "auto" and interpret_mode()):
+        record("floatsd_matmul", "ref", reason=f"policy:{dec_backend} (packed einsum)")
+        w = floatsd.decode(packed.codes, packed.bias, dtype=cast_dtype or jnp.float32)
+        return jnp.einsum(
+            eq, x, w, preferred_element_type=jnp.float32
+        ).astype(out_dtype)
+    codes = packed.codes.T if transpose else packed.codes
+    # a non-f32 compute policy (e.g. floatsd8_tpu's bf16) keeps its issue
+    # dtype on the kernel path too, matching the ref branch's decode cast
+    cd = None if cast_dtype in (None, jnp.float32) else cast_dtype
+    return matmul(
+        x, codes, packed.bias, out_dtype=out_dtype, compute_dtype=cd,
+        backend=backend,
+    )
+
+
+def hoist_packed(w, *, m: int | None = None, dtype=None,
+                 backend: str | None = None):
+    """Loop-hoist hint for packed weights used inside a time scan.
+
+    When the per-call resolution will execute the matmuls on the ``ref``
+    backend, decoding the codes once *outside* the scan beats decode-at-use
+    every step; returns the dense decode then. On the pallas path the codes
+    stay packed — decode-in-VMEM per tile is the kernel's whole point (2x
+    less HBM weight traffic per step). Non-packed inputs pass through.
+
+    ``m`` is the batch rows the scan-body matmuls will see; with it the
+    prediction runs the SAME geometry rule as ``matmul`` (including the
+    auto-mode padding-waste fallback), so a call site that would fall back
+    to ref can never be left packed and pay a full decode per time step.
+    """
+    if not is_packed(w):
+        return w
+    if m is not None:
+        k, n = w.codes.shape
+        native, waste, _ = _matmul_geometry(m, k, n)
+        d = _decide("floatsd_matmul", native, waste, backend)
+    else:  # coarse: platform/policy only
+        pol = backend_policy(backend)
+        ref = pol == "ref" or (pol == "auto" and interpret_mode())
+        d = Decision("floatsd_matmul", "ref" if ref else "pallas", False, False, "")
+    if d.backend == "ref":
+        return floatsd.decode(w.codes, w.bias, dtype=dtype or jnp.float32)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# op registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """One dispatched op: its oracle, its Pallas kernel, and the resolved
+    public entry point (what the hot paths call)."""
+
+    name: str
+    ref: Callable
+    pallas: Callable
+    dispatch: Callable
+
+
+REGISTRY: dict[str, OpSpec] = {}
+
+
+def register(name: str, ref: Callable, pallas: Callable, dispatch: Callable) -> None:
+    REGISTRY[name] = OpSpec(name, ref, pallas, dispatch)
+
+
+register("floatsd_matmul", floatsd_matmul_ref, floatsd_matmul_pallas, matmul)
+register("lstm_cell", lstm_cell_ref, lstm_cell_pallas, lstm_cell)
+register(
+    "floatsd_quantize",
+    lambda x, bias=None: floatsd.encode(x, bias),
+    quantize_pallas,
+    quantize,
+)
+register("qsigmoid", qsigmoid_ref, qsigmoid_pallas, qsigmoid)

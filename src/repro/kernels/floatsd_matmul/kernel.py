@@ -31,7 +31,10 @@ _LUT = np.zeros(32, np.float32)
 _LUT[:31] = floatsd.MANTISSA_VALUES
 
 
-def floatsd_matmul_kernel(x_ref, codes_ref, bias_ref, lut_ref, out_ref, acc_ref, *, n_k: int):
+def floatsd_matmul_kernel(
+    x_ref, codes_ref, bias_ref, lut_ref, out_ref, acc_ref, *, n_k: int,
+    compute_dtype=jnp.bfloat16,
+):
     """One (bm x bn) output tile; accumulates over the K grid axis.
 
     x_ref:     [bm, bk]  activation tile (fp8/bf16/f32 storage)
@@ -40,6 +43,9 @@ def floatsd_matmul_kernel(x_ref, codes_ref, bias_ref, lut_ref, out_ref, acc_ref,
     lut_ref:   [1, 32]   f32 mantissa LUT (pallas kernels take constants
                          as inputs)
     acc_ref:   [bm, bn]  f32 VMEM accumulator scratch
+
+    ``compute_dtype`` is the MXU issue dtype: bf16 (default, full MXU rate)
+    or f32 (bit-tight vs the oracle — the dispatch layer's parity mode).
     """
     k_step = pl.program_id(2)
 
@@ -52,9 +58,9 @@ def floatsd_matmul_kernel(x_ref, codes_ref, bias_ref, lut_ref, out_ref, acc_ref,
     e = (codes >> 5).astype(jnp.float32)
     mant = jnp.take(lut_ref[0, :], m_idx)  # VPU gather, 32-entry table
     scale = jnp.exp2(e + bias_ref[0, 0].astype(jnp.float32))
-    w = (mant * scale).astype(jnp.bfloat16)  # decoded tile stays in VMEM
+    w = (mant * scale).astype(compute_dtype)  # decoded tile stays in VMEM
 
-    x = x_ref[...].astype(jnp.bfloat16)
+    x = x_ref[...].astype(compute_dtype)
     acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
     @pl.when(k_step == n_k - 1)
@@ -69,7 +75,8 @@ def _vmem_scratch(shape, dtype):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype", "interpret")
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "out_dtype", "compute_dtype", "interpret"),
 )
 def floatsd_matmul_pallas(
     x: jax.Array,  # [M, K]
@@ -80,6 +87,7 @@ def floatsd_matmul_pallas(
     bn: int = 256,
     bk: int = 512,
     out_dtype=jnp.float32,
+    compute_dtype=jnp.bfloat16,
     interpret: bool = False,
 ):
     m, k = x.shape
@@ -91,7 +99,9 @@ def floatsd_matmul_pallas(
     grid = (m // bm, n // bn, n_k)
 
     return pl.pallas_call(
-        functools.partial(floatsd_matmul_kernel, n_k=n_k),
+        functools.partial(
+            floatsd_matmul_kernel, n_k=n_k, compute_dtype=compute_dtype
+        ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),

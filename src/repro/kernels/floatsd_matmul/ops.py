@@ -1,11 +1,16 @@
-"""jit'd public wrapper for the FloatSD8 matmul kernel."""
+"""Public wrapper for the FloatSD8 matmul kernel.
+
+This is the explicit-control entry (callers pick kernel/oracle and the
+interpret mode); ``kernels.dispatch.matmul`` is the policy-aware entry the
+nn/serving hot paths use. Either way the backend that actually ran is
+recorded in ``kernels.dispatch.STATS`` under op ``"floatsd_matmul"`` — the
+old silent oracle fallback is now observable and asserted on in tests.
+"""
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
+from .. import dispatch
 from ...core import floatsd
 from .kernel import floatsd_matmul_pallas
 from .ref import floatsd_matmul_ref
@@ -13,7 +18,6 @@ from .ref import floatsd_matmul_ref
 __all__ = ["floatsd_matmul", "floatsd_dense_forward"]
 
 
-@functools.partial(jax.jit, static_argnames=("out_dtype", "use_kernel", "interpret"))
 def floatsd_matmul(
     x, codes, bias, *, out_dtype=jnp.float32, use_kernel: bool = True,
     interpret: bool = True,
@@ -22,21 +26,21 @@ def floatsd_matmul(
 
     `interpret=True` is the CPU-validation mode; on real TPU pass
     interpret=False. Falls back to the jnp oracle when `use_kernel=False`
-    (or for shapes the tiling doesn't divide).
+    or for shapes the tiling doesn't divide (recorded, never silent).
     """
     m, k = x.shape
     _, n = codes.shape
     if not use_kernel or (m % 8 or n % 128 or k % 128):
+        dispatch.record(
+            "floatsd_matmul", "ref",
+            reason="use_kernel=False" if not use_kernel
+            else f"fallback: shape {(m, k, n)} not tile-divisible",
+        )
         return floatsd_matmul_ref(x, codes, bias, out_dtype)
-    bm = max(8, min(256, m))
-    bn = min(256, n)
-    bk = min(512, k)
-    while m % bm:
-        bm //= 2
-    while n % bn:
-        bn //= 2
-    while k % bk:
-        bk //= 2
+    dispatch.record(
+        "floatsd_matmul", "pallas", interpret=interpret, reason="explicit wrapper"
+    )
+    bm, bn, bk = dispatch.matmul_tiles(m, n, k)
     return floatsd_matmul_pallas(
         x, codes, bias, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
         interpret=interpret,

@@ -1,30 +1,39 @@
-"""jit'd wrapper: FloatSD8 quantization of arbitrary-shape tensors."""
+"""Public wrapper: FloatSD8 quantization of arbitrary-shape tensors.
+
+Explicit-control entry; ``kernels.dispatch.quantize`` is the policy-aware
+one. Backend choices are recorded in ``kernels.dispatch.STATS`` (op
+``"floatsd_quantize"``) — fallbacks are observable, never silent.
+"""
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
+from .. import dispatch
 from ...core import floatsd
 from .kernel import quantize_pallas
-from .ref import quantize_ref
 
 __all__ = ["floatsd_quantize"]
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
 def floatsd_quantize(x, bias=None, *, use_kernel: bool = True, interpret: bool = True):
     """Any-shape tensor -> (uint8 codes, int32 bias). Kernel path reshapes
     to 2D tiles; oracle fallback for indivisible shapes."""
     if bias is None:
         bias = floatsd.fit_bias(x)
-    flat = x.reshape(-1)
-    n = flat.shape[0]
-    if not use_kernel or n % 256:
+    n = x.size
+    # [8k, 256] layout: rows must be a multiple of 8 for the TPU tiling
+    if not use_kernel or n % (8 * 256):
+        dispatch.record(
+            "floatsd_quantize", "ref",
+            reason="use_kernel=False" if not use_kernel
+            else f"fallback: size {n} % {8 * 256}",
+        )
         codes, _ = floatsd.encode(x, bias)
         return codes, bias
-    x2 = flat.reshape(-1, 256)
-    codes = quantize_pallas(x2, bias, bm=min(256, x2.shape[0]), bn=256,
+    dispatch.record(
+        "floatsd_quantize", "pallas", interpret=interpret, reason="explicit wrapper"
+    )
+    x2 = x.reshape(-1, 256)
+    codes = quantize_pallas(x2, bias, bm=dispatch.row_tile(x2.shape[0]), bn=256,
                             interpret=interpret)
     return codes.reshape(x.shape), bias

@@ -57,7 +57,7 @@ def lstm_cell_kernel(z_ref, c_ref, mid_ref, grid_ref, h_ref, c_out_ref, *, quant
         i_t, f_t, o_t = jax.nn.sigmoid(zi), jax.nn.sigmoid(zf), jax.nn.sigmoid(zo)
         g_t = jnp.tanh(zg)
     c_prev = c_ref[...].astype(jnp.float32)
-    c_t = (f_t * c_prev + i_t * g_t).astype(jnp.float16)  # Eq. 5, FP16 state
+    c_t = (f_t * c_prev + i_t * g_t).astype(c_out_ref.dtype)  # Eq. 5 state
     tc = jnp.tanh(c_t.astype(jnp.float32))
     if quantized:
         tc = tc.astype(jnp.float8_e5m2).astype(jnp.float32)
@@ -66,12 +66,14 @@ def lstm_cell_kernel(z_ref, c_ref, mid_ref, grid_ref, h_ref, c_out_ref, *, quant
     c_out_ref[...] = c_t
 
 
-@functools.partial(jax.jit, static_argnames=("bb", "bh", "quantized", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("bb", "bh", "quantized", "c_dtype", "interpret")
+)
 def lstm_cell_pallas(
     z, c_prev, *, bb: int = 128, bh: int = 512, quantized: bool = True,
-    interpret: bool = False,
+    c_dtype=jnp.float16, interpret: bool = False,
 ):
-    """z: [B, 4H], c_prev: [B, H] -> (h [B, H] z.dtype, c [B, H] f16)."""
+    """z: [B, 4H], c_prev: [B, H] -> (h [B, H] z.dtype, c [B, H] c_dtype)."""
     b, h4 = z.shape
     h = h4 // 4
     bb, bh = min(bb, b), min(bh, h)
@@ -97,7 +99,7 @@ def lstm_cell_pallas(
         ],
         out_shape=[
             jax.ShapeDtypeStruct((b, h), z.dtype),
-            jax.ShapeDtypeStruct((b, h), jnp.float16),
+            jax.ShapeDtypeStruct((b, h), c_dtype),
         ],
         interpret=interpret,
     )(

@@ -1,34 +1,35 @@
-"""jit'd wrapper for the fused LSTM cell element-wise stage."""
+"""Public wrapper for the fused LSTM cell element-wise stage.
+
+Explicit-control entry; ``kernels.dispatch.lstm_cell`` is the policy-aware
+one. Backend choices are recorded in ``kernels.dispatch.STATS`` (op
+``"lstm_cell"``) — fallbacks are observable, never silent.
+"""
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
+from .. import dispatch
 from .kernel import lstm_cell_pallas
 from .ref import lstm_cell_ref
 
 __all__ = ["lstm_cell"]
 
 
-@functools.partial(jax.jit, static_argnames=("quantized", "use_kernel", "interpret"))
-def lstm_cell(z, c_prev, *, quantized: bool = True, use_kernel: bool = True,
-              interpret: bool = True):
+def lstm_cell(z, c_prev, *, quantized: bool = True, c_dtype=jnp.float16,
+              use_kernel: bool = True, interpret: bool = True):
     """Fused gates -> (h, c). Oracle fallback on indivisible shapes."""
     b, h4 = z.shape
     h = h4 // 4
     if not use_kernel or b % 8 or h % 128:
-        return lstm_cell_ref(z, c_prev, quantized)
-    bb = 8
-    while b % bb == 0 and bb < 128:
-        bb *= 2
-    if b % bb:
-        bb //= 2
-    bh = 128
-    while h % bh == 0 and bh < 512:
-        bh *= 2
-    if h % bh:
-        bh //= 2
+        dispatch.record(
+            "lstm_cell", "ref",
+            reason="use_kernel=False" if not use_kernel
+            else f"fallback: shape {(b, h)} not tile-divisible",
+        )
+        return lstm_cell_ref(z, c_prev, quantized, c_dtype=c_dtype)
+    dispatch.record(
+        "lstm_cell", "pallas", interpret=interpret, reason="explicit wrapper"
+    )
+    bb, bh = dispatch.lstm_tiles(b, h)
     return lstm_cell_pallas(z, c_prev, bb=bb, bh=bh, quantized=quantized,
-                            interpret=interpret)
+                            c_dtype=c_dtype, interpret=interpret)

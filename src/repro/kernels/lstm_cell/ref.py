@@ -10,11 +10,13 @@ from ...core.qsigmoid import qsigmoid_raw
 __all__ = ["lstm_cell_ref"]
 
 
-def lstm_cell_ref(z, c_prev, quantized: bool = True):
+def lstm_cell_ref(z, c_prev, quantized: bool = True, c_dtype=jnp.float16):
     """z: [B, 4H] pre-activations (i|f|g|o), c_prev: [B, H].
 
     Returns (h [B,H], c [B,H]) with the paper's quantization (FloatSD8
     two-region sigmoid on gates, FP8 tanh LUT outputs, FP16 cell state).
+    ``c_dtype`` is the cell-state storage dtype (f16 per the paper; f32 for
+    fp32-master policies, so the dispatched cell matches any policy).
     """
     h4 = z.shape[-1]
     h = h4 // 4
@@ -25,7 +27,7 @@ def lstm_cell_ref(z, c_prev, quantized: bool = True):
     else:
         i_t, f_t, o_t = jax.nn.sigmoid(zi), jax.nn.sigmoid(zf), jax.nn.sigmoid(zo)
         g_t = jnp.tanh(zg)
-    c_t = (f_t * c_prev.astype(f_t.dtype) + i_t * g_t).astype(jnp.float16)
+    c_t = (f_t * c_prev.astype(f_t.dtype) + i_t * g_t).astype(c_dtype)
     tc = quantize_fp8(jnp.tanh(c_t.astype(z.dtype))) if quantized else jnp.tanh(c_t.astype(z.dtype))
     h_t = o_t * tc
     return h_t.astype(z.dtype), c_t

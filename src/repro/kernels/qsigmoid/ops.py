@@ -1,0 +1,29 @@
+"""Wrapper: two-region FloatSD8 sigmoid for arbitrary-shape tensors."""
+from __future__ import annotations
+
+
+from .kernel import qsigmoid_pallas
+from .ref import qsigmoid_ref
+
+__all__ = ["qsigmoid"]
+
+
+def qsigmoid(x, *, use_kernel: bool = True, interpret: bool = True):
+    """Any-shape tensor -> quantized sigmoid. Kernel path reshapes to 2D
+    tiles; oracle fallback for indivisible sizes. The backend actually used
+    is recorded in ``kernels.dispatch.STATS`` (op ``"qsigmoid"``)."""
+    from .. import dispatch
+
+    n = x.size
+    # [8k, 256] layout: rows must be a multiple of 8 for the TPU tiling
+    if not use_kernel or n % (8 * 256):
+        dispatch.record(
+            "qsigmoid", "ref",
+            reason="use_kernel=False" if not use_kernel
+            else f"fallback: size {n} % {8 * 256}",
+        )
+        return qsigmoid_ref(x)
+    dispatch.record("qsigmoid", "pallas", interpret=interpret, reason="explicit wrapper")
+    x2 = x.reshape(-1, 256)
+    bm = dispatch.row_tile(x2.shape[0])
+    return qsigmoid_pallas(x2, bm=bm, bn=256, interpret=interpret).reshape(x.shape)

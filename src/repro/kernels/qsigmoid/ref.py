@@ -1,0 +1,10 @@
+"""Oracle: two-region FloatSD8 sigmoid via the core library."""
+from __future__ import annotations
+
+from ...core.qsigmoid import qsigmoid_raw
+
+__all__ = ["qsigmoid_ref"]
+
+
+def qsigmoid_ref(x):
+    return qsigmoid_raw(x)

@@ -191,6 +191,11 @@ class WikiText2LM:
     hidden: int = 1024
     n_layers: int = 2
 
+    # every weight site (embedding gather/attend, LSTM gate matmuls, proj)
+    # consumes PackedTensor leaves natively via the kernel dispatch layer,
+    # so ServeEngine hands this model the packed tree as-is.
+    supports_packed = True
+
     def _vp(self) -> int:
         import os
 
@@ -234,7 +239,8 @@ class WikiText2LM:
             s["proj"] = proj.specs()
         return s
 
-    def logits(self, p, tokens, policy: Policy, states=None, lengths=None):
+    def logits(self, p, tokens, policy: Policy, states=None, lengths=None,
+               inference=False):
         emb, layers, proj = self._mods()
         x = emb.apply(p["embed"], tokens, policy)
         new_states = []
@@ -242,6 +248,7 @@ class WikiText2LM:
             x, st = l.apply(
                 p[f"lstm{i}"], x, policy,
                 None if states is None else states[i], lengths=lengths,
+                inference=inference,
             )
             new_states.append(st)
         if proj is not None:
@@ -279,18 +286,17 @@ class WikiText2LM:
         """One batched serving step over a [B, S] token block.
 
         ``p`` may be a dense param tree or a packed FloatSD8 weight-store
-        tree (``serving.weight_store.PackedTensor`` leaves, 1 byte/weight);
-        packed leaves are decoded at use — under jit the uint8 codes are the
-        resident buffers and the f32 view is a fused temporary, matching the
-        paper PE's decode-in-VMEM. (ServeEngine unpacks before calling, so
-        this is a no-op there; the call here makes decode_step usable with a
-        packed store directly, without the engine.) ``lengths`` ([B] int32)
-        marks how many of the S positions are valid per lane (chunked
-        prefill); the recurrent state freezes past each lane's length.
+        tree (``kernels.dispatch.PackedTensor`` leaves, 1 byte/weight).
+        Packed leaves are consumed at the weight sites themselves through
+        the kernel dispatch layer: the embedding gathers codes and decodes
+        only the gathered rows, and the gate matmuls either hoist one
+        decode out of the time scan (ref backend) or feed the codes to the
+        fused decode-in-VMEM Pallas matmul (pallas backend) — the paper
+        PE's datapath. ``lengths`` ([B] int32) marks how many of the S
+        positions are valid per lane (chunked prefill); the recurrent state
+        freezes past each lane's length.
         """
-        from ..serving.weight_store import unpack_tree
-
         lg, new_states = self.logits(
-            unpack_tree(p), tokens, policy, states, lengths=lengths
+            p, tokens, policy, states, lengths=lengths, inference=True
         )
         return lg, new_states

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from ..core import floatsd
 from ..core.fp8 import act_quant
 from ..core.policy import Policy
+from ..kernels import dispatch as kd
 from . import module as M
 
 __all__ = ["QuantDense", "QuantEmbedding", "quant_weight", "quant_einsum"]
@@ -63,7 +64,13 @@ def _make_einsum_gc(eq: str):
 
 
 def quant_weight(w: jax.Array, policy: Policy) -> jax.Array:
-    """Apply the policy's weight quantizer (site: any matmul weight)."""
+    """Apply the policy's weight quantizer (site: any matmul weight).
+
+    PackedTensor weights (the serving deployment format) pass through: the
+    codes ARE the quantized weights, and the matmul site dispatches them to
+    the fused decode+matmul kernel (or decodes for the jnp oracle)."""
+    if kd.is_packed(w):
+        return w
     if policy.weight_quant == "floatsd8":
         bias = jax.lax.stop_gradient(floatsd.fit_bias(w))
         w = floatsd.quantize_ste(w, bias)
@@ -80,7 +87,10 @@ def quant_act(x: jax.Array, policy: Policy, site: str = "hidden") -> jax.Array:
 def policy_einsum(eq: str, x: jax.Array, w: jax.Array, policy: Policy):
     """The bare matmul primitive all weight sites share: f32 accumulation,
     bf16 dW emission when the policy quantizes gradients (GRAD_REDUCE_BF16).
-    Operands must already be quantized/cast."""
+    Operands must already be quantized/cast. PackedTensor weights route to
+    the kernel dispatch layer (inference-only: no VJP through codes)."""
+    if kd.is_packed(w):
+        return kd.packed_einsum(eq, x, w, cast_dtype=policy.cdt())
     if GRAD_REDUCE_BF16 and policy.grad_quant != "none":
         return _make_einsum_gc(eq)(x, w)
     return jnp.einsum(eq, x, w, preferred_element_type=jnp.float32)
@@ -89,9 +99,12 @@ def policy_einsum(eq: str, x: jax.Array, w: jax.Array, policy: Policy):
 def quant_einsum(eq: str, x: jax.Array, w: jax.Array, policy: Policy, site: str = "hidden"):
     """einsum with both operands quantized per policy; f32 accumulation."""
     xq = quant_act(x, policy, site)
-    wq = quant_weight(w, policy)
     cdt = policy.cdt() or x.dtype
-    y = policy_einsum(eq, xq.astype(cdt), wq.astype(cdt), policy)
+    if kd.is_packed(w):
+        y = kd.packed_einsum(eq, xq.astype(cdt), w, cast_dtype=policy.cdt())
+    else:
+        wq = quant_weight(w, policy)
+        y = policy_einsum(eq, xq.astype(cdt), wq.astype(cdt), policy)
     return y.astype(cdt)
 
 
@@ -138,9 +151,18 @@ class QuantEmbedding:
 
     def apply(self, p, tokens, policy: Policy):
         """tokens int32 -> embeddings. The embedding *output* is the paper's
-        'first layer activation' site (Table V)."""
-        t = quant_weight(p["table"], policy)
-        y = jnp.take(t, tokens, axis=0)
+        'first layer activation' site (Table V). A packed table gathers the
+        1-byte codes first, then decodes only the gathered rows — same
+        values as decode-then-gather (decode is element-wise), ~4x less
+        gather traffic."""
+        if kd.is_packed(p["table"]):
+            codes = jnp.take(p["table"].codes, tokens, axis=0)
+            y = floatsd.decode(
+                codes, p["table"].bias, dtype=policy.cdt() or jnp.float32
+            )
+        else:
+            t = quant_weight(p["table"], policy)
+            y = jnp.take(t, tokens, axis=0)
         return quant_act(y, policy, site="first")
 
     def attend(self, p, x, policy: Policy):

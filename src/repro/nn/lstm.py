@@ -21,6 +21,7 @@ import os
 
 from ..core.policy import Policy
 from ..core.qsigmoid import qsigmoid, qtanh_fp8
+from ..kernels import dispatch as kd
 from . import module as M
 from .linear import quant_act, quant_einsum, quant_weight
 
@@ -60,7 +61,7 @@ class LSTMCell:
         return {"wx": ("embed", "hidden4"), "wh": ("hidden", "hidden4"), "b": ("hidden4",)}
 
     def step(self, p, x_t, state: LSTMState, policy: Policy,
-             prequantized: bool = False):
+             prequantized: bool = False, inference: bool = False):
         """One time step. x_t: [B, in_dim].
 
         `prequantized=True`: p["wx"]/p["wh"] already passed the weight
@@ -68,6 +69,13 @@ class LSTMCell:
         quantize-at-use is T-invariant, so doing it per step is pure waste;
         EXPERIMENTS.md §Perf hillclimb #2). x_t is then also already
         act-quantized; h still quantizes per step (it changes each step).
+
+        `inference=True` (the serving path): the element-wise gate stage
+        runs through the kernel dispatch layer — the fused Pallas LSTM-cell
+        kernel on TPU, the jnp oracle elsewhere (bit-identical values to
+        the inline math; no gradients flow, so the STE wrappers aren't
+        needed). Packed (FloatSD8-coded) wx/wh route the matmuls through
+        the dispatched decode+matmul kernel via ``policy_einsum``.
         """
         h = self.hidden
         cdt = policy.cdt() or x_t.dtype
@@ -87,6 +95,13 @@ class LSTMCell:
                 + quant_einsum("bd,dk->bk", state.h.astype(x_t.dtype), p["wh"], policy)
                 + p["b"].astype(cdt)
             )
+        c_dt = jnp.float16 if policy.master_dtype == "fp16" else jnp.float32
+        if inference:
+            # dispatched fused element-wise stage (Eqs. 5-6 + gate LUTs)
+            h_t, c_t = kd.lstm_cell(
+                z, state.c, quantized=policy.sigmoid_quant, c_dtype=c_dt
+            )
+            return h_t, LSTMState(h_t, c_t)
         zi, zf, zg, zo = jnp.split(z, 4, axis=-1)
         if policy.sigmoid_quant:
             i_t, f_t, o_t = qsigmoid(zi), qsigmoid(zf), qsigmoid(zo)
@@ -95,7 +110,6 @@ class LSTMCell:
             i_t, f_t, o_t = jax.nn.sigmoid(zi), jax.nn.sigmoid(zf), jax.nn.sigmoid(zo)
             g_t = jnp.tanh(zg)
         # Eq. (5): FloatSD8 (f,i) x FP products, FP16 cell state
-        c_dt = jnp.float16 if policy.master_dtype == "fp16" else jnp.float32
         c_t = (f_t * state.c.astype(f_t.dtype) + i_t * g_t).astype(c_dt)
         # Eq. (6)
         tc = qtanh_fp8(c_t.astype(cdt)) if policy.sigmoid_quant else jnp.tanh(c_t.astype(cdt))
@@ -123,6 +137,7 @@ class LSTMLayer:
         policy: Policy,
         state: LSTMState | None = None,
         lengths: jax.Array | None = None,
+        inference: bool = False,
     ):
         """xs: [B, S, in_dim] -> ([B, S, H], final_state).
 
@@ -133,6 +148,10 @@ class LSTMLayer:
         where one batched step advances every lane a *different* number of
         tokens (prefill lanes up to `chunk`, decode lanes exactly 1).
         Only meaningful for forward layers.
+
+        ``inference=True`` routes the per-step compute (both the masked and
+        unmasked scans) through the kernel dispatch layer; see
+        ``LSTMCell.step``.
         """
         cell = LSTMCell(self.in_dim, self.hidden)
         b = xs.shape[0]
@@ -148,10 +167,15 @@ class LSTMLayer:
 
         if HOIST_WQUANT:
             # quantize-at-use ONCE, outside the scan (T-invariant); STE
-            # gradients still flow to the raw master weights.
+            # gradients still flow to the raw master weights. Packed
+            # (FloatSD8-coded) weights analogously hoist the decode when the
+            # dispatch layer will run matmuls on the ref backend — and stay
+            # packed for the pallas decode-in-VMEM path.
             pq = dict(p)
-            pq["wx"] = quant_weight(p["wx"], policy)
-            pq["wh"] = quant_weight(p["wh"], policy)
+            pq["wx"] = kd.hoist_packed(quant_weight(p["wx"], policy), m=b,
+                                       dtype=policy.cdt())
+            pq["wh"] = kd.hoist_packed(quant_weight(p["wh"], policy), m=b,
+                                       dtype=policy.cdt())
             prequantized = True
         else:
             pq = p
@@ -159,7 +183,8 @@ class LSTMLayer:
 
         if lengths is None:
             def body(st, x_t):
-                h_t, st2 = cell.step(pq, x_t, st, policy, prequantized=prequantized)
+                h_t, st2 = cell.step(pq, x_t, st, policy,
+                                     prequantized=prequantized, inference=inference)
                 return st2, h_t
 
             final, hs = jax.lax.scan(body, state, xs_t, reverse=self.reverse)
@@ -170,7 +195,8 @@ class LSTMLayer:
 
             def body(carry, x_t):
                 st, t = carry
-                h_t, st2 = cell.step(pq, x_t, st, policy, prequantized=prequantized)
+                h_t, st2 = cell.step(pq, x_t, st, policy,
+                                     prequantized=prequantized, inference=inference)
                 keep = (t < lens)[:, None]
                 st2 = LSTMState(
                     jnp.where(keep, st2.h, st.h), jnp.where(keep, st2.c, st.c)

@@ -124,12 +124,18 @@ class ServeEngine:
         model_ = model
         pol = self.serve_policy
         supports_lengths = self._supports_lengths
+        # Packed-aware models (supports_packed) consume PackedTensor leaves
+        # at their weight sites through the kernel dispatch layer — the
+        # engine hands them the 1-byte codes untouched and the dispatch
+        # resolver picks decode-hoist (ref) or the fused decode-in-VMEM
+        # Pallas matmul per site. Models without that flag get the legacy
+        # whole-tree decode so arbitrary decode_steps keep working.
+        unpack_in_step = packed and not getattr(model, "supports_packed", False)
 
         def _step(params, tokens, lengths, caches, reset_mask):
             caches = masked_reset(caches, reset_mask)
-            # decode-at-use: no-op on dense trees, so models never need to
-            # know about the packed format themselves
-            params = unpack_tree(params)
+            if unpack_in_step:
+                params = unpack_tree(params)
             if supports_lengths:
                 logits, caches = model_.decode_step(
                     params, tokens, caches, pol, lengths=lengths

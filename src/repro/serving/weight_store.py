@@ -19,29 +19,15 @@ drops the redundant ``weight_quant`` pass when serving packed).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from ..core import floatsd
+from ..kernels.dispatch import PackedTensor, is_packed as _is_packed
 
 __all__ = ["PackedTensor", "WeightStore", "pack_tree", "unpack_tree", "tree_nbytes"]
-
-
-class PackedTensor(NamedTuple):
-    """A FloatSD8-packed tensor: uint8 codes + scalar int32 exponent bias.
-
-    NamedTuple => a pytree node, so packed trees pass through jit/tree_map
-    transparently with codes/bias as leaves.
-    """
-
-    codes: jax.Array  # uint8, same shape as the dense tensor
-    bias: jax.Array  # int32 scalar (per-tensor exponent bias)
-
-
-def _is_packed(x) -> bool:
-    return isinstance(x, PackedTensor)
 
 
 def _packable(x, min_ndim: int) -> bool:

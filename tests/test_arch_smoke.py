@@ -16,6 +16,8 @@ from repro.models import build
 from repro.optim import adam
 from repro.optim.train_state import init_state, make_train_step
 
+pytestmark = pytest.mark.slow  # tier-2: see pyproject markers
+
 POLICY = get_policy("floatsd8_table6")
 B, S = 2, 16
 

@@ -1,0 +1,258 @@
+"""Golden-parity harness for the kernel dispatch layer.
+
+For EVERY op in ``kernels.dispatch.REGISTRY``: pallas(interpret) vs the jnp
+oracle across a shape grid that includes non-tile-divisible (padded) shapes,
+plus assertions on the dispatch decisions themselves — which backend ran,
+whether padding kicked in, and that fallbacks are recorded, never silent.
+
+The grid runs without hypothesis (the property sweeps live in
+tests/test_dispatch_properties.py behind the importorskip guard) so parity
+stays in the < 2 min smoke tier.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import floatsd
+from repro.kernels import dispatch as kd
+from repro.kernels.floatsd_matmul.ops import floatsd_matmul
+
+
+def _w(shape, scale=1.0, dtype=np.float32, seed_extra=0):
+    seed = (hash((shape, float(scale), seed_extra)) & 0x7FFFFFFF) or 1
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# the per-op parity grids; completeness against the registry is asserted so
+# a newly registered op without a grid fails loudly
+# ---------------------------------------------------------------------------
+
+MATMUL_SHAPES = [
+    (8, 128, 128),   # native tiles
+    (32, 256, 256),  # native tiles
+    (7, 130, 66),    # all three axes padded
+    (1, 32, 48),     # tiny, heavily padded
+    (30, 100, 200),  # mixed
+]
+
+LSTM_SHAPES = [(8, 128), (32, 256), (5, 70), (3, 200)]
+
+ELEMWISE_SHAPES = [(8, 256), (7, 33), (1000,), (2, 3, 7), (64, 512)]
+
+GRIDS = {
+    "floatsd_matmul": MATMUL_SHAPES,
+    "lstm_cell": LSTM_SHAPES,
+    "floatsd_quantize": ELEMWISE_SHAPES,
+    "qsigmoid": ELEMWISE_SHAPES,
+}
+
+
+def test_every_registered_op_has_a_parity_grid():
+    assert set(GRIDS) == set(kd.REGISTRY), (
+        "every op registered in kernels.dispatch must have a parity grid here"
+    )
+
+
+def _expect_padded(m, k, n):
+    return bool(m % 8 or k % 128 or n % 128)
+
+
+@pytest.mark.parametrize("m,k,n", MATMUL_SHAPES)
+def test_matmul_parity_and_decision(m, k, n):
+    x = jnp.asarray(_w((m, k), 0.5))
+    wts = jnp.asarray(_w((k, n), 0.05))
+    codes, bias = floatsd.encode(wts)
+    with kd.use_backend("pallas"):
+        got = kd.matmul(x, codes, bias)
+        dec = kd.STATS.last["floatsd_matmul"]
+    want = kd.matmul(x, codes, bias, backend="ref")
+    assert dec.backend == "pallas"
+    assert dec.padded == _expect_padded(m, k, n), dec
+    # precise (f32-issue) kernel: <= 1e-5 deviation across the grid
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_matmul_batched_leading_dims():
+    """dispatch.matmul flattens [..., K] leading dims like the weight sites."""
+    x = jnp.asarray(_w((2, 3, 130), 0.5))
+    wts = jnp.asarray(_w((130, 66), 0.05))
+    codes, bias = floatsd.encode(wts)
+    with kd.use_backend("pallas"):
+        got = kd.matmul(x, codes, bias)
+    want = kd.matmul(x, codes, bias, backend="ref")
+    assert got.shape == (2, 3, 66)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("b,h", LSTM_SHAPES)
+@pytest.mark.parametrize("quantized", [True, False])
+def test_lstm_cell_parity_and_decision(b, h, quantized):
+    z = jnp.asarray(_w((b, 4 * h), 1.5))
+    c = jnp.asarray(_w((b, h), 0.8))
+    with kd.use_backend("pallas"):
+        h_got, c_got = kd.lstm_cell(z, c, quantized=quantized)
+        dec = kd.STATS.last["lstm_cell"]
+    h_want, c_want = kd.lstm_cell(z, c, quantized=quantized, backend="ref")
+    assert dec.backend == "pallas"
+    assert dec.padded == bool(b % 8 or h % 128), dec
+    assert c_got.dtype == jnp.float16 and c_want.dtype == jnp.float16
+    np.testing.assert_allclose(
+        np.asarray(h_got), np.asarray(h_want), rtol=1e-3, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(c_got, np.float32), np.asarray(c_want, np.float32),
+        rtol=1e-3, atol=1e-4,
+    )
+
+
+def test_lstm_cell_c_dtype_follows_policy():
+    """fp32-master policies keep the cell state f32 through the dispatch."""
+    z = jnp.asarray(_w((8, 4 * 128), 1.5))
+    c = jnp.asarray(_w((8, 128), 0.8))
+    for backend in ("ref", "pallas"):
+        _, c_out = kd.lstm_cell(z, c, c_dtype=jnp.float32, backend=backend)
+        assert c_out.dtype == jnp.float32, backend
+
+
+@pytest.mark.parametrize("shape", ELEMWISE_SHAPES)
+def test_quantize_parity_and_decision(shape):
+    x = jnp.asarray(_w(shape, 0.7))
+    with kd.use_backend("pallas"):
+        codes, bias = kd.quantize(x)
+        dec = kd.STATS.last["floatsd_quantize"]
+    ref_codes, ref_bias = kd.quantize(x, backend="ref")
+    assert dec.backend == "pallas"
+    assert dec.padded == bool(x.size % (8 * 256)), dec
+    assert codes.shape == x.shape and codes.dtype == jnp.uint8
+    assert int(bias) == int(ref_bias)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(ref_codes))
+
+
+@pytest.mark.parametrize("shape", ELEMWISE_SHAPES)
+def test_qsigmoid_parity_and_decision(shape):
+    x = jnp.asarray(_w(shape, 2.0))
+    with kd.use_backend("pallas"):
+        got = kd.qsigmoid(x)
+        dec = kd.STATS.last["qsigmoid"]
+    want = kd.qsigmoid(x, backend="ref")
+    assert dec.backend == "pallas"
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# the dispatch decision logic itself
+# ---------------------------------------------------------------------------
+
+
+def test_auto_resolves_to_ref_off_tpu():
+    x = jnp.asarray(_w((8, 128), 0.5))
+    wts = jnp.asarray(_w((128, 128), 0.05))
+    codes, bias = floatsd.encode(wts)
+    kd.matmul(x, codes, bias)  # default policy: auto
+    dec = kd.STATS.last["floatsd_matmul"]
+    assert dec.backend == "ref" and dec.reason.startswith("auto:off-tpu")
+
+
+def test_backend_precedence_argument_over_context_over_env(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "pallas")
+    assert kd.backend_policy() == "pallas"
+    with kd.use_backend("ref"):
+        assert kd.backend_policy() == "ref"
+        assert kd.backend_policy("auto") == "auto"
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "bogus")
+    with pytest.raises(ValueError):
+        kd.backend_policy()
+
+
+def test_auto_padding_profitability_on_tpu(monkeypatch):
+    """With compiled pallas available (simulated), auto pads only while the
+    padded work stays under PAD_WASTE_MAX; beyond it the oracle wins."""
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "0")  # pretend compiled
+    d = kd._choose("x", native=True, waste=1.0, backend="auto")
+    assert d.backend == "pallas" and not d.padded
+    d = kd._choose("x", native=False, waste=kd.PAD_WASTE_MAX - 0.1, backend="auto")
+    assert d.backend == "pallas" and d.padded
+    d = kd._choose("x", native=False, waste=kd.PAD_WASTE_MAX + 0.1, backend="auto")
+    assert d.backend == "ref" and "waste" in d.reason
+
+
+def test_stats_counters_accumulate():
+    x = jnp.asarray(_w((8, 128), 0.5))
+    wts = jnp.asarray(_w((128, 128), 0.05))
+    codes, bias = floatsd.encode(wts)
+    before = kd.STATS.count("floatsd_matmul", "ref")
+    kd.matmul(x, codes, bias, backend="ref")
+    kd.matmul(x, codes, bias, backend="ref")
+    assert kd.STATS.count("floatsd_matmul", "ref") == before + 2
+
+
+def test_ops_wrapper_records_fallback_not_silent():
+    """The legacy wrapper's oracle fallback is observable via STATS — a
+    tiling regression can't quietly turn every call into jnp."""
+    x = jnp.asarray(_w((7, 130), 0.5))
+    wts = jnp.asarray(_w((130, 66), 0.05))
+    codes, bias = floatsd.encode(wts)
+    floatsd_matmul(x, codes, bias, interpret=True)
+    dec = kd.STATS.last["floatsd_matmul"]
+    assert dec.backend == "ref" and "fallback" in dec.reason
+    x2 = jnp.asarray(_w((8, 128), 0.5))
+    wts2 = jnp.asarray(_w((128, 128), 0.05))
+    codes2, bias2 = floatsd.encode(wts2)
+    floatsd_matmul(x2, codes2, bias2, interpret=True)
+    assert kd.STATS.last["floatsd_matmul"].backend == "pallas"
+
+
+# ---------------------------------------------------------------------------
+# packed-weight entry points
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("eq,xshape,wshape", [
+    ("bd,dk->bk", (4, 80), (80, 96)),
+    ("...d,df->...f", (2, 3, 80), (80, 96)),
+    ("...d,vd->...v", (2, 3, 80), (96, 80)),  # tied logits head layout
+])
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_packed_einsum_matches_dense(eq, xshape, wshape, backend):
+    x = jnp.asarray(_w(xshape, 0.5))
+    w = jnp.asarray(_w(wshape, 0.05))
+    pt = kd.PackedTensor(*floatsd.encode(w))
+    with kd.use_backend(backend):
+        got = kd.packed_einsum(eq, x, pt)
+    wq = floatsd.decode(pt.codes, pt.bias)
+    want = jnp.einsum(eq, x, wq, preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_packed_einsum_rejects_unsupported_eq():
+    w = jnp.asarray(_w((8, 8), 0.05))
+    pt = kd.PackedTensor(*floatsd.encode(w))
+    with pytest.raises(NotImplementedError):
+        kd.packed_einsum("ab,bcd->acd", jnp.zeros((2, 8)), pt)
+
+
+def test_hoist_packed_decodes_for_ref_keeps_codes_for_pallas():
+    w = jnp.asarray(_w((16, 32), 0.05))
+    pt = kd.PackedTensor(*floatsd.encode(w))
+    with kd.use_backend("ref"):
+        dense = kd.hoist_packed(pt)
+    assert not kd.is_packed(dense)
+    np.testing.assert_array_equal(
+        np.asarray(dense), np.asarray(floatsd.decode(pt.codes, pt.bias))
+    )
+    with kd.use_backend("pallas"):
+        assert kd.hoist_packed(pt) is pt
+    # non-packed passthrough
+    assert kd.hoist_packed(w) is w
+
+
+def test_zero_code_pads_decode_to_exact_zero():
+    codes = jnp.full((4, 4), kd.ZERO_CODE, jnp.uint8)
+    for bias in (-30, 0, 25):
+        np.testing.assert_array_equal(
+            np.asarray(floatsd.decode(codes, bias)), 0.0
+        )

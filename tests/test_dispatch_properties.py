@@ -1,0 +1,79 @@
+"""Property-based sweeps (hypothesis) for the dispatch layer and the
+FloatSD8 encode/decode round-trip.
+
+Behind the importorskip guard like the other hypothesis suites: containers
+without hypothesis skip this module; the deterministic parity grid in
+tests/test_dispatch_parity.py still runs everywhere.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import floatsd
+from repro.kernels import dispatch as kd
+
+pytestmark = pytest.mark.slow  # interpret-mode pallas sweeps are tier-2
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 8), min_size=1, max_size=3),
+    scale=st.floats(1e-6, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_encode_decode_roundtrip_equals_fake_quant(dims, scale, seed):
+    """decode(encode(x)) must be bit-identical to quantize(x).values for
+    arbitrary shapes and magnitude windows — the serving weight-store
+    invariant."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.standard_normal(tuple(dims)) * scale).astype(np.float32))
+    codes, bias = floatsd.encode(x)
+    np.testing.assert_array_equal(
+        np.asarray(floatsd.decode(codes, bias)),
+        np.asarray(floatsd.quantize(x, bias).values),
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 12),
+    k=st.integers(1, 160),
+    n=st.integers(1, 160),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_pad_then_crop_equals_oracle(m, k, n, seed):
+    """Property: the padded-then-cropped pallas result equals the unpadded
+    oracle for arbitrary M/K/N (zero activations x zero-code weights add an
+    exact 0.0)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32) * 0.5)
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32) * 0.05)
+    codes, bias = floatsd.encode(w)
+    with kd.use_backend("pallas"):
+        got = kd.matmul(x, codes, bias)
+    want = kd.matmul(x, codes, bias, backend="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 10),
+    h=st.integers(1, 150),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lstm_cell_pad_then_crop_equals_oracle(b, h, seed):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.standard_normal((b, 4 * h)).astype(np.float32) * 1.5)
+    c = jnp.asarray(rng.standard_normal((b, h)).astype(np.float32) * 0.8)
+    with kd.use_backend("pallas"):
+        h_got, c_got = kd.lstm_cell(z, c)
+    h_want, c_want = kd.lstm_cell(z, c, backend="ref")
+    np.testing.assert_allclose(np.asarray(h_got), np.asarray(h_want), rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(c_got, np.float32), np.asarray(c_want, np.float32),
+        rtol=1e-3, atol=1e-4,
+    )

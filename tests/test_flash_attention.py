@@ -7,6 +7,8 @@ import pytest
 
 from repro.nn.attention import flash_attention
 
+pytestmark = pytest.mark.slow  # tier-2: see pyproject markers
+
 RNG = np.random.default_rng(7)  # unused; kept for seed stability of _mk
 
 

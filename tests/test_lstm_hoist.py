@@ -4,10 +4,13 @@ same gradients to the master weights (STE)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.policy import get_policy
 from repro.nn import lstm as lstm_mod
 from repro.nn.lstm import LSTMLayer
+
+pytestmark = pytest.mark.slow  # tier-2: see pyproject markers
 
 
 def _run(hoist: bool, policy_name="floatsd8_table6"):

@@ -10,6 +10,8 @@ import pytest
 from repro.core.policy import get_policy
 from repro.nn.moe import MoE
 
+pytestmark = pytest.mark.slow  # tier-2: see pyproject markers
+
 POLICY = get_policy("fp32")
 M = MoE(dim=32, hidden=48, n_experts=8, top_k=2, dispatch_groups=2)
 

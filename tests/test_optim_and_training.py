@@ -82,6 +82,7 @@ def _lm_batches(vocab, batch=8, seq=24, seed=0, noise=0.1):
         }
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("polname", ["fp32", "floatsd8_table6"])
 def test_lstm_lm_loss_decreases(polname):
     """End-to-end: the paper's WikiText-2 model (reduced) trains under both

@@ -7,6 +7,8 @@ import pytest
 
 from repro.nn.rwkv import RWKV6TimeMix
 
+pytestmark = pytest.mark.slow  # tier-2: see pyproject markers
+
 TM = RWKV6TimeMix(dim=128, head_dim=32)  # 4 heads
 
 

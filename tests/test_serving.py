@@ -70,6 +70,7 @@ def test_exp2i_exact_powers_of_two():
     np.testing.assert_array_equal(np.asarray(floatsd.exp2i(ks)), want)
 
 
+@pytest.mark.slow
 def test_weight_store_roundtrip_matches_fake_quant():
     """decode(encode(w)) must be BIT-identical to the training-time
     fake-quant path — the invariant that lets the engine serve from codes
@@ -167,6 +168,7 @@ def test_masked_reset_isolates_lanes():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_chunked_prefill_state_equivalence():
     """Feeding a prompt in one lengths-masked chunk must produce the SAME
     recurrent state as feeding it token by token: the per-step matmul inside
@@ -239,6 +241,7 @@ def _reference_rollout(model, params, prompt, max_new, margin_floor=1e-5):
     return out, n_decisive
 
 
+@pytest.mark.slow
 def test_chunked_prefill_tokens_match_token_by_token():
     """End-to-end engine equivalence on the tiny model: for every request,
     the greedy streams from chunk in {1, 3, 8} x {packed, dense} engines all
@@ -268,6 +271,7 @@ def test_chunked_prefill_tokens_match_token_by_token():
             assert r.out[:n] == ref_out[:n], (kw, r.rid)
 
 
+@pytest.mark.slow
 def test_chunked_prefill_strictly_fewer_steps():
     model = tiny_model()
     params = tiny_params(model)
@@ -310,6 +314,7 @@ def test_scheduler_rejects_bad_requests():
         Scheduler("lifo")
 
 
+@pytest.mark.slow
 def test_engine_arm_retire_ordering_and_completion():
     """More requests than lanes: every request completes with exactly
     max_new tokens, FIFO admission binds in rid order, and freed lanes are
@@ -330,6 +335,7 @@ def test_engine_arm_retire_ordering_and_completion():
     assert not eng.scheduler
 
 
+@pytest.mark.slow
 def test_engine_sjf_admits_short_prompts_first():
     model = tiny_model()
     params = tiny_params(model)
@@ -367,6 +373,7 @@ def test_engine_fails_fast_when_cache_not_rearmable():
     assert eng.metrics.steps == 0  # refused before any device work
 
 
+@pytest.mark.slow
 def test_model_decode_step_accepts_packed_store():
     """decode_step works with a packed weight-store tree directly (no
     engine), matching the dense fake-quant path."""
@@ -385,6 +392,7 @@ def test_model_decode_step_accepts_packed_store():
     np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_d), rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_engine_metrics_token_accounting():
     model = tiny_model()
     params = tiny_params(model)

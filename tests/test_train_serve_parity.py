@@ -1,0 +1,122 @@
+"""Train -> serve parity across dispatch backends.
+
+Trains a tiny WikiText-2 LM a few steps, packs the master weights into the
+serving WeightStore, and asserts the ServeEngine's greedy token streams
+match the training-time fake-quant model's streams exactly under BOTH the
+``ref`` and ``pallas`` dispatch backends — plus that the pallas run really
+did resolve to the Pallas kernels (a tiling regression that silently turned
+every call into jnp would fail the counter assertions, not just slow down).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import get_policy
+from repro.kernels import dispatch as kd
+from repro.models.lstm_models import WikiText2LM
+from repro.serving import ServeEngine, WeightStore, synthetic_prompts
+
+pytestmark = pytest.mark.slow  # trains a model; tier-2
+
+POLICY = get_policy("floatsd8_table6")
+
+
+@pytest.fixture(scope="module")
+def trained():
+    from repro.data import synthetic
+    from repro.optim import sgd
+    from repro.optim.train_state import init_state, make_train_step
+
+    model = WikiText2LM(vocab=300, emb=32, hidden=32, n_layers=2)
+    data = synthetic.wikitext2(batch=32, seq=24, vocab=model.vocab)
+    opt = sgd(0.9)
+    state = init_state(model.init(jax.random.PRNGKey(0)), opt, POLICY)
+    step_fn = jax.jit(make_train_step(model.loss, opt, POLICY, lr=1.0))
+    for _ in range(30):
+        batch = {k: jnp.asarray(v) for k, v in next(data.batches).items()}
+        state, _ = step_fn(state, batch)
+    return model, state.params
+
+
+def _fake_quant_rollout(model, params, prompt, max_new, margin_floor=1e-5):
+    """Greedy rollout on the training-time fake-quant path (dense params,
+    weight_quant='floatsd8') -> (tokens, n_decisive). n_decisive bounds the
+    prefix where every argmax had a top-2 margin > margin_floor, i.e. where
+    the stream is invariant to sub-1e-5 lowering noise."""
+    ones = jnp.ones((1,), jnp.int32)
+
+    def step(tok, states):
+        lg, st = model.decode_step(
+            params, jnp.asarray([[tok]], jnp.int32), states, POLICY, lengths=ones
+        )
+        return np.asarray(lg[0, -1, :]), st
+
+    states = model.init_cache(1, POLICY)
+    logits = None
+    for t in prompt:
+        logits, states = step(int(t), states)
+    out, n_decisive, decisive = [], 0, True
+    for _ in range(max_new):
+        top2 = np.sort(logits)[-2:]
+        decisive = decisive and (top2[1] - top2[0]) > margin_floor
+        nxt = int(logits.argmax())
+        out.append(nxt)
+        if decisive:
+            n_decisive += 1
+        logits, states = step(nxt, states)
+    return out, n_decisive
+
+
+def test_packed_serve_matches_fake_quant_under_both_backends(trained):
+    model, params = trained
+    rng = np.random.default_rng(0)
+    prompts = synthetic_prompts(6, model.vocab, rng, lo=2, hi=12)
+    max_new = 5
+
+    refs = [_fake_quant_rollout(model, params, p, max_new) for p in prompts]
+    # the trained model must give decisive margins for the comparison to bite
+    assert sum(n for _, n in refs) >= max_new * len(prompts) // 2
+
+    store = WeightStore.pack(params)
+    assert store.n_packed > 0
+
+    streams = {}
+    for backend in ("ref", "pallas"):
+        kd.STATS.reset()
+        with kd.use_backend(backend):
+            eng = ServeEngine(model, params, POLICY, lanes=3, chunk=4, packed=True)
+            reqs = eng.submit_all([p.copy() for p in prompts], max_new=max_new)
+            eng.run()
+        streams[backend] = [tuple(r.out) for r in sorted(reqs, key=lambda r: r.rid)]
+        for r in sorted(reqs, key=lambda r: r.rid):
+            ref_out, n = refs[r.rid]
+            assert len(r.out) == max_new
+            assert list(r.out[:n]) == ref_out[:n], (backend, r.rid)
+        if backend == "pallas":
+            # the kernels actually ran — matmuls AND the fused cell
+            assert kd.STATS.count("floatsd_matmul", "pallas") > 0
+            assert kd.STATS.count("lstm_cell", "pallas") > 0
+            assert kd.STATS.count("floatsd_matmul", "ref") == 0
+        else:
+            assert kd.STATS.count("floatsd_matmul", "pallas") == 0
+
+    # ref and pallas serve the same packed codes: full-stream agreement
+    assert streams["ref"] == streams["pallas"]
+
+
+def test_engine_default_backend_unchanged_tokens(trained):
+    """auto (the default) must serve the exact same streams as forced ref on
+    CPU — the dispatch layer cannot change served outputs by default."""
+    model, params = trained
+    rng = np.random.default_rng(1)
+    prompts = synthetic_prompts(4, model.vocab, rng, lo=2, hi=10)
+
+    def serve(backend):
+        with kd.use_backend(backend):
+            eng = ServeEngine(model, params, POLICY, lanes=2, chunk=4, packed=True)
+            reqs = eng.submit_all([p.copy() for p in prompts], max_new=4)
+            eng.run()
+        return [tuple(r.out) for r in sorted(reqs, key=lambda r: r.rid)]
+
+    assert serve("auto") == serve("ref")
