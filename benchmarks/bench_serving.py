@@ -1,12 +1,22 @@
 """Serving-path benchmark: chunked prefill vs one-token-per-step, packed
-FloatSD8 codes vs dense f32 weights.
+FloatSD8 codes vs dense f32 weights, and (``--workload zipf-prefix``) the
+frontend's FP8 LSTM-state prefix cache vs the cold path.
 
-Runs the same synthetic request set through four ServeEngine configs on the
-reduced WikiText-2 LM and reports batched steps, prefill/decode split,
-throughput, slot utilization, and TTFT. ``chunk=1`` reproduces the seed
-launch/serve.py loop exactly (a length-L prompt costs L steps); ``chunk=C``
-costs ceil(L/C) prefill steps — the step-count reduction is the
-device-independent win (on accelerators, batched steps ~ latency).
+``--workload uniform`` (default) runs the same synthetic request set
+through four ServeEngine configs on the reduced WikiText-2 LM and reports
+batched steps, prefill/decode split, throughput, slot utilization, and
+TTFT. ``chunk=1`` reproduces the seed launch/serve.py loop exactly (a
+length-L prompt costs L steps); ``chunk=C`` costs ceil(L/C) prefill steps
+— the step-count reduction is the device-independent win (on accelerators,
+batched steps ~ latency).
+
+``--workload zipf-prefix`` benchmarks the prefix cache on a
+shared-system-prompt workload: the model is briefly pretrained (so greedy
+argmax has decisive margins), a warm-up pass populates the cache, and a
+measurement pass with the SAME system prompts but FRESH suffixes is served
+warm vs cold. Asserts >= 30% fewer prefill steps and 100% token agreement
+between the cached (FP8-stored states) and uncached runs — the frontend's
+acceptance bar.
 
 The ``--backend`` axis routes the engine's jitted step through the kernel
 dispatch layer's ref or pallas backend (``both`` serves the packed-chunked
@@ -14,18 +24,20 @@ config under each and reports the measured delta + token agreement):
 
     PYTHONPATH=src python benchmarks/bench_serving.py --requests 32 --batch 8
     PYTHONPATH=src python benchmarks/bench_serving.py --backend both
+    PYTHONPATH=src python benchmarks/bench_serving.py --workload zipf-prefix
 """
 from __future__ import annotations
 
 import argparse
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policy import get_policy
 from repro.kernels import dispatch as kd
 from repro.models.lstm_models import WikiText2LM
-from repro.serving import ServeEngine, synthetic_prompts
+from repro.serving import PrefixCache, ServeEngine, synthetic_prompts, zipf_prefix_prompts
 
 
 def run_config(model, params, policy, prompts, *, lanes, chunk, packed, max_new,
@@ -44,6 +56,86 @@ def run_config(model, params, policy, prompts, *, lanes, chunk, packed, max_new,
     return rep, outs
 
 
+def pretrain(model, policy, steps, seed=0):
+    """Brief synthetic pretrain: an untrained model's argmax is a coin
+    flip between 1-ulp-apart logits, which makes token-agreement claims
+    meaningless; ~30 SGD steps give decisive margins."""
+    from repro.data import synthetic
+    from repro.optim import sgd
+    from repro.optim.train_state import init_state, make_train_step
+
+    data = synthetic.wikitext2(batch=32, seq=24, vocab=model.vocab)
+    opt = sgd(0.9)
+    state = init_state(model.init(jax.random.PRNGKey(seed)), opt, policy)
+    step_fn = jax.jit(make_train_step(model.loss, opt, policy, lr=1.0))
+    for _ in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data.batches).items()}
+        state, _ = step_fn(state, batch)
+    return state.params
+
+
+def run_zipf_prefix(args):
+    """Warm prefix cache vs cold path on a shared-system-prompt workload."""
+    model = WikiText2LM(
+        vocab=args.vocab, emb=args.d_model, hidden=args.d_model, n_layers=2
+    )
+    policy = get_policy("floatsd8_table6")
+    print(f"pretraining {args.pretrain_steps} steps for decisive argmax ...")
+    params = pretrain(model, policy, args.pretrain_steps, seed=args.seed)
+
+    wkw = dict(
+        n_prefixes=4, prefix_len=3 * args.chunk, suffix_lo=2,
+        suffix_hi=args.chunk + 2, prefix_seed=args.seed,
+    )
+    warmup = zipf_prefix_prompts(
+        args.requests, args.vocab, np.random.default_rng(args.seed + 1), **wkw
+    )
+    measure = zipf_prefix_prompts(
+        args.requests, args.vocab, np.random.default_rng(args.seed + 2), **wkw
+    )
+
+    def serve(prompts, cache):
+        engine = ServeEngine(
+            model, params, policy, lanes=args.batch, chunk=args.chunk,
+            prefix_cache=cache,
+        )
+        reqs = engine.submit_all([p.copy() for p in prompts], max_new=args.max_new)
+        metrics = engine.run()
+        outs = [tuple(r.out) for r in sorted(reqs, key=lambda r: r.rid)]
+        return metrics.report(), outs
+
+    cold, cold_outs = serve(measure, None)
+    cache = PrefixCache(block=args.chunk)
+    serve(warmup, cache)  # populate: same system prompts, different suffixes
+    warm, warm_outs = serve(measure, cache)
+
+    hdr = (f"{'config':28} {'steps':>6} {'prefill':>8} {'decode':>7} "
+           f"{'prompt tok':>11} {'saved':>6} {'hit rate':>9} {'ttft ms':>8}")
+    print(hdr)
+    print("-" * len(hdr))
+    for name, r in (("cold (no cache)", cold), ("warm (FP8 prefix cache)", warm)):
+        print(
+            f"{name:28} {r['steps']:>6} {r['prefill_steps']:>8} "
+            f"{r['decode_steps']:>7} {r['prompt_tokens']:>11} "
+            f"{r['prefill_tokens_saved']:>6} {r['cache_hit_rate']:>9.0%} "
+            f"{r['ttft_mean_s']*1e3:>8.0f}"
+        )
+    print("cache:", cache.stats())
+
+    agree = sum(a == b for a, b in zip(cold_outs, warm_outs)) / len(cold_outs)
+    saved_frac = 1 - warm["prefill_steps"] / max(cold["prefill_steps"], 1)
+    print(
+        f"prefill steps: {warm['prefill_steps']} warm vs "
+        f"{cold['prefill_steps']} cold ({saved_frac:.0%} fewer) | "
+        f"token agreement cached-vs-uncached: {agree:.0%}"
+    )
+    ok = saved_frac >= 0.30 and agree == 1.0
+    print("->", "PASS" if ok else "FAIL",
+          "(need >= 30% fewer prefill steps and 100% agreement)")
+    if not ok:
+        raise SystemExit(1)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=32)
@@ -53,12 +145,28 @@ def main():
     ap.add_argument("--vocab", type=int, default=4000)
     ap.add_argument("--d-model", type=int, default=192)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workload", choices=["uniform", "zipf-prefix"],
+                    default="uniform",
+                    help="uniform: the chunked/packed config grid; "
+                         "zipf-prefix: shared-system-prompt workload, warm "
+                         "FP8 prefix cache vs cold path with a token-"
+                         "agreement assert")
+    ap.add_argument("--pretrain-steps", type=int, default=200,
+                    help="zipf-prefix only: brief pretrain so greedy argmax "
+                         "margins are decisive (at the default reduced "
+                         "scale, 200 steps separates top-2 logits well past "
+                         "the FP8 state-rounding perturbation; 30 is NOT "
+                         "enough)")
     ap.add_argument("--backend", choices=["auto", "ref", "pallas", "both"],
                     default="auto",
                     help="kernel dispatch backend for the serve step; "
                          "'both' also serves the packed-chunked config under "
                          "ref AND pallas and reports the measured delta")
     args = ap.parse_args()
+
+    if args.workload == "zipf-prefix":
+        run_zipf_prefix(args)
+        return
 
     model = WikiText2LM(
         vocab=args.vocab, emb=args.d_model, hidden=args.d_model, n_layers=2

@@ -11,7 +11,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["FP8_E5M2", "FP8_E4M3", "FP16", "quantize_fp8", "act_quant", "grad_quant"]
+__all__ = [
+    "FP8_E5M2", "FP8_E4M3", "FP16",
+    "quantize_fp8", "cast_fp8", "act_quant", "grad_quant",
+]
 
 FP8_E5M2 = jnp.float8_e5m2
 FP8_E4M3 = jnp.float8_e4m3fn
@@ -31,6 +34,15 @@ def quantize_fp8(x: jax.Array, dtype=FP8_E5M2) -> jax.Array:
     m = _MAX[dtype]
     xc = jnp.clip(x.astype(jnp.float32), -m, m)
     return xc.astype(dtype).astype(x.dtype)
+
+
+def cast_fp8(x: jax.Array, dtype=FP8_E5M2) -> jax.Array:
+    """Real (storage) cast x -> fp8, saturating like ``quantize_fp8`` but
+    returning the 1-byte array itself — the format the serving frontend
+    stores cached LSTM states in. ``x.astype(back)`` recovers the
+    fake-quant value exactly (fp8 -> wider float is lossless)."""
+    m = _MAX[dtype]
+    return jnp.clip(x.astype(jnp.float32), -m, m).astype(dtype)
 
 
 def _make_roundtrip(fwd_dtype, bwd_dtype):

@@ -1,15 +1,19 @@
-"""Batched serving CLI — thin wrapper over ``repro.serving.ServeEngine``.
+"""Batched serving CLI — thin wrapper over ``repro.serving``.
 
 Continuous batching over a fixed pool of decode lanes, chunked prefill,
-FIFO or shortest-prompt-first admission, and weights served from packed
-uint8 FloatSD8 codes (1 byte/weight, decode-at-use — the paper PE's
-deployment format). See src/repro/serving/README.md for the engine
-lifecycle.
+FIFO / shortest-prompt-first / earliest-deadline-first admission, and
+weights served from packed uint8 FloatSD8 codes (1 byte/weight,
+decode-at-use — the paper PE's deployment format). ``--frontend`` layers
+the multi-tenant request router and the FP8 LSTM-state prefix cache on
+top: engine replicas share one cache, requests carry tenants, and the
+report includes hit rates and per-tenant latency percentiles. See
+src/repro/serving/README.md for the engine and frontend lifecycles.
 
   PYTHONPATH=src python -m repro.launch.serve --requests 32 --batch 8 \
       --max-new 32 --policy floatsd8_table6            # reduced config
   ... --full                                            # paper-scale 85M LM
   ... --chunk 1 --dense                                 # seed-equivalent loop
+  ... --frontend --replicas 2 --workload zipf-prefix    # router + cache
 """
 from __future__ import annotations
 
@@ -21,14 +25,21 @@ import numpy as np
 from ..configs.base import get_config
 from ..core.policy import get_policy
 from ..models import build
-from ..serving import ADMISSION_POLICIES, ServeEngine, synthetic_prompts
+from ..serving import (
+    ADMISSION_POLICIES,
+    PrefixCache,
+    Router,
+    ServeEngine,
+    synthetic_prompts,
+    zipf_prefix_prompts,
+)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="lstm_wikitext2")
     ap.add_argument("--policy", default="floatsd8_table6")
-    ap.add_argument("--batch", type=int, default=8, help="decode lanes")
+    ap.add_argument("--batch", type=int, default=8, help="decode lanes per engine")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--chunk", type=int, default=8,
@@ -39,6 +50,23 @@ def main():
                          "instead of packed uint8 codes")
     ap.add_argument("--full", action="store_true", help="paper-scale model")
     ap.add_argument("--seed", type=int, default=0)
+    # frontend (router + prefix cache) options
+    ap.add_argument("--frontend", action="store_true",
+                    help="serve through the multi-tenant router with a "
+                         "shared FP8 LSTM-state prefix cache")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="frontend: engine replicas behind the router")
+    ap.add_argument("--cache-mb", type=float, default=64.0,
+                    help="frontend: prefix-cache byte budget (MiB); 0 "
+                         "disables the cache")
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="frontend: requests round-robin over this many "
+                         "synthetic tenants")
+    ap.add_argument("--workload", choices=["uniform", "zipf-prefix"],
+                    default="uniform",
+                    help="uniform prompt lengths, or shared-system-prompt "
+                         "(zipf over a small prefix pool — what the prefix "
+                         "cache is for)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -53,16 +81,68 @@ def main():
     rng = np.random.default_rng(args.seed)
     params = model.init(jax.random.PRNGKey(args.seed))
 
-    engine = ServeEngine(
-        model,
-        params,
-        policy,
+    if args.workload == "zipf-prefix":
+        prompts = zipf_prefix_prompts(
+            args.requests, cfg.vocab, rng, prefix_len=3 * args.chunk,
+            prefix_seed=args.seed,
+        )
+    else:
+        prompts = synthetic_prompts(args.requests, cfg.vocab, rng)
+
+    engine_kw = dict(
         lanes=args.batch,
         chunk=args.chunk,
-        admission=args.admission,
         packed=not args.dense,
         cache_len=None if cfg.family == "lstm" else 2048,
     )
+
+    if args.frontend:
+        if cfg.family != "lstm":
+            # Non-LSTM caches are not lane-major, so replicas cannot re-arm
+            # lanes (at most `lanes` requests per engine) and there is no
+            # constant-size state to prefix-cache; failing here beats a
+            # RuntimeError mid-drain after partial service.
+            raise SystemExit(
+                "--frontend serves LSTM-family models (continuous lane "
+                "re-arming + prefix cache need lane-major recurrent state); "
+                f"arch {args.arch!r} is family {cfg.family!r} — use the "
+                "plain engine path instead"
+            )
+        cache = (
+            PrefixCache(budget_bytes=int(args.cache_mb * 2**20), block=args.chunk)
+            if args.cache_mb > 0
+            else None
+        )
+        router = Router.build(
+            model, params, policy,
+            replicas=args.replicas,
+            prefix_cache=cache,
+            router_kw=dict(admission=args.admission, max_queue=args.requests),
+            **engine_kw,
+        )
+        for i, p in enumerate(prompts):
+            router.submit(p, max_new=args.max_new, tenant=f"tenant{i % args.tenants}")
+        router.drain()
+        rep = router.report()
+        print(
+            f"frontend: {rep['requests']} requests over {rep['replicas']} "
+            f"replica(s), {rep['steps']} steps "
+            f"({rep['prefill_steps']} prefill / {rep['decode_steps']} decode), "
+            f"cache hit rate {rep['cache_hit_rate']:.0%} "
+            f"({rep['prefill_tokens_saved']} prefill tok saved), "
+            f"rejections {rep['rejections']}",
+            flush=True,
+        )
+        for tenant, t in rep["tenants"].items():
+            print(
+                f"  {tenant}: {t['completed']} done / {t['tokens']} tok | "
+                f"ttft p95 {t.get('ttft_p95_s', 0.0)*1e3:.0f}ms | "
+                f"latency p95 {t.get('latency_p95_s', 0.0)*1e3:.0f}ms",
+                flush=True,
+            )
+        return
+
+    engine = ServeEngine(model, params, policy, admission=args.admission, **engine_kw)
     if engine.store is not None:
         s = engine.store
         print(
@@ -71,9 +151,7 @@ def main():
             f"({s.compression:.2f}x smaller, {s.n_packed} tensors packed)",
             flush=True,
         )
-    engine.submit_all(
-        synthetic_prompts(args.requests, cfg.vocab, rng), max_new=args.max_new
-    )
+    engine.submit_all(prompts, max_new=args.max_new)
     metrics = engine.run()
     print(metrics.format(), flush=True)
 

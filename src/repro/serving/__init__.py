@@ -4,15 +4,24 @@ See README.md in this directory for the engine lifecycle and the packed
 weight memory model.
 """
 from .engine import Lane, ServeEngine
-from .metrics import RequestRecord, ServeMetrics
-from .scheduler import ADMISSION_POLICIES, Request, Scheduler, synthetic_prompts
+from .frontend import AsyncRouter, PrefixCache, Router, Ticket
+from .metrics import RequestRecord, ServeMetrics, tenant_summary
+from .scheduler import (
+    ADMISSION_POLICIES,
+    Request,
+    Scheduler,
+    synthetic_prompts,
+    zipf_prefix_prompts,
+)
 from .state_pool import StatePool, masked_reset
 from .weight_store import PackedTensor, WeightStore, pack_tree, tree_nbytes, unpack_tree
 
 __all__ = [
     "ServeEngine", "Lane",
-    "ServeMetrics", "RequestRecord",
-    "Scheduler", "Request", "ADMISSION_POLICIES", "synthetic_prompts",
+    "ServeMetrics", "RequestRecord", "tenant_summary",
+    "Scheduler", "Request", "ADMISSION_POLICIES",
+    "synthetic_prompts", "zipf_prefix_prompts",
     "StatePool", "masked_reset",
+    "PrefixCache", "Router", "AsyncRouter", "Ticket",
     "WeightStore", "PackedTensor", "pack_tree", "unpack_tree", "tree_nbytes",
 ]

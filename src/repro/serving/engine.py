@@ -66,6 +66,7 @@ class ServeEngine:
         packed: bool = True,
         cache_len: int | None = None,
         greedy: bool = True,
+        prefix_cache=None,
     ):
         if chunk < 1:
             raise ValueError("chunk must be >= 1")
@@ -116,6 +117,16 @@ class ServeEngine:
             hasattr(l, "ndim") and l.ndim >= 1 and l.shape[0] == lanes
             for l in jax.tree_util.tree_leaves(self.pool.caches)
         )
+        # Optional frontend prefix cache (duck-typed: lookup / insert /
+        # wants / wants_snapshot — see serving/frontend/prefix_cache.py).
+        # Injection overwrites a lane's whole state slice, which only makes
+        # sense when every cache leaf is lane-major.
+        if prefix_cache is not None and not self._rearmable:
+            raise ValueError(
+                "prefix caching requires a per-lane resettable (lane-major) "
+                "state pool — an LSTM-family model with lengths support"
+            )
+        self.prefix_cache = prefix_cache
         self._lanes: list[Lane | None] = [None] * lanes
         self._lane_used = [False] * lanes
         self._reset = np.zeros((lanes,), np.int32)
@@ -154,18 +165,58 @@ class ServeEngine:
         self._step = jax.jit(_step, donate_argnums=(3,))
 
     # -- request intake --------------------------------------------------
-    def submit(self, prompt, max_new: int = 32) -> Request:
-        req = Request(rid=self._rid, prompt=np.asarray(prompt), max_new=max_new)
+    def submit(
+        self,
+        prompt,
+        max_new: int = 32,
+        tenant: str = "default",
+        deadline: float | None = None,
+    ) -> Request:
+        req = Request(
+            rid=self._rid,
+            prompt=np.asarray(prompt),
+            max_new=max_new,
+            tenant=tenant,
+            deadline=deadline,
+        )
         self._rid += 1
+        return self.enqueue(req)
+
+    def enqueue(self, req: Request) -> Request:
+        """Queue an externally constructed Request (the router path — the
+        frontend owns rids/tenants/deadlines and load-balances across
+        engine replicas)."""
         return self.scheduler.submit(req)
 
     def submit_all(self, prompts: Iterable, max_new: int = 32) -> list[Request]:
         return [self.submit(p, max_new) for p in prompts]
 
+    # -- router-facing load introspection --------------------------------
+    @property
+    def free_lanes(self) -> int:
+        return sum(l is None for l in self._lanes)
+
+    @property
+    def active_lanes(self) -> int:
+        return self.lanes_n - self.free_lanes
+
+    def has_work(self) -> bool:
+        return self.active_lanes > 0 or bool(self.scheduler)
+
+    @property
+    def load(self) -> float:
+        """Active lanes + backlog, per lane — the router's least-loaded
+        balancing key."""
+        return (self.active_lanes + len(self.scheduler)) / self.lanes_n
+
     # -- lane lifecycle --------------------------------------------------
     def _arm_free_lanes(self) -> None:
+        now = time.monotonic()
         for i in range(self.lanes_n):
-            if self._lanes[i] is None and self.scheduler:
+            # `while`, not `if`: a full prefix-cache hit with max_new == 1
+            # retires at admission time without consuming a device step, so
+            # the same slot can drain several queued requests in a row.
+            while self._lanes[i] is None and self.scheduler:
                 if self._lane_used[i] and not self._rearmable:
                     raise RuntimeError(
                         "cannot re-arm a used lane: this model's cache has "
@@ -174,13 +225,52 @@ class ServeEngine:
                         "engine (or use an LSTM-family model)"
                     )
                 req = self.scheduler.pop()
-                self._lanes[i] = Lane(req)
+                lane = Lane(req)
+                self._lanes[i] = lane
                 self._lane_used[i] = True
-                self._reset[i] = 1
+                hit = None
+                if self.prefix_cache is not None:
+                    hit = self.prefix_cache.lookup(req.prompt)
+                    self.metrics.on_cache_lookup(
+                        hit=hit is not None,
+                        full=hit is not None and hit.full,
+                        saved=hit.match_len if hit is not None else 0,
+                    )
+                if hit is None:
+                    self._reset[i] = 1  # zeroed inside the next jitted step
+                    break
+                # Inject the cached prefix state instead of resetting: the
+                # snapshot overwrites every leaf of the lane slice, and a
+                # masked reset afterwards would zero it again.
+                self.pool.inject(i, hit.states)
+                self._reset[i] = 0
+                lane.pos = hit.match_len
+                if hit.full:
+                    # Whole prompt cached: the stored greedy continuation IS
+                    # the first generated token — prefill is skipped
+                    # entirely and TTFT costs zero device steps.
+                    self._emit(lane, hit.next_token, now, first=True)
+                    if req.done:
+                        self._retire(i)
+                        continue
+                break
 
     def _retire(self, i: int) -> None:
         lane = self._lanes[i]
-        self.metrics.on_retire(lane.req)
+        req = lane.req
+        if self.prefix_cache is not None and len(req.out) >= 2:
+            # The lane's final state summarizes prompt + out[:-1] (the last
+            # generated token was emitted but never fed back); out[-1] is
+            # its exact greedy continuation. Serves resubmissions that
+            # extend this conversation.
+            key = np.concatenate(
+                [req.prompt, np.asarray(req.out[:-1], np.int32)]
+            )
+            if self.prefix_cache.wants(key, len(key)):
+                self.prefix_cache.insert(
+                    key, self.pool.extract(i), next_token=req.out[-1]
+                )
+        self.metrics.on_retire(req)
         self._lanes[i] = None
 
     # -- the batched step ------------------------------------------------
@@ -238,6 +328,7 @@ class ServeEngine:
             any_prefill=any_prefill,
         )
         now = time.monotonic()
+        cache = self.prefix_cache
         for i in active:
             lane = self._lanes[i]
             if lane.prefilling:
@@ -247,6 +338,25 @@ class ServeEngine:
                     # final prompt chunk consumed: this step's last valid
                     # logit is the first generated token
                     self._emit(lane, int(nxt[i]), now, first=True)
+                    if cache is not None and cache.wants(
+                        lane.req.prompt, lane.req.prompt_len
+                    ):
+                        # state after the whole prompt + its exact greedy
+                        # continuation -> future identical prompts skip
+                        # prefill entirely
+                        cache.insert(
+                            lane.req.prompt,
+                            self.pool.extract(i),
+                            next_token=int(nxt[i]),
+                        )
+                elif cache is not None and cache.wants_snapshot(
+                    lane.req.prompt, lane.pos
+                ):
+                    # block-boundary snapshot mid-prefill: what makes
+                    # *shared-prefix* (not just identical) prompts hit
+                    cache.insert(
+                        lane.req.prompt[: lane.pos], self.pool.extract(i)
+                    )
             else:
                 self._emit(lane, int(nxt[i]), now)
             if lane.req.done:

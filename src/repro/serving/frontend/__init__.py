@@ -1,0 +1,17 @@
+"""repro.serving.frontend — multi-tenant request routing with an FP8
+LSTM-state prefix cache.
+
+The batching engine (serving/engine.py) turns requests into device steps;
+this package turns *traffic* into requests: bounded-queue admission with
+deadline awareness, least-loaded dispatch across engine replicas,
+streaming token callbacks, per-tenant accounting, and a shared prefix
+cache that stores per-layer (h, c) snapshots in FP8 so repeated prompt
+prefixes skip their prefill. See serving/README.md §Frontend.
+"""
+from .prefix_cache import CacheEntry, CacheHit, PrefixCache
+from .router import AsyncRouter, Router, Ticket
+
+__all__ = [
+    "PrefixCache", "CacheEntry", "CacheHit",
+    "Router", "AsyncRouter", "Ticket",
+]

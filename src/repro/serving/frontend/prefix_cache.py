@@ -1,0 +1,258 @@
+"""FP8 LSTM-state prefix cache: token-trie keyed (h, c) snapshots.
+
+The recurrent formulation gives LSTM serving a property transformer KV
+caches lack: the per-layer ``(h, c)`` state after consuming a prefix is a
+**constant-size** summary of that entire prefix. Caching it makes
+repeated-prefix prefill free — inject the snapshot and start at the match
+point — with a footprint of O(layers * hidden) bytes per entry instead of
+O(prefix_len * layers * hidden).
+
+Storage format. Snapshots are quantized to real FP8 arrays on insert
+(``core.fp8.cast_fp8``, saturating) and dequantized back to the state
+pool's dtypes on hit. Shin et al. and Ott et al. (PAPERS.md) show LSTM
+states tolerate aggressive quantization; e4m3 (default) carries a 3-bit
+mantissa, so each stored component has relative rounding error <= 2^-4
+(6.25%), and the recurrent gates (sigmoid-bounded, forget-decayed)
+contract the perturbation as decoding proceeds. Exactness where it
+matters: a *full* hit replays the stored ``next_token`` — recorded from
+the unperturbed run — so a fully cached prompt's first token is exact and
+its TTFT is zero device steps.
+
+Keying. Entries live in a token trie; ``lookup(tokens)`` walks the query
+and returns the deepest stored snapshot whose key is a proper prefix of
+the query (or the whole query, if that entry carries a ``next_token``).
+Entries are inserted at three kinds of positions:
+  * block boundaries during prefill (``wants_snapshot``: every ``block``
+    tokens, only where the trie has no entry yet) — these are what make
+    *shared-system-prompt* workloads hit, since two prompts sharing a
+    prefix diverge at arbitrary points but agree on block boundaries
+    below their divergence;
+  * end of prefill (key = the whole prompt, with the first generated
+    token as ``next_token``);
+  * retire (key = prompt + generated[:-1], ``next_token`` = last
+    generated token) — serves "continue this conversation" resubmissions.
+
+Eviction is LRU under ``budget_bytes`` (the FP8 payload bytes); lookup
+refreshes recency. The cache is a plain host-side object shared by every
+engine replica behind a router.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core import fp8
+
+__all__ = ["PrefixCache", "CacheEntry", "CacheHit"]
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    """One stored snapshot: FP8 state + the greedy continuation token."""
+
+    key: tuple  # the token prefix this state summarizes (the LRU key)
+    states_fp8: Any  # pytree of host fp8 arrays (same treedef as a lane)
+    dtypes: Any  # pytree of original leaf dtypes (restored on hit)
+    next_token: Optional[int]  # greedy argmax after this prefix, if known
+    nbytes: int
+
+    @property
+    def length(self) -> int:
+        return len(self.key)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheHit:
+    match_len: int
+    states: Any  # dequantized pytree, ready for StatePool.inject
+    next_token: Optional[int]  # set iff match_len == query length
+
+    @property
+    def full(self) -> bool:
+        return self.next_token is not None
+
+
+class _TrieNode:
+    __slots__ = ("children", "entry")
+
+    def __init__(self):
+        self.children: dict[int, _TrieNode] = {}
+        self.entry: Optional[CacheEntry] = None
+
+
+class PrefixCache:
+    def __init__(
+        self,
+        budget_bytes: int = 64 * 2**20,
+        state_dtype=fp8.FP8_E4M3,
+        block: int = 8,
+    ):
+        if block < 1:
+            raise ValueError("block must be >= 1")
+        self.budget_bytes = int(budget_bytes)
+        self.state_dtype = state_dtype
+        self.block = block
+        self._root = _TrieNode()
+        # LRU order: key tuple -> CacheEntry, oldest first
+        self._lru: collections.OrderedDict = collections.OrderedDict()
+        self.nbytes = 0
+        self.hits = 0
+        self.full_hits = 0
+        self.misses = 0
+        self.insertions = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    # -- lookup ----------------------------------------------------------
+    def lookup(self, tokens) -> Optional[CacheHit]:
+        """Deepest usable snapshot for this prompt, or None.
+
+        An entry at the *full* prompt length is usable only if it carries a
+        ``next_token`` (there is no way to obtain the first generated token
+        from a bare state without re-feeding a prompt token, which would
+        corrupt the recurrence); otherwise the deepest strictly-shorter
+        entry wins.
+        """
+        toks = [int(t) for t in np.asarray(tokens).reshape(-1)]
+        node = self._root
+        best: Optional[tuple[int, CacheEntry]] = None
+        touched: list[CacheEntry] = []  # every entry on the matched path is hot
+        depth = 0
+        for t in toks:
+            node = node.children.get(t)
+            if node is None:
+                break
+            depth += 1
+            e = node.entry
+            if e is not None:
+                touched.append(e)
+                if depth < len(toks) or e.next_token is not None:
+                    best = (depth, e)
+        for e in touched:  # refresh recency even for unusable matches
+            self._lru.move_to_end(e.key)
+        if best is None:
+            self.misses += 1
+            return None
+        match_len, entry = best
+        self.hits += 1
+        full = match_len == len(toks)
+        if full:
+            self.full_hits += 1
+        states = jax.tree_util.tree_map(
+            lambda q, dt: jnp.asarray(q).astype(dt), entry.states_fp8, entry.dtypes
+        )
+        return CacheHit(
+            match_len=match_len,
+            states=states,
+            next_token=entry.next_token if full else None,
+        )
+
+    # -- insertion policy ------------------------------------------------
+    def wants_snapshot(self, tokens, pos: int) -> bool:
+        """Should the engine bother extracting a mid-prefill snapshot at
+        position ``pos``? Block-aligned positions with no entry yet. Host
+        trie walk only — cheap enough to call once per prefill chunk."""
+        if pos < self.block or pos % self.block != 0:
+            return False
+        return self._entry_at(tokens, pos) is None
+
+    def wants(self, tokens, pos: int) -> bool:
+        """Like wants_snapshot but for semantic boundaries (end of prompt,
+        retire) where any position is worth keeping — and where the caller
+        knows the greedy continuation, so an existing next_token-less block
+        snapshot at this key is worth upgrading (otherwise a prompt whose
+        length coincides with a snapshotted block boundary could never gain
+        the full-hit fast path)."""
+        if pos < 1:
+            return False
+        e = self._entry_at(tokens, pos)
+        return e is None or e.next_token is None
+
+    def _entry_at(self, tokens, pos: int) -> Optional[CacheEntry]:
+        node = self._root
+        for t in np.asarray(tokens).reshape(-1)[:pos]:
+            node = node.children.get(int(t))
+            if node is None:
+                return None
+        return node.entry
+
+    # -- insert / evict --------------------------------------------------
+    def insert(self, tokens, states, next_token: Optional[int] = None) -> None:
+        """Store the state reached after consuming ``tokens``.
+
+        Quantizes to FP8 and copies to host immediately — the source arrays
+        may alias the engine's donated state slab, which the next jitted
+        step invalidates. Re-inserting an existing key refreshes it (and
+        may upgrade a block snapshot with a ``next_token``).
+        """
+        toks = tuple(int(t) for t in np.asarray(tokens).reshape(-1))
+        if not toks:
+            return
+        states_fp8 = jax.tree_util.tree_map(
+            lambda x: np.asarray(fp8.cast_fp8(jnp.asarray(x), self.state_dtype)),
+            states,
+        )
+        dtypes = jax.tree_util.tree_map(lambda x: jnp.asarray(x).dtype, states)
+        nbytes = sum(
+            a.nbytes for a in jax.tree_util.tree_leaves(states_fp8)
+        ) + len(toks) * 4  # key tokens count against the budget too
+        entry = CacheEntry(
+            key=toks,
+            states_fp8=states_fp8,
+            dtypes=dtypes,
+            next_token=None if next_token is None else int(next_token),
+            nbytes=nbytes,
+        )
+        node = self._root
+        for t in toks:
+            node = node.children.setdefault(t, _TrieNode())
+        if node.entry is not None:  # refresh in place
+            self.nbytes -= node.entry.nbytes
+            self._lru.pop(toks, None)
+        node.entry = entry
+        self._lru[toks] = entry
+        self.nbytes += nbytes
+        self.insertions += 1
+        while self.nbytes > self.budget_bytes and self._lru:
+            self._evict_lru()
+
+    def _evict_lru(self) -> None:
+        key, entry = self._lru.popitem(last=False)
+        self.nbytes -= entry.nbytes
+        self.evictions += 1
+        # detach the entry, then prune now-empty trie branches
+        path = [self._root]
+        node = self._root
+        for t in key:
+            node = node.children[t]
+            path.append(node)
+        node.entry = None
+        for parent, child_tok, child in zip(
+            reversed(path[:-1]), reversed(key), reversed(path[1:])
+        ):
+            if child.entry is None and not child.children:
+                del parent.children[child_tok]
+            else:
+                break
+
+    # -- introspection ---------------------------------------------------
+    def stats(self) -> dict:
+        lookups = self.hits + self.misses
+        return {
+            "entries": len(self._lru),
+            "nbytes": self.nbytes,
+            "budget_bytes": self.budget_bytes,
+            "hits": self.hits,
+            "full_hits": self.full_hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / lookups if lookups else 0.0,
+            "insertions": self.insertions,
+            "evictions": self.evictions,
+        }

@@ -1,0 +1,380 @@
+"""Multi-tenant async request router over ServeEngine replicas.
+
+The router is the traffic layer the ROADMAP's "millions of users" story
+needs above the batching engine: requests arrive asynchronously, are
+admitted through a bounded queue under a deadline-aware policy, dispatched
+to the least-loaded engine replica, streamed back token by token, and
+accounted per tenant. All engine replicas share one FP8 LSTM-state prefix
+cache (see prefix_cache.py), so a prefix warmed by any replica accelerates
+every replica.
+
+Lifecycle of a submission:
+
+  submit(prompt, tenant, deadline, on_token)
+        │  validation / backpressure: reject-with-reason
+        │  ("queue_full" | "tenant_quota" | "bad_request"), never raises
+        ▼
+  [bounded router queue]  — Scheduler policy: fifo | sjf | edf
+        │  _dispatch(): expired deadlines rejected ("deadline_expired"),
+        │  otherwise enqueued on the least-loaded replica with a free lane
+        ▼
+  engine replica: prefix-cache admission → chunked prefill → decode
+        │  pump() advances every replica one batched step and delivers
+        │  new tokens to each ticket's on_token callback
+        ▼
+  ticket.status == "done"  (tokens in ticket.tokens)
+
+``Router.pump()`` is non-blocking-style single-stepping (drive it from any
+event loop); ``drain()`` runs to completion; ``AsyncRouter`` wraps the
+pump in asyncio for genuinely concurrent ``await generate(...)`` /
+``async for tok in stream(...)`` clients.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from ..engine import ServeEngine
+from ..metrics import tenant_summary
+from ..scheduler import Request, Scheduler
+
+__all__ = ["Ticket", "Router", "AsyncRouter"]
+
+REJECT_REASONS = ("queue_full", "tenant_quota", "bad_request", "deadline_expired")
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Caller-facing handle for one submission."""
+
+    rid: int
+    tenant: str
+    status: str  # "queued" | "running" | "done" | "rejected"
+    reason: Optional[str] = None  # set iff rejected
+    req: Optional[Request] = None
+    on_token: Optional[Callable[[int], None]] = None
+    sent: int = 0  # tokens already delivered to on_token
+    t_done: Optional[float] = None
+    abandoned: bool = False  # consumer gone: stop driving on its behalf
+
+    @property
+    def tokens(self) -> list:
+        return list(self.req.out) if self.req is not None else []
+
+    @property
+    def ok(self) -> bool:
+        return self.status != "rejected"
+
+
+class Router:
+    def __init__(
+        self,
+        engines: Sequence[ServeEngine],
+        max_queue: int = 64,
+        admission: str = "edf",
+        tenant_quota: Optional[int] = None,
+        drop_expired: bool = True,
+    ):
+        if not engines:
+            raise ValueError("Router needs at least one engine replica")
+        self.engines = list(engines)
+        self.max_queue = max_queue
+        self.tenant_quota = tenant_quota
+        self.drop_expired = drop_expired
+        self._queue = Scheduler(admission)
+        self._queued_by_tenant: dict[str, int] = {}
+        self._tickets: dict[int, Ticket] = {}
+        self._inflight: dict[int, Ticket] = {}  # queued or running
+        self._rid = 0
+        self.tenants: dict[str, dict] = {}  # per-tenant accounting
+        self.rejections: dict[str, int] = {}
+        for e in self.engines:
+            if e.metrics.t_start is None:
+                e.metrics.start()
+
+    @classmethod
+    def build(
+        cls,
+        model,
+        params,
+        policy,
+        replicas: int = 1,
+        prefix_cache=None,
+        router_kw: Optional[dict] = None,
+        **engine_kw,
+    ) -> "Router":
+        """Convenience: `replicas` ServeEngines sharing one prefix cache."""
+        engines = [
+            ServeEngine(model, params, policy, prefix_cache=prefix_cache, **engine_kw)
+            for _ in range(replicas)
+        ]
+        return cls(engines, **(router_kw or {}))
+
+    # -- intake ----------------------------------------------------------
+    def _tenant(self, name: str) -> dict:
+        return self.tenants.setdefault(
+            name,
+            {"submitted": 0, "rejected": 0, "completed": 0, "tokens": 0},
+        )
+
+    def _reject(self, ticket: Ticket, reason: str) -> Ticket:
+        ticket.status = "rejected"
+        ticket.reason = reason
+        self._tenant(ticket.tenant)["rejected"] += 1
+        self.rejections[reason] = self.rejections.get(reason, 0) + 1
+        self._inflight.pop(ticket.rid, None)
+        self._tickets.pop(ticket.rid, None)  # caller holds the Ticket
+        return ticket
+
+    def submit(
+        self,
+        prompt,
+        max_new: int = 32,
+        tenant: str = "default",
+        deadline: Optional[float] = None,
+        on_token: Optional[Callable[[int], None]] = None,
+    ) -> Ticket:
+        """Non-blocking admission. Always returns a Ticket; overload and
+        malformed input reject with a reason instead of raising."""
+        rid = self._rid
+        self._rid += 1
+        ticket = Ticket(rid=rid, tenant=tenant, status="queued", on_token=on_token)
+        self._tickets[rid] = ticket
+        self._tenant(tenant)["submitted"] += 1
+        if (
+            self.drop_expired
+            and deadline is not None
+            and time.monotonic() > deadline
+        ):
+            return self._reject(ticket, "deadline_expired")  # dead on arrival
+        if len(self._queue) >= self.max_queue:
+            # before bouncing a serviceable request, drop queued work whose
+            # deadline already passed — under saturation the backlog is
+            # where requests expire, and dead work must not hold the slots
+            # that backpressure is rationing
+            self._purge_expired()
+        if len(self._queue) >= self.max_queue:
+            return self._reject(ticket, "queue_full")
+        if (
+            self.tenant_quota is not None
+            and self._queued_by_tenant.get(tenant, 0) >= self.tenant_quota
+        ):
+            return self._reject(ticket, "tenant_quota")
+        try:
+            req = Request(
+                rid=rid,
+                prompt=np.asarray(prompt),
+                max_new=max_new,
+                tenant=tenant,
+                deadline=deadline,
+            )
+        except (ValueError, TypeError):
+            return self._reject(ticket, "bad_request")
+        ticket.req = req
+        self._queue.submit(req)
+        self._queued_by_tenant[tenant] = self._queued_by_tenant.get(tenant, 0) + 1
+        self._inflight[rid] = ticket
+        return ticket
+
+    # -- dispatch / progress ---------------------------------------------
+    def _purge_expired(self) -> None:
+        """Drop queued requests whose deadline has passed (reject with
+        "deadline_expired"). O(queue), so only called when the queue is
+        actually under pressure."""
+        if not self.drop_expired:
+            return
+        now = time.monotonic()
+        keep = []
+        while self._queue:
+            req = self._queue.pop()
+            self._queued_by_tenant[req.tenant] -= 1
+            if req.deadline is not None and now > req.deadline:
+                self._reject(self._tickets[req.rid], "deadline_expired")
+            else:
+                keep.append(req)
+        for req in keep:  # re-submit preserves t_submit and policy order
+            self._queue.submit(req)
+            self._queued_by_tenant[req.tenant] += 1
+
+    def _dispatch(self) -> None:
+        while self._queue:
+            # An engine can absorb at most free_lanes requests before its
+            # next step arms them; past that, handing it more would just
+            # move the backlog into its internal FIFO — where the router's
+            # admission policy, deadline dropping, and max_queue
+            # backpressure no longer apply. Keep the excess here.
+            free = [e for e in self.engines if e.free_lanes > len(e.scheduler)]
+            if not free:
+                return
+            req = self._queue.pop()
+            self._queued_by_tenant[req.tenant] -= 1
+            ticket = self._tickets[req.rid]
+            if (
+                self.drop_expired
+                and req.deadline is not None
+                and time.monotonic() > req.deadline
+            ):
+                self._reject(ticket, "deadline_expired")
+                continue
+            # least-loaded balancing; ties go to the lowest replica index
+            eng = min(free, key=lambda e: (e.load, self.engines.index(e)))
+            eng.enqueue(req)
+            ticket.status = "running"
+
+    def _deliver(self) -> None:
+        for ticket in list(self._inflight.values()):
+            req = ticket.req
+            if len(req.out) > ticket.sent:
+                if ticket.on_token is not None:
+                    for tok in req.out[ticket.sent :]:
+                        ticket.on_token(tok)
+                ticket.sent = len(req.out)
+            if req.done:
+                ticket.status = "done"
+                ticket.t_done = time.monotonic()
+                acct = self._tenant(ticket.tenant)
+                acct["completed"] += 1
+                acct["tokens"] += len(req.out)
+                del self._inflight[ticket.rid]
+                # drop our reference: a long-lived router must not retain
+                # every finished request's tokens (the caller has the
+                # Ticket; aggregates live in self.tenants / engine metrics)
+                self._tickets.pop(ticket.rid, None)
+
+    def pump(self) -> bool:
+        """One scheduling round: dispatch queued work, advance every busy
+        replica one batched step, deliver new tokens. Returns True while
+        there is anything left to do."""
+        self._dispatch()
+        progressed = False
+        for e in self.engines:
+            if e.has_work():
+                progressed = e.step_once() or progressed
+        self._deliver()
+        return progressed or bool(self._queue) or bool(self._inflight)
+
+    def drain(self) -> None:
+        """Run to completion (the synchronous batch entry point)."""
+        while self.pump():
+            pass
+        for e in self.engines:
+            e.metrics.stop()
+
+    # -- reporting -------------------------------------------------------
+    def report(self) -> dict:
+        """Aggregate across replicas + router-level accounting."""
+        reps = [e.metrics.report() for e in self.engines]
+        records = [r for e in self.engines for r in e.metrics.records]
+        summed = {
+            k: sum(r[k] for r in reps)
+            for k in (
+                "requests", "steps", "prefill_steps", "decode_steps",
+                "emitted_tokens", "prompt_tokens", "cache_lookups",
+                "cache_hits", "cache_full_hits", "prefill_tokens_saved",
+            )
+        }
+        summed["cache_hit_rate"] = (
+            summed["cache_hits"] / summed["cache_lookups"]
+            if summed["cache_lookups"]
+            else 0.0
+        )
+        ttfts = np.array([r.ttft for r in records])
+        summed["ttft_mean_s"] = float(ttfts.mean()) if ttfts.size else 0.0
+        summed["ttft_p95_s"] = (
+            float(np.percentile(ttfts, 95)) if ttfts.size else 0.0
+        )
+        summed["replicas"] = len(self.engines)
+        summed["queued"] = len(self._queue)
+        summed["rejections"] = dict(self.rejections)
+        percentiles = tenant_summary(records)  # one pass groups all tenants
+        summed["tenants"] = {
+            t: {**acct, **percentiles.get(t, {})}
+            for t, acct in sorted(self.tenants.items())
+        }
+        return summed
+
+
+class AsyncRouter:
+    """asyncio facade: concurrent coroutines share one pump (serialized by
+    a lock, executed off-loop in a worker thread so the event loop stays
+    responsive while the device steps).
+
+    The Router itself is NOT thread-safe; every mutation — submissions
+    included — must happen under ``self._lock`` so a submit on the event
+    loop can never interleave with a pump running in the worker thread
+    (heapq operations are multi-step and would corrupt the queue)."""
+
+    def __init__(self, router: Router):
+        self.router = router
+        self._lock = asyncio.Lock()
+
+    async def _drive(self, ticket: Ticket) -> Ticket:
+        # NOT cancelled from outside: a cancel while the pump thread runs
+        # would release the lock mid-pump and let a concurrent submit race
+        # it. Early consumers set ticket.abandoned instead, bounding the
+        # wait at one pump (one batched engine step), after which the loop
+        # exits between pumps.
+        while ticket.status not in ("done", "rejected") and not ticket.abandoned:
+            async with self._lock:
+                if ticket.status in ("done", "rejected") or ticket.abandoned:
+                    break
+                fut = asyncio.ensure_future(asyncio.to_thread(self.router.pump))
+                try:
+                    await asyncio.shield(fut)
+                except asyncio.CancelledError:
+                    # cancelled (e.g. the caller cancelled generate()):
+                    # the pump thread is still mutating the router — wait
+                    # for it before the lock is released, THEN propagate
+                    await fut
+                    raise
+        return ticket
+
+    async def generate(self, prompt, **kw) -> Ticket:
+        """Submit and await completion; returns the finished Ticket (check
+        ``ticket.ok`` / ``ticket.reason`` for rejection)."""
+        async with self._lock:
+            ticket = self.router.submit(prompt, **kw)
+        if ticket.status == "rejected":
+            return ticket
+        return await self._drive(ticket)
+
+    async def stream(self, prompt, **kw):
+        """Async generator of tokens as they are produced.
+
+        If the consumer exits early (break / connection drop), the ticket
+        is marked abandoned: this coroutine stops driving it within one
+        pump, and the request finishes only if other activity keeps the
+        router pumping. Cancelling the request *inside the engine* (freeing
+        its lane mid-generation) is a ROADMAP item.
+        """
+        loop = asyncio.get_running_loop()
+        q: asyncio.Queue = asyncio.Queue()
+        done = object()  # completion sentinel: no polling, no tail latency
+        async with self._lock:
+            ticket = self.router.submit(
+                prompt,
+                on_token=lambda tok: loop.call_soon_threadsafe(q.put_nowait, tok),
+                **kw,
+            )
+        if ticket.status == "rejected":
+            raise RuntimeError(f"request rejected: {ticket.reason}")
+
+        async def drive():
+            try:
+                await self._drive(ticket)
+            finally:
+                # runs on the event loop AFTER any pending token callbacks
+                # scheduled from the pump thread (loop callbacks are FIFO)
+                q.put_nowait(done)
+
+        task = asyncio.create_task(drive())
+        try:
+            while (tok := await q.get()) is not done:
+                yield tok
+        finally:
+            ticket.abandoned = True
+            await task

@@ -11,7 +11,17 @@ Tracked per batched step (the engine's unit of device work):
   * lane occupancy — fraction of lanes bound to a request per step.
 
 Per retired request: time-to-first-token (submit -> first generated token)
-and total latency (submit -> retire).
+and total latency (submit -> retire), tagged with the request's tenant so
+the frontend can report per-tenant percentiles.
+
+Prefix-cache accounting (populated when the engine is given a cache):
+  * cache_lookups / cache_hits / cache_full_hits — admission-time trie
+    lookups and their outcomes (a full hit skips prefill entirely);
+  * prefill_tokens_saved — prompt tokens NOT consumed because a cached
+    state was injected at the match point.
+
+All summary properties are total functions: with zero steps and zero
+retired requests they return 0.0 (or empty aggregates), never raise.
 """
 from __future__ import annotations
 
@@ -21,7 +31,7 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["RequestRecord", "ServeMetrics"]
+__all__ = ["RequestRecord", "ServeMetrics", "tenant_summary"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,6 +41,34 @@ class RequestRecord:
     new_tokens: int
     ttft: float  # submit -> first generated token (seconds)
     latency: float  # submit -> done (seconds)
+    tenant: str = "default"
+
+
+def _pct(xs: np.ndarray, q: float) -> float:
+    return float(np.percentile(xs, q)) if xs.size else 0.0
+
+
+def tenant_summary(records) -> dict:
+    """Group RequestRecords by tenant -> {tenant: ttft/latency percentiles}.
+    Well-defined (empty dict) when no requests have retired."""
+    by_tenant: dict = {}
+    for r in records:
+        by_tenant.setdefault(r.tenant, []).append(r)
+    out = {}
+    for tenant, rs in sorted(by_tenant.items()):
+        ttfts = np.array([r.ttft for r in rs])
+        lats = np.array([r.latency for r in rs])
+        out[tenant] = {
+            "requests": len(rs),
+            "new_tokens": sum(r.new_tokens for r in rs),
+            "ttft_mean_s": float(ttfts.mean()),
+            "ttft_p50_s": _pct(ttfts, 50),
+            "ttft_p95_s": _pct(ttfts, 95),
+            "latency_mean_s": float(lats.mean()),
+            "latency_p50_s": _pct(lats, 50),
+            "latency_p95_s": _pct(lats, 95),
+        }
+    return out
 
 
 @dataclasses.dataclass
@@ -45,6 +83,10 @@ class ServeMetrics:
     useful_slots: int = 0  # slots that advanced some lane
     lane_slots: int = 0  # sum over steps of B
     active_lane_slots: int = 0  # sum over steps of #active lanes
+    cache_lookups: int = 0  # prefix-cache admission lookups
+    cache_hits: int = 0  # ... that injected a cached state
+    cache_full_hits: int = 0  # ... that skipped prefill entirely
+    prefill_tokens_saved: int = 0  # prompt tokens not consumed due to hits
     records: list = dataclasses.field(default_factory=list)
     t_start: Optional[float] = None
     t_stop: Optional[float] = None
@@ -59,7 +101,7 @@ class ServeMetrics:
     @property
     def elapsed(self) -> float:
         if self.t_start is None:
-            return 0.0
+            return 0.0  # never started; rate summaries report 0, not junk
         end = self.t_stop if self.t_stop is not None else time.monotonic()
         return max(end - self.t_start, 1e-9)
 
@@ -86,14 +128,38 @@ class ServeMetrics:
                 new_tokens=len(req.out),
                 ttft=t1 - t0,
                 latency=now - t0,
+                tenant=getattr(req, "tenant", "default"),
             )
         )
 
-    # -- aggregation -----------------------------------------------------
+    def on_cache_lookup(self, hit: bool, full: bool, saved: int) -> None:
+        self.cache_lookups += 1
+        if hit:
+            self.cache_hits += 1
+            self.prefill_tokens_saved += saved
+        if full:
+            self.cache_full_hits += 1
+
+    # -- aggregation (all total: safe at steps == 0 / no requests) -------
+    @property
+    def slot_util(self) -> float:
+        return self.useful_slots / self.token_slots if self.token_slots else 0.0
+
+    @property
+    def lane_occupancy(self) -> float:
+        return self.active_lane_slots / self.lane_slots if self.lane_slots else 0.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        return self.cache_hits / self.cache_lookups if self.cache_lookups else 0.0
+
+    def per_tenant(self) -> dict:
+        return tenant_summary(self.records)
+
     def report(self) -> dict:
         dt = self.elapsed
-        ttfts = np.array([r.ttft for r in self.records]) if self.records else np.zeros(0)
-        lats = np.array([r.latency for r in self.records]) if self.records else np.zeros(0)
+        ttfts = np.array([r.ttft for r in self.records])
+        lats = np.array([r.latency for r in self.records])
         return {
             "requests": len(self.records),
             "steps": self.steps,
@@ -102,18 +168,26 @@ class ServeMetrics:
             "emitted_tokens": self.emitted,
             "prompt_tokens": self.prompt_tokens,
             "elapsed_s": dt,
-            "gen_tok_per_s": self.emitted / dt,
-            "total_tok_per_s": (self.emitted + self.prompt_tokens) / dt,
-            "lane_occupancy": self.active_lane_slots / max(self.lane_slots, 1),
-            "slot_util": self.useful_slots / max(self.token_slots, 1),
+            "gen_tok_per_s": self.emitted / dt if dt > 0 else 0.0,
+            "total_tok_per_s": (
+                (self.emitted + self.prompt_tokens) / dt if dt > 0 else 0.0
+            ),
+            "lane_occupancy": self.lane_occupancy,
+            "slot_util": self.slot_util,
+            "cache_lookups": self.cache_lookups,
+            "cache_hits": self.cache_hits,
+            "cache_full_hits": self.cache_full_hits,
+            "cache_hit_rate": self.cache_hit_rate,
+            "prefill_tokens_saved": self.prefill_tokens_saved,
             "ttft_mean_s": float(ttfts.mean()) if ttfts.size else 0.0,
-            "ttft_p95_s": float(np.percentile(ttfts, 95)) if ttfts.size else 0.0,
+            "ttft_p95_s": _pct(ttfts, 95),
             "latency_mean_s": float(lats.mean()) if lats.size else 0.0,
+            "latency_p95_s": _pct(lats, 95),
         }
 
     def format(self) -> str:
         r = self.report()
-        return (
+        line = (
             f"served {r['requests']} requests, {r['emitted_tokens']} tokens "
             f"(+{r['prompt_tokens']} prompt) in {r['elapsed_s']:.1f}s | "
             f"{r['gen_tok_per_s']:.1f} gen tok/s, {r['total_tok_per_s']:.1f} total tok/s | "
@@ -121,3 +195,10 @@ class ServeMetrics:
             f"lane occupancy {r['lane_occupancy']:.0%}, slot util {r['slot_util']:.0%} | "
             f"ttft mean {r['ttft_mean_s']*1e3:.0f}ms p95 {r['ttft_p95_s']*1e3:.0f}ms"
         )
+        if r["cache_lookups"]:
+            line += (
+                f" | prefix cache {r['cache_hit_rate']:.0%} hit "
+                f"({r['cache_full_hits']} full), "
+                f"{r['prefill_tokens_saved']} prefill tok saved"
+            )
+        return line

@@ -9,7 +9,10 @@ Admission policies:
   * ``fifo`` — arrival order (fair, default);
   * ``sjf``  — shortest-prompt-first (minimizes mean time-to-first-token
     when prompt lengths are skewed; classic shortest-job-first trade-off:
-    long prompts can starve under sustained load).
+    long prompts can starve under sustained load);
+  * ``edf``  — earliest-deadline-first (deadline-aware admission for the
+    multi-tenant frontend; requests without a deadline sort last, ties
+    break on arrival order).
 """
 from __future__ import annotations
 
@@ -22,9 +25,15 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["Request", "Scheduler", "ADMISSION_POLICIES", "synthetic_prompts"]
+__all__ = [
+    "Request",
+    "Scheduler",
+    "ADMISSION_POLICIES",
+    "synthetic_prompts",
+    "zipf_prefix_prompts",
+]
 
-ADMISSION_POLICIES = ("fifo", "sjf")
+ADMISSION_POLICIES = ("fifo", "sjf", "edf")
 
 
 def synthetic_prompts(n, vocab, rng, lo=4, hi=24):
@@ -37,6 +46,50 @@ def synthetic_prompts(n, vocab, rng, lo=4, hi=24):
     ]
 
 
+def zipf_prefix_prompts(
+    n,
+    vocab,
+    rng,
+    n_prefixes=4,
+    prefix_len=24,
+    suffix_lo=2,
+    suffix_hi=10,
+    alpha=1.1,
+    prefix_seed=None,
+):
+    """Shared-system-prompt workload: each prompt is ``prefix + suffix``
+    where the prefix is drawn zipf(alpha)-style from ``n_prefixes`` fixed
+    "system prompts" of length ``prefix_len`` and the suffix is a fresh
+    uniform sample of length in [suffix_lo, suffix_hi).
+
+    This is the distribution the frontend's LSTM-state prefix cache exists
+    for: the hot prefixes repeat across requests (and across tenants), so a
+    cached ``(h, c)`` snapshot at the prefix boundary turns most of each
+    prompt's prefill into a single state injection. Deterministic for a
+    fixed ``rng``. Pass ``prefix_seed`` to pin the prefix pool
+    independently of ``rng``: a warm-up workload and a measurement workload
+    built with the same ``prefix_seed`` but different ``rng`` seeds share
+    their system prompts while every suffix is fresh — the honest version
+    of a warm cache (see benchmarks/bench_serving.py).
+    """
+    prng = np.random.default_rng(prefix_seed) if prefix_seed is not None else rng
+    prefixes = [
+        prng.integers(0, vocab, prefix_len).astype(np.int32)
+        for _ in range(n_prefixes)
+    ]
+    ranks = np.arange(1, n_prefixes + 1, dtype=np.float64)
+    probs = ranks**-alpha
+    probs /= probs.sum()
+    prompts = []
+    for _ in range(n):
+        k = int(rng.choice(n_prefixes, p=probs))
+        suffix = rng.integers(
+            0, vocab, int(rng.integers(suffix_lo, suffix_hi))
+        ).astype(np.int32)
+        prompts.append(np.concatenate([prefixes[k], suffix]))
+    return prompts
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request plus its lifecycle timestamps."""
@@ -44,6 +97,8 @@ class Request:
     rid: int
     prompt: np.ndarray  # int32 [L], L >= 1
     max_new: int
+    tenant: str = "default"
+    deadline: Optional[float] = None  # absolute time.monotonic() deadline
     out: list = dataclasses.field(default_factory=list)
     t_submit: Optional[float] = None
     t_first: Optional[float] = None  # first generated token (TTFT anchor)
@@ -64,6 +119,12 @@ class Request:
     def done(self) -> bool:
         return len(self.out) >= self.max_new
 
+    def sort_key(self, policy: str) -> float:
+        if policy == "sjf":
+            return float(self.prompt_len)
+        # edf: missing deadline == infinitely lax, served after all dated work
+        return self.deadline if self.deadline is not None else float("inf")
+
 
 class Scheduler:
     """Admission queue. ``submit`` enqueues; ``pop`` yields the next request
@@ -79,11 +140,18 @@ class Scheduler:
         self._seq = itertools.count()
 
     def submit(self, req: Request, now: float | None = None) -> Request:
-        req.t_submit = time.monotonic() if now is None else now
+        # first submission stamps arrival; re-submission (router queue ->
+        # engine queue) must NOT erase the time already spent waiting, or
+        # TTFT/latency would exclude router queueing exactly under the
+        # backlog conditions they exist to expose
+        if req.t_submit is None:
+            req.t_submit = time.monotonic() if now is None else now
         if self.policy == "fifo":
             self._fifo.append(req)
-        else:  # sjf: stable tie-break on arrival order
-            heapq.heappush(self._heap, (req.prompt_len, next(self._seq), req))
+        else:  # sjf/edf: stable tie-break on arrival order
+            heapq.heappush(
+                self._heap, (req.sort_key(self.policy), next(self._seq), req)
+            )
         return req
 
     def pop(self) -> Request | None:

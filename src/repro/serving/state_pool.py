@@ -66,6 +66,28 @@ class StatePool:
         this into its jitted step instead."""
         self.caches = _jit_masked_reset(self.caches, jnp.asarray(mask))
 
+    # -- per-lane snapshot I/O (the prefix-cache hooks) ------------------
+    # Both assume every leaf is lane-major (leading dim == lanes) — the
+    # same invariant the engine's `_rearmable` check establishes before it
+    # enables continuous batching or prefix caching.
+
+    def extract(self, lane: int) -> Any:
+        """Lane `lane`'s state slices as a pytree of [leaf_shape[1:]]
+        arrays (a constant-size summary of everything the lane consumed —
+        the object the frontend's prefix cache stores)."""
+        return jax.tree_util.tree_map(lambda c: c[lane], self.caches)
+
+    def inject(self, lane: int, snapshot: Any) -> None:
+        """Overwrite lane `lane`'s slice of every leaf with `snapshot`
+        (same treedef as one extract()ed lane). Replaces ALL of the lane's
+        state, so an injected lane must NOT also be masked-reset — the
+        reset would zero the injection."""
+        self.caches = jax.tree_util.tree_map(
+            lambda c, s: c.at[lane].set(jnp.asarray(s).astype(c.dtype)),
+            self.caches,
+            snapshot,
+        )
+
     def swap(self, new_caches: Any) -> None:
         """Install the post-step state (called once per engine step)."""
         self.caches = new_caches

@@ -1,0 +1,507 @@
+"""repro.serving.frontend tests: FP8 prefix-cache trie semantics, LRU
+eviction, StatePool inject/extract, router admission/backpressure/
+streaming/balancing, the asyncio facade, and the acceptance bar — a warm
+prefix cache serves a zipf-prefix workload with >= 30% fewer prefill steps
+and 100% token agreement vs the cold path."""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import get_policy
+from repro.models.lstm_models import WikiText2LM
+from repro.serving import (
+    PrefixCache,
+    Router,
+    ServeEngine,
+    StatePool,
+    zipf_prefix_prompts,
+)
+from repro.serving.frontend import AsyncRouter
+
+POLICY = get_policy("floatsd8_table6")
+
+
+def tiny_model():
+    return WikiText2LM(vocab=300, emb=32, hidden=32, n_layers=2)
+
+
+def tiny_params(model, seed=0):
+    return model.init(jax.random.PRNGKey(seed))
+
+
+_TRAINED = {}
+
+
+def trained_params(model):
+    """Briefly-pretrained params (see test_serving.py): decisive argmax
+    margins, which the FP8 state-rounding perturbation must not flip."""
+    key = (model.vocab, model.emb, model.hidden, model.n_layers)
+    if key not in _TRAINED:
+        from repro.data import synthetic
+        from repro.optim import sgd
+        from repro.optim.train_state import init_state, make_train_step
+
+        data = synthetic.wikitext2(batch=32, seq=24, vocab=model.vocab)
+        opt = sgd(0.9)
+        state = init_state(model.init(jax.random.PRNGKey(0)), opt, POLICY)
+        step_fn = jax.jit(make_train_step(model.loss, opt, POLICY, lr=1.0))
+        for _ in range(30):
+            batch = {k: jnp.asarray(v) for k, v in next(data.batches).items()}
+            state, _ = step_fn(state, batch)
+        _TRAINED[key] = state.params
+    return _TRAINED[key]
+
+
+def fake_states(seed=0, hidden=4):
+    """A snapshot-shaped pytree: two layers of (h f32, c f16)."""
+    r = np.random.default_rng(seed)
+    return [
+        {
+            "h": jnp.asarray(r.normal(size=hidden), jnp.float32),
+            "c": jnp.asarray(r.normal(size=hidden), jnp.float16),
+        }
+        for _ in range(2)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# prefix cache
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_longest_prefix_lookup():
+    cache = PrefixCache(block=4)
+    seq = np.arange(20, dtype=np.int32)
+    cache.insert(seq[:8], fake_states(1))
+    cache.insert(seq[:16], fake_states(2))
+
+    hit = cache.lookup(seq)  # both are proper prefixes; deepest wins
+    assert hit is not None and hit.match_len == 16 and hit.next_token is None
+
+    div = seq.copy()
+    div[12] += 1  # diverges inside (8, 16) -> only the 8-entry matches
+    assert cache.lookup(div).match_len == 8
+    assert cache.lookup(np.arange(5, 25, dtype=np.int32)) is None
+    assert cache.stats()["misses"] == 1 and cache.stats()["hits"] == 2
+
+
+def test_prefix_cache_full_hit_requires_next_token():
+    cache = PrefixCache(block=4)
+    seq = np.arange(12, dtype=np.int32)
+    cache.insert(seq[:8], fake_states(1))
+    cache.insert(seq, fake_states(2))  # full-length entry, NO next_token
+
+    # a bare state can't produce the first generated token -> fall back
+    hit = cache.lookup(seq)
+    assert hit.match_len == 8 and not hit.full
+
+    cache.insert(seq, fake_states(2), next_token=42)
+    hit = cache.lookup(seq)
+    assert hit.match_len == 12 and hit.full and hit.next_token == 42
+    # ...but the same entry is NOT a full hit for an extending query
+    hit = cache.lookup(np.concatenate([seq, np.asarray([7], np.int32)]))
+    assert hit.match_len == 12 and hit.next_token is None
+
+
+def test_prefix_cache_fp8_storage_and_dtype_restore():
+    cache = PrefixCache(block=4)
+    states = fake_states(3)
+    cache.insert(np.arange(8, dtype=np.int32), states)
+    entry = next(iter(cache._lru.values()))
+    for leaf in jax.tree_util.tree_leaves(entry.states_fp8):
+        assert leaf.dtype.itemsize == 1  # genuinely stored as 1-byte FP8
+
+    # query extends the key: the entry is a proper prefix -> usable hit
+    hit = cache.lookup(np.arange(9, dtype=np.int32))
+    assert hit.match_len == 8
+    for got, want in zip(
+        jax.tree_util.tree_leaves(hit.states), jax.tree_util.tree_leaves(states)
+    ):
+        assert got.dtype == want.dtype  # pool dtypes restored
+        # e4m3: 3-bit mantissa -> relative error <= 2^-4 (+ subnormal floor)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32),
+            np.asarray(want, np.float32),
+            rtol=2**-4,
+            atol=2**-10,
+        )
+
+
+def test_prefix_cache_lru_eviction_under_byte_budget():
+    probe = fake_states(0, hidden=64)
+    per_entry = sum(
+        l.size for l in jax.tree_util.tree_leaves(probe)
+    ) + 8 * 4  # fp8 payload + key tokens
+
+    def ext(k):  # query = key + one diverging token -> proper-prefix hit
+        return np.concatenate([k, np.asarray([9999], np.int32)])
+
+    cache = PrefixCache(budget_bytes=3 * per_entry, block=4)
+    keys = [np.arange(i * 100, i * 100 + 8, dtype=np.int32) for i in range(5)]
+    for i, k in enumerate(keys[:3]):
+        cache.insert(k, fake_states(i, hidden=64))
+    assert len(cache) == 3
+    cache.lookup(ext(keys[0]))  # refresh entry 0: now entry 1 is LRU
+    cache.insert(keys[3], fake_states(3, hidden=64))
+    assert cache.stats()["evictions"] == 1
+    assert cache.lookup(ext(keys[1])) is None  # evicted
+    assert cache.lookup(ext(keys[0])) is not None  # protected by recency
+    assert cache.nbytes <= cache.budget_bytes
+
+
+def test_prefix_cache_upgrades_block_snapshot_with_next_token():
+    """A next_token-less block snapshot occupying a key must stay
+    upgradeable (wants() True), or a prompt whose length lands on a
+    snapshotted block boundary could never gain the full-hit path."""
+    cache = PrefixCache(block=8)
+    seq = np.arange(16, dtype=np.int32)
+    cache.insert(seq[:8], fake_states(0))  # block snapshot, no next_token
+    assert cache.lookup(seq[:8]) is None  # full-length, unusable
+    assert cache.wants(seq[:8], 8)  # ...so an upgrade is wanted
+    cache.insert(seq[:8], fake_states(0), next_token=5)
+    hit = cache.lookup(seq[:8])
+    assert hit.full and hit.next_token == 5
+    assert not cache.wants(seq[:8], 8) and len(cache) == 1
+
+
+def test_prefix_cache_wants_snapshot_block_alignment():
+    cache = PrefixCache(block=8)
+    seq = np.arange(24, dtype=np.int32)
+    assert not cache.wants_snapshot(seq, 4)  # unaligned
+    assert not cache.wants_snapshot(seq, 0)
+    assert cache.wants_snapshot(seq, 8) and cache.wants_snapshot(seq, 16)
+    cache.insert(seq[:8], fake_states(0))
+    assert not cache.wants_snapshot(seq, 8)  # already cached
+    assert cache.wants(seq, 24) and not cache.wants(seq, 0)
+
+
+# ---------------------------------------------------------------------------
+# state pool inject/extract
+# ---------------------------------------------------------------------------
+
+
+def test_state_pool_inject_extract_roundtrip():
+    key = jax.random.PRNGKey(0)
+    caches = {
+        "a": jax.random.normal(key, (3, 4)),
+        "b": [jax.random.normal(key, (3, 2, 5), dtype=jnp.float16)],
+    }
+    pool = StatePool(caches, lanes=3)
+    before = jax.tree_util.tree_map(np.asarray, pool.caches)
+    snap = jax.tree_util.tree_map(lambda c: c[0] * 2 + 1, caches)
+    pool.inject(1, snap)
+    got = pool.extract(1)
+    for g, s in zip(jax.tree_util.tree_leaves(got), jax.tree_util.tree_leaves(snap)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(s.astype(g.dtype)))
+    # neighbours untouched
+    for lane in (0, 2):
+        for g, b in zip(
+            jax.tree_util.tree_leaves(pool.extract(lane)),
+            jax.tree_util.tree_leaves(
+                jax.tree_util.tree_map(lambda c: c[lane], before)
+            ),
+        ):
+            np.testing.assert_array_equal(np.asarray(g), b)
+
+
+# ---------------------------------------------------------------------------
+# router: admission, backpressure, accounting
+# ---------------------------------------------------------------------------
+
+
+def test_router_backpressure_and_rejection_reasons():
+    model = tiny_model()
+    params = tiny_params(model)
+    eng = ServeEngine(model, params, POLICY, lanes=2)
+    router = Router([eng], max_queue=2, tenant_quota=2)
+
+    ok1 = router.submit(np.ones(3, np.int32), max_new=1, tenant="a")
+    ok2 = router.submit(np.ones(3, np.int32), max_new=1, tenant="b")
+    full = router.submit(np.ones(3, np.int32), max_new=1, tenant="a")
+    assert ok1.ok and ok2.ok
+    assert full.status == "rejected" and full.reason == "queue_full"
+
+    bad = Router([eng], max_queue=8).submit(np.zeros(0, np.int32), max_new=1)
+    assert bad.status == "rejected" and bad.reason == "bad_request"
+
+    r2 = Router([ServeEngine(model, params, POLICY, lanes=2)],
+                max_queue=8, tenant_quota=1)
+    a1 = r2.submit(np.ones(3, np.int32), max_new=1, tenant="a")
+    a2 = r2.submit(np.ones(3, np.int32), max_new=1, tenant="a")
+    b1 = r2.submit(np.ones(3, np.int32), max_new=1, tenant="b")
+    assert a1.ok and b1.ok
+    assert a2.status == "rejected" and a2.reason == "tenant_quota"
+    assert r2.tenants["a"]["rejected"] == 1 and r2.tenants["b"]["rejected"] == 0
+
+
+def test_router_deadline_expired_rejected_at_dispatch():
+    import time
+
+    model = tiny_model()
+    params = tiny_params(model)
+    router = Router(
+        [ServeEngine(model, params, POLICY, lanes=2)], admission="edf"
+    )
+    dead = router.submit(
+        np.ones(3, np.int32), max_new=1, deadline=time.monotonic() - 1.0
+    )
+    live = router.submit(np.ones(3, np.int32), max_new=2)
+    router.drain()
+    assert dead.status == "rejected" and dead.reason == "deadline_expired"
+    assert live.status == "done" and len(live.tokens) == 2
+    assert router.rejections == {"deadline_expired": 1}
+
+
+def test_router_queue_pressure_purges_expired_before_rejecting():
+    """Under saturation, queued dead work (expired deadlines) must not
+    hold the slots backpressure is rationing — a fresh serviceable
+    request purges it instead of bouncing with queue_full."""
+    import time
+
+    model = tiny_model()
+    params = tiny_params(model)
+    router = Router(
+        [ServeEngine(model, params, POLICY, lanes=2)],
+        max_queue=2, admission="edf",
+    )
+    far = time.monotonic() + 1e3
+    t1 = router.submit(np.ones(3, np.int32), max_new=1, deadline=far)
+    # expires "in the queue": a future deadline at submit, passed by the
+    # time pressure hits (simulated with an already-elapsed instant —
+    # submit-time DOA rejection is a separate check below)
+    t2 = router.submit(np.ones(3, np.int32), max_new=1)
+    t2.req.deadline = time.monotonic() - 1.0  # expired while queued
+    t3 = router.submit(np.ones(3, np.int32), max_new=1, deadline=far)
+    assert t1.ok and t3.ok  # t3 displaced the dead t2 instead of bouncing
+    assert t2.status == "rejected" and t2.reason == "deadline_expired"
+    # dead on arrival is rejected at submit, before counting against queue
+    doa = router.submit(
+        np.ones(3, np.int32), max_new=1, deadline=time.monotonic() - 1.0
+    )
+    assert doa.status == "rejected" and doa.reason == "deadline_expired"
+    router.drain()
+    assert t1.status == "done" and t3.status == "done"
+
+
+@pytest.mark.slow
+def test_router_streaming_callbacks_and_per_tenant_report():
+    model = tiny_model()
+    params = tiny_params(model)
+    router = Router([ServeEngine(model, params, POLICY, lanes=2, chunk=4)])
+    rng = np.random.default_rng(0)
+    streamed = {}
+    tickets = []
+    for i in range(5):
+        tenant = ("a", "b")[i % 2]
+        streamed[i] = []
+        tickets.append(
+            router.submit(
+                rng.integers(0, model.vocab, 6).astype(np.int32),
+                max_new=4,
+                tenant=tenant,
+                on_token=streamed[i].append,
+            )
+        )
+    router.drain()
+    for i, t in enumerate(tickets):
+        assert t.status == "done"
+        assert streamed[i] == t.tokens and len(t.tokens) == 4
+    rep = router.report()
+    assert rep["requests"] == 5
+    assert rep["tenants"]["a"]["completed"] == 3
+    assert rep["tenants"]["b"]["completed"] == 2
+    assert rep["tenants"]["a"]["tokens"] == 12
+    assert all(
+        rep["tenants"][t]["ttft_p95_s"] <= rep["tenants"][t]["latency_p95_s"]
+        for t in ("a", "b")
+    )
+
+
+@pytest.mark.slow
+def test_router_least_loaded_across_replicas():
+    model = tiny_model()
+    params = tiny_params(model)
+    engines = [
+        ServeEngine(model, params, POLICY, lanes=2, chunk=4) for _ in range(2)
+    ]
+    router = Router(engines)
+    rng = np.random.default_rng(1)
+    for _ in range(6):
+        router.submit(rng.integers(0, model.vocab, 6).astype(np.int32), max_new=3)
+    router.drain()
+    done = [len(e.metrics.records) for e in engines]
+    assert sum(done) == 6
+    assert all(n >= 2 for n in done), done  # both replicas pulled weight
+
+
+@pytest.mark.slow
+def test_async_router_concurrent_generate_and_stream():
+    model = tiny_model()
+    params = tiny_params(model)
+    router = Router([ServeEngine(model, params, POLICY, lanes=2, chunk=4)])
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, model.vocab, 5).astype(np.int32) for _ in range(3)]
+
+    async def main():
+        ar = AsyncRouter(router)
+
+        async def consume_stream():
+            toks = []
+            async for tok in ar.stream(prompts[2], max_new=3):
+                toks.append(tok)
+            return toks
+
+        t1, t2, toks = await asyncio.gather(
+            ar.generate(prompts[0], max_new=3),
+            ar.generate(prompts[1], max_new=3),
+            consume_stream(),
+        )
+        # early consumer exit closes the generator promptly (abandoned
+        # flag, not a blocking wait for the whole generation)
+        first = None
+        async for tok in ar.stream(prompts[0], max_new=8):
+            first = tok
+            break
+        return t1, t2, toks, first
+
+    t1, t2, toks, first = asyncio.run(main())
+    assert t1.status == "done" and len(t1.tokens) == 3
+    assert t2.status == "done" and len(t2.tokens) == 3
+    assert len(toks) == 3
+    assert first is not None
+
+
+# ---------------------------------------------------------------------------
+# engine x prefix cache semantics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_full_hit_skips_prefill_entirely():
+    """Resubmitting an identical prompt: the cached full-prefix entry's
+    stored next_token is emitted at admission, prefill costs zero steps,
+    and the streams match exactly (greedy continuation is deterministic)."""
+    model = tiny_model()
+    params = trained_params(model)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, model.vocab, 9).astype(np.int32) for _ in range(3)]
+    cache = PrefixCache(block=4)
+
+    eng1 = ServeEngine(model, params, POLICY, lanes=2, chunk=4, prefix_cache=cache)
+    reqs1 = eng1.submit_all([p.copy() for p in prompts], max_new=4)
+    m1 = eng1.run()
+    assert m1.cache_hits == 0 and m1.prefill_steps > 0
+
+    eng2 = ServeEngine(model, params, POLICY, lanes=2, chunk=4, prefix_cache=cache)
+    reqs2 = eng2.submit_all([p.copy() for p in prompts], max_new=4)
+    m2 = eng2.run()
+    assert m2.cache_full_hits == 3 and m2.prefill_steps == 0
+    assert m2.prompt_tokens == 0  # no prompt token ever touched the device
+    assert m2.prefill_tokens_saved == sum(len(p) for p in prompts)
+    for r1, r2 in zip(
+        sorted(reqs1, key=lambda r: r.rid), sorted(reqs2, key=lambda r: r.rid)
+    ):
+        # the first token is architecturally exact (the stored next_token,
+        # recorded from the unperturbed run); later tokens decode from the
+        # FP8-rounded injected state — end-to-end 100% stream agreement on
+        # decisive-margin models is locked by the zipf acceptance test below
+        assert r1.out[0] == r2.out[0]
+        assert len(r2.out) == len(r1.out)
+    # full hit with max_new=1 completes with zero device steps
+    eng3 = ServeEngine(model, params, POLICY, lanes=2, chunk=4, prefix_cache=cache)
+    [r] = eng3.submit_all([prompts[0].copy()], max_new=1)
+    m3 = eng3.run()
+    assert m3.steps == 0 and r.out == reqs1[0].out[:1]
+
+
+@pytest.mark.slow
+def test_block_aligned_prompt_gains_full_hit_after_upgrade():
+    """Serving a long prompt leaves next_token-less block snapshots at 8
+    and 16; a later prompt equal to the 16-token prefix must upgrade that
+    entry at prefill-done, and the next resubmission is a full hit."""
+    model = tiny_model()
+    params = tiny_params(model)
+    rng = np.random.default_rng(5)
+    long_prompt = rng.integers(0, model.vocab, 24).astype(np.int32)
+    prefix = long_prompt[:16]
+    cache = PrefixCache(block=8)
+
+    def serve_one(prompt):
+        eng = ServeEngine(
+            model, params, POLICY, lanes=2, chunk=8, prefix_cache=cache
+        )
+        eng.submit(prompt.copy(), max_new=2)
+        return eng.run()
+
+    serve_one(long_prompt)
+    m2 = serve_one(prefix)  # partial hit at 8, upgrades the 16-entry
+    assert m2.cache_full_hits == 0 and m2.prefill_steps == 1
+    m3 = serve_one(prefix)  # upgraded entry -> prefill-free full hit
+    assert m3.cache_full_hits == 1 and m3.prefill_steps == 0
+
+
+def test_engine_rejects_cache_with_non_rearmable_pool():
+    model = tiny_model()
+    params = tiny_params(model)
+
+    class NoLengths:
+        """Model facade whose decode_step lacks `lengths` -> lockstep only."""
+
+        supports_packed = True
+
+        def __init__(self, inner):
+            self._inner = inner
+
+        def __getattr__(self, k):
+            return getattr(self._inner, k)
+
+        def decode_step(self, p, tokens, states, policy):
+            return self._inner.decode_step(p, tokens, states, policy)
+
+    with pytest.raises(ValueError, match="lane-major"):
+        ServeEngine(
+            NoLengths(model), params, POLICY, lanes=2,
+            prefix_cache=PrefixCache(),
+        )
+
+
+# ---------------------------------------------------------------------------
+# acceptance: zipf-prefix workload, warm vs cold
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_zipf_prefix_warm_cache_saves_30pct_prefill_with_exact_tokens():
+    """The frontend acceptance bar (mirrors bench_serving --workload
+    zipf-prefix): on a shared-system-prompt workload, a warm FP8 prefix
+    cache yields >= 30% fewer prefill steps than the cold path with 100%
+    token agreement."""
+    model = tiny_model()
+    params = trained_params(model)
+    wkw = dict(
+        n_prefixes=3, prefix_len=16, suffix_lo=2, suffix_hi=6, prefix_seed=7
+    )
+    warmup = zipf_prefix_prompts(16, model.vocab, np.random.default_rng(1), **wkw)
+    measure = zipf_prefix_prompts(16, model.vocab, np.random.default_rng(2), **wkw)
+
+    def serve(prompts, cache):
+        eng = ServeEngine(
+            model, params, POLICY, lanes=4, chunk=8, prefix_cache=cache
+        )
+        reqs = eng.submit_all([p.copy() for p in prompts], max_new=6)
+        m = eng.run()
+        return [tuple(r.out) for r in sorted(reqs, key=lambda r: r.rid)], m
+
+    cold_outs, cold = serve(measure, None)
+    cache = PrefixCache(block=8)
+    serve(warmup, cache)  # same system prompts, all-fresh suffixes
+    warm_outs, warm = serve(measure, cache)
+
+    assert warm.prefill_steps <= 0.7 * cold.prefill_steps, (
+        warm.prefill_steps, cold.prefill_steps,
+    )
+    assert warm.prefill_tokens_saved > 0 and warm.cache_hit_rate > 0.5
+    assert warm_outs == cold_outs  # 100% token agreement, FP8-stored states
