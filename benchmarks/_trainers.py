@@ -43,7 +43,8 @@ def train_task(
     policy = get_policy(policy_name, **(policy_overrides or {}))
     params = model.init(jax.random.PRNGKey(seed))
     state = init_state(params, opt, policy)
-    step_fn = jax.jit(make_train_step(model.loss, opt, policy, lr=lr))
+    # donated jitted step: params/opt buffers update in place
+    step_fn = make_train_step(model.loss, opt, policy, lr=lr, donate=True)
 
     t0 = time.time()
     losses = []

@@ -25,38 +25,45 @@ def main() -> None:
     t0 = time.time()
 
     print("=" * 72)
-    print("[1/6] Fig. 4-5: two-region sigmoid quantization error")
+    print("[1/7] Fig. 4-5: two-region sigmoid quantization error")
     from . import fig4_5_sigmoid
 
     fig4_5_sigmoid.run()
 
     print("=" * 72)
-    print("[2/6] Table VII: MAC complexity model")
+    print("[2/7] Table VII: MAC complexity model")
     from . import table7_mac
 
     table7_mac.run(out="results/table7_mac.json")
 
     print("=" * 72)
-    print("[3/6] Kernel microbenchmarks (decode-fused matmul vs oracle)")
+    print("[3/7] Kernel microbenchmarks (decode-fused matmul vs oracle)")
     from . import bench_kernels
 
     bench_kernels.run()
 
     if not a.skip_train:
         print("=" * 72)
-        print(f"[4/6] Table IV: 4-task accuracy, 3 policies ({a.steps} steps, reduced cfg)")
+        print("[4/7] Train-step benchmark (fused quantized BPTT vs autodiff)")
+        from . import bench_train
+
+        bench_train.run(steps=max(5, a.steps // 10),
+                        out="results/BENCH_train.json")
+
+        print("=" * 72)
+        print(f"[5/7] Table IV: 4-task accuracy, 3 policies ({a.steps} steps, reduced cfg)")
         from . import table4_accuracy
 
         table4_accuracy.run(steps=a.steps, out="results/table4_accuracy.json")
 
         print("=" * 72)
-        print(f"[5/6] Table V: WikiText-2 activation ablation ({a.steps} steps)")
+        print(f"[6/7] Table V: WikiText-2 activation ablation ({a.steps} steps)")
         from . import table5_ablation
 
         table5_ablation.run(steps=a.steps, out="results/table5_ablation.json")
 
     print("=" * 72)
-    print("[6/6] Roofline report (from dry-run artifacts)")
+    print("[7/7] Roofline report (from dry-run artifacts)")
     from . import roofline_report
 
     roofline_report.run()

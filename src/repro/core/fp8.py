@@ -79,5 +79,12 @@ def grad_quant(tree, dtype=FP8_E5M2):
 
     Applied after backward, before the optimizer: the paper's weight update is
     'addition of the FP16 master copy weight and the FP8 gradient'.
+
+    Under the fused-BPTT path the LSTM dW leaves arrive already ON the fp8
+    grid (emitted by ``kernels.dispatch.matmul_dw`` at the kernel flush), so
+    this pass is an exact no-op on them — ``quantize_fp8`` is idempotent —
+    while still providing the paper's §III-D coverage (and overflow
+    saturation) for params no kernel emits: biases, embedding tables, and
+    the non-LSTM archs' direct-use params (rwkv decay/bonus, norms).
     """
     return jax.tree_util.tree_map(lambda g: quantize_fp8(g, dtype), tree)

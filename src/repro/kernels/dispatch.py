@@ -34,6 +34,7 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import functools
 import os
 from typing import Any, Callable, NamedTuple
 
@@ -42,9 +43,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import floatsd
+from .floatsd_matmul.bwd import (
+    matmul_dw_pallas,
+    matmul_dw_ref,
+    matmul_dx_pallas,
+    matmul_dx_ref,
+)
 from .floatsd_matmul.kernel import floatsd_matmul_pallas
 from .floatsd_matmul.ref import floatsd_matmul_ref
 from .floatsd_quantize.kernel import quantize_pallas
+from .lstm_cell.bwd import lstm_cell_bwd_pallas, lstm_cell_bwd_ref
 from .lstm_cell.kernel import lstm_cell_pallas
 from .lstm_cell.ref import lstm_cell_ref
 from .qsigmoid.kernel import qsigmoid_pallas
@@ -55,6 +63,8 @@ __all__ = [
     "STATS", "record", "backend_policy", "use_backend", "interpret_mode",
     "matmul", "lstm_cell", "quantize", "qsigmoid", "packed_einsum",
     "hoist_packed", "matmul_tiles", "lstm_tiles", "row_tile",
+    "matmul_dx", "matmul_dw", "lstm_cell_grad", "train_matmul",
+    "lstm_cell_train", "pack_train", "hoist_train", "inference_only",
     "OpSpec", "REGISTRY",
 ]
 
@@ -372,6 +382,277 @@ def qsigmoid(x, *, backend: str | None = None):
 
 
 # ---------------------------------------------------------------------------
+# backward ops (the training hot path: fused quantized BPTT)
+# ---------------------------------------------------------------------------
+
+
+def matmul_dx(g, codes, bias, *, backend: str | None = None):
+    """Activation gradient of the FloatSD8 matmul, backend-resolved:
+    g [..., N] x decode(codes [K, N])^T -> [..., K] in f32 (the precise
+    datapath — FP8 act-grad quantization lives at the act_quant STE nodes,
+    not here). Pallas path reuses the forward decode-in-VMEM kernel on the
+    transposed 1-byte codes."""
+    k, n = codes.shape
+    lead = g.shape[:-1]
+    g2 = g.reshape(-1, n)
+    m = g2.shape[0]
+    # output [m, k], contraction over n
+    native, waste, (mp, np_, kp) = _matmul_geometry(m, n, k)
+    dec = _choose("floatsd_matmul_dx", native, waste, backend)
+    if dec.backend == "ref":
+        dx = matmul_dx_ref(g2, codes, bias)
+    else:
+        gg, cc = g2, codes
+        if dec.padded:
+            gg = jnp.pad(g2, ((0, mp - m), (0, np_ - n)))
+            cc = jnp.pad(codes, ((0, kp - k), (0, np_ - n)), constant_values=ZERO_CODE)
+        bm, bn, bk = matmul_tiles(mp, kp, np_)
+        dx = matmul_dx_pallas(gg, cc, bias, bm=bm, bn=bn, bk=bk,
+                              interpret=dec.interpret)
+        if dec.padded:
+            dx = dx[:m, :k]
+    return dx.reshape(*lead, k)
+
+
+def matmul_dw(x, g, *, quant: bool = True, backend: str | None = None):
+    """Weight gradient of the FloatSD8 matmul, backend-resolved:
+    x [..., K]^T x g [..., N] -> [K, N], f32 accumulation, the paper's FP8
+    weight-gradient quantizer applied at the accumulator flush *inside* the
+    kernel (``quant=False`` gives the raw f32 dw for parity oracles)."""
+    k = x.shape[-1]
+    n = g.shape[-1]
+    x2 = x.reshape(-1, k)
+    g2 = g.reshape(-1, n)
+    m = x2.shape[0]
+    assert g2.shape[0] == m, (x.shape, g.shape)
+    # output [k, n], contraction over m (rows pad to 8, lanes to 128)
+    native, waste, (kp, mp, np_) = _matmul_geometry(k, m, n)
+    dec = _choose("floatsd_matmul_dw", native, waste, backend)
+    if dec.backend == "ref":
+        return matmul_dw_ref(x2, g2, quant=quant)
+    xx, gg = x2, g2
+    if dec.padded:
+        xx = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+        gg = jnp.pad(g2, ((0, mp - m), (0, np_ - n)))
+    bm, bn, bk = matmul_tiles(kp, np_, mp)
+    dw = matmul_dw_pallas(xx, gg, bm=bm, bn=bn, bk=bk, quant=quant,
+                          interpret=dec.interpret)
+    if dec.padded:
+        dw = dw[:k, :n]
+    return dw
+
+
+def lstm_cell_grad(z, c_prev, dh, dc, *, quantized: bool = True,
+                   c_dtype=jnp.float16, backend: str | None = None):
+    """Recompute-gates backward of the fused cell, backend-resolved.
+    z: [B, 4H], c_prev/dh/dc: [B, H] -> (dz [B, 4H] f32, dc_prev [B, H]).
+    The only residuals it needs are (z, c_prev) — see kernels README,
+    'backward ops'."""
+    b, h4 = z.shape
+    h = h4 // 4
+    bp, hp = _ceil_to(max(b, 1), 8), _ceil_to(max(h, 1), 128)
+    native = (bp, hp) == (b, h)
+    waste = (bp * hp) / max(b * h, 1)
+    dec = _choose("lstm_cell_grad", native, waste, backend)
+    if dec.backend == "ref":
+        return lstm_cell_bwd_ref(z, c_prev, dh, dc, quantized, c_dtype=c_dtype)
+    zz, cc, dhh, dcc = z, c_prev, dh, dc
+    if dec.padded:
+        zz = jnp.pad(
+            z.reshape(b, 4, h), ((0, bp - b), (0, 0), (0, hp - h))
+        ).reshape(bp, 4 * hp)
+        cc = jnp.pad(c_prev, ((0, bp - b), (0, hp - h)))
+        dhh = jnp.pad(dh, ((0, bp - b), (0, hp - h)))
+        dcc = jnp.pad(dc, ((0, bp - b), (0, hp - h)))
+    bb, bh = lstm_tiles(bp, hp)
+    dz, dcp = lstm_cell_bwd_pallas(
+        zz, cc, dhh, dcc, bb=bb, bh=bh, quantized=quantized, c_dtype=c_dtype,
+        interpret=dec.interpret,
+    )
+    if dec.padded:
+        dz = dz.reshape(bp, 4, hp)[:b, :, :h].reshape(b, 4 * h)
+        dcp = dcp[:b, :h]
+    return dz, dcp
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP training entry points: the whole train step resolves to
+# registered kernels, forward AND backward
+# ---------------------------------------------------------------------------
+
+
+def pack_train(w) -> PackedTensor:
+    """Encode a dense master weight to FloatSD8 codes for the fused training
+    path (hoisted outside the time scan — encode is T-invariant). The codes
+    carry the exact forward values: decode(encode(w)) == quantize(w).values
+    bit-identically, so the fused path's loss trajectory matches the
+    fake-quant STE path's. Gradients do not flow through the (integer)
+    codes; ``train_matmul`` routes dw straight to the dense master (STE)."""
+    codes, bias = floatsd.encode(jax.lax.stop_gradient(w))
+    return PackedTensor(codes, bias)
+
+
+def hoist_train(w, *, dtype=None, backend: str | None = None):
+    """Scan-loop hoist for the fused TRAINING path — the gradient-side twin
+    of ``hoist_packed``. When the resolved backend is ``ref``, the codes
+    would be decoded per time step in BOTH scans (forward and backward), so
+    quantize-at-use once outside the scan wins: returns the dense
+    STE-fake-quantized weight (bit-identical values to decode(encode(w))).
+    On the pallas path returns the ``PackedTensor`` — decode-in-VMEM per
+    tile is the kernel's whole point, forward and backward alike."""
+    pol = backend_policy(backend)
+    ref = pol == "ref" or (pol == "auto" and interpret_mode())
+    if ref:
+        bias = jax.lax.stop_gradient(floatsd.fit_bias(w))
+        wq = floatsd.quantize_ste(w, bias)
+        return wq.astype(dtype or jnp.float32)
+    return pack_train(w)
+
+
+def _float0(x):
+    return np.zeros(np.shape(x), jax.dtypes.float0)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_train_matmul_packed(backend: str | None, w_dtype: str):
+    """custom-VJP matmul over (x, w_master, codes, bias): forward is the
+    dispatched decode+matmul on the codes; backward is the registered
+    (floatsd_matmul_dx, floatsd_matmul_dw) op pair — dx f32, dw emitted
+    through the FP8 gradient quantizer in-kernel and routed straight-through
+    to the dense master weight."""
+
+    @jax.custom_vjp
+    def f(x, w, codes, bias):
+        del w  # forward runs on the codes; w is the gradient target (STE)
+        return matmul(x, codes, bias, out_dtype=jnp.float32, backend=backend)
+
+    def fwd(x, w, codes, bias):
+        del w
+        y = matmul(x, codes, bias, out_dtype=jnp.float32, backend=backend)
+        return y, (x, codes, bias)
+
+    def bwd(res, g):
+        x, codes, bias = res
+        dx = matmul_dx(g, codes, bias, backend=backend).astype(x.dtype)
+        dw = matmul_dw(x, g, backend=backend).astype(jnp.dtype(w_dtype))
+        return dx, dw, _float0(codes), _float0(bias)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def _make_train_matmul_dense(backend: str | None):
+    """Dense-hoisted variant (the ref backend): forward is a plain f32 dot
+    on the pre-quantized weight (decode hoisted out of the scan by
+    ``hoist_train``); backward keeps the fused-BPTT contract — dx in f32,
+    dw through the FP8 gradient quantizer (the registered op's oracle),
+    flowing to the master via the hoisted STE node."""
+
+    @jax.custom_vjp
+    def f(x, wq):
+        return jnp.dot(x, wq, preferred_element_type=jnp.float32).astype(
+            jnp.float32
+        )
+
+    def fwd(x, wq):
+        return f(x, wq), (x, wq)
+
+    def bwd(res, g):
+        x, wq = res
+        record("floatsd_matmul_dx", "ref", reason="train:hoisted-dense")
+        dx = jnp.dot(g, wq.T, preferred_element_type=jnp.float32).astype(x.dtype)
+        dw = matmul_dw(x, g, backend=backend).astype(wq.dtype)
+        return dx, dw
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def train_matmul(x, w, wq, *, backend: str | None = None):
+    """Training-path matmul: x [..., K] @ quantized(w) with the fused
+    backward contract. ``w`` is the dense master weight the FP8 dw flows
+    to; ``wq`` is its hoisted quantization from ``hoist_train`` — a
+    ``PackedTensor`` on the pallas path (decode-in-VMEM, in-kernel FP8 dw)
+    or the dense STE value on ref (plain dots, oracle FP8 dw; dw reaches
+    ``w`` through the hoisted STE node, so ``w`` itself is unused here)."""
+    pol = backend_policy(backend)
+    if is_packed(wq):
+        return _make_train_matmul_packed(pol, jnp.dtype(w.dtype).name)(
+            x, w, wq.codes, wq.bias
+        )
+    record("floatsd_matmul", "ref", reason="train:hoisted-dense")
+    return _make_train_matmul_dense(pol)(x, wq)
+
+
+
+
+@functools.lru_cache(maxsize=None)
+def _make_lstm_cell_train(quantized: bool, c_dtype, backend: str | None):
+    @jax.custom_vjp
+    def f(z, c_prev):
+        return lstm_cell(z, c_prev, quantized=quantized, c_dtype=c_dtype,
+                         backend=backend)
+
+    def fwd(z, c_prev):
+        # residual contract: ONLY (z, c_prev); gates are recomputed in bwd
+        return f(z, c_prev), (z, c_prev)
+
+    def bwd(res, ct):
+        z, c_prev = res
+        dh, dc = ct
+        dz, dc_prev = lstm_cell_grad(
+            z, c_prev, dh, dc, quantized=quantized, c_dtype=c_dtype,
+            backend=backend,
+        )
+        return dz.astype(z.dtype), dc_prev
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def lstm_cell_train(z, c_prev, *, quantized: bool = True,
+                    c_dtype=jnp.float16, backend: str | None = None):
+    """The fused cell with the recompute-gates custom VJP — the training
+    twin of ``lstm_cell``: forward values identical (same dispatched op),
+    backward is the registered ``lstm_cell_grad`` op pair, saving only
+    (z, c_prev) instead of autodiff's ~13 per-gate residuals."""
+    pol = backend_policy(backend)
+    return _make_lstm_cell_train(quantized, c_dtype, pol)(z, c_prev)
+
+
+# ---------------------------------------------------------------------------
+# packed weights are inference-only: gradients must fail loudly
+# ---------------------------------------------------------------------------
+
+_PACKED_GRAD_MSG = (
+    "packed FloatSD8 weights are inference-only: jax.grad reached a "
+    "PackedTensor weight site. The uint8 codes have no VJP — train on dense "
+    "master weights (Policy.weight_quant='floatsd8' fake-quant, or the "
+    "fused train_matmul path) and pack with WeightStore.pack for serving."
+)
+
+
+@jax.custom_vjp
+def inference_only(y):
+    """Identity whose backward raises: marks values computed from packed
+    (FloatSD8-coded) weights, where a silent zero/missing gradient would
+    otherwise be the failure mode."""
+    return y
+
+
+def _io_fwd(y):
+    return y, None
+
+
+def _io_bwd(_, g):
+    raise TypeError(_PACKED_GRAD_MSG)
+
+
+inference_only.defvjp(_io_fwd, _io_bwd)
+
+
+# ---------------------------------------------------------------------------
 # packed-weight entry points (the nn/serving hot paths)
 # ---------------------------------------------------------------------------
 
@@ -401,17 +682,18 @@ def packed_einsum(eq: str, x, packed: PackedTensor, *, out_dtype=jnp.float32,
     if dec_backend == "ref" or (dec_backend == "auto" and interpret_mode()):
         record("floatsd_matmul", "ref", reason=f"policy:{dec_backend} (packed einsum)")
         w = floatsd.decode(packed.codes, packed.bias, dtype=cast_dtype or jnp.float32)
-        return jnp.einsum(
+        y = jnp.einsum(
             eq, x, w, preferred_element_type=jnp.float32
         ).astype(out_dtype)
+        return inference_only(y)
     codes = packed.codes.T if transpose else packed.codes
     # a non-f32 compute policy (e.g. floatsd8_tpu's bf16) keeps its issue
     # dtype on the kernel path too, matching the ref branch's decode cast
     cd = None if cast_dtype in (None, jnp.float32) else cast_dtype
-    return matmul(
+    return inference_only(matmul(
         x, codes, packed.bias, out_dtype=out_dtype, compute_dtype=cd,
         backend=backend,
-    )
+    ))
 
 
 def hoist_packed(w, *, m: int | None = None, dtype=None,
@@ -440,7 +722,11 @@ def hoist_packed(w, *, m: int | None = None, dtype=None,
         ref = pol == "ref" or (pol == "auto" and interpret_mode())
         d = Decision("floatsd_matmul", "ref" if ref else "pallas", False, False, "")
     if d.backend == "ref":
-        return floatsd.decode(w.codes, w.bias, dtype=dtype or jnp.float32)
+        # the decoded dense weight still came from inference-only codes: a
+        # gradient reaching it must fail loudly, not silently vanish
+        return inference_only(
+            floatsd.decode(w.codes, w.bias, dtype=dtype or jnp.float32)
+        )
     return w
 
 
@@ -476,3 +762,8 @@ register(
     quantize,
 )
 register("qsigmoid", qsigmoid_ref, qsigmoid_pallas, qsigmoid)
+# backward op pairs: the training path's VJPs resolve through these, so the
+# whole BPTT step — not just inference — runs on registered kernels
+register("floatsd_matmul_dx", matmul_dx_ref, matmul_dx_pallas, matmul_dx)
+register("floatsd_matmul_dw", matmul_dw_ref, matmul_dw_pallas, matmul_dw)
+register("lstm_cell_grad", lstm_cell_bwd_ref, lstm_cell_bwd_pallas, lstm_cell_grad)

@@ -16,6 +16,7 @@ checkpoint (RestartableLoop); --fail-at N demonstrates it.
 from __future__ import annotations
 
 import argparse
+import collections
 import time
 
 import jax
@@ -75,6 +76,9 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--fail-at", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-fused", action="store_true",
+                    help="disable the fused quantized-BPTT backward "
+                    "(restores the autodiff + grad_quant tree-pass path)")
     args = ap.parse_args()
 
     policy = get_policy(args.policy)
@@ -82,7 +86,12 @@ def main():
     model, batches, opt, lr = build_task(args)
 
     with shd.use_mesh(mesh):
-        step_fn = jax.jit(make_train_step(model.loss, opt, policy, lr=lr))
+        # donated jitted step: params/opt buffers update in place; the
+        # finite-check/skip logic is already fused inside the step
+        step_fn = make_train_step(
+            model.loss, opt, policy, lr=lr,
+            fused=False if args.no_fused else None, donate=True,
+        )
 
         def init_fn():
             params = model.init(jax.random.PRNGKey(args.seed))
@@ -98,13 +107,19 @@ def main():
             print(f"resumed from step {loop.start_step}", flush=True)
 
         pipeline = ShardedPipeline(batches, mesh)
-        hist = []
+        # bounded loss window: enough for the widest log average, never
+        # unbounded growth over long runs
+        hist = collections.deque(maxlen=max(args.log_every, 100))
+        t_first_done = [None]  # wall time when the first (compile) step ends
 
         def on_metrics(step, m):
             hist.append(float(m["loss"]))
+            if t_first_done[0] is None:
+                t_first_done[0] = time.time()
             if step % args.log_every == 0:
+                window = list(hist)[-args.log_every:]
                 print(
-                    f"step {step:5d}  loss {np.mean(hist[-args.log_every:]):.4f}  "
+                    f"step {step:5d}  loss {np.mean(window):.4f}  "
                     f"scale {float(m['loss_scale']):.0f}  "
                     f"finite {bool(m['grads_finite'])}",
                     flush=True,
@@ -117,9 +132,18 @@ def main():
         )
         dt = time.time() - t0
         done = last - loop.start_step
+        # warm rate excludes the first step of the run (jit compile)
+        if t_first_done[0] is not None and done > 1:
+            compile_s = t_first_done[0] - t0
+            warm_dt = time.time() - t_first_done[0]
+            rate = (
+                f"compile {compile_s:.1f}s + {warm_dt/(done-1):.3f}s/step warm "
+                f"({(done-1)/max(warm_dt,1e-9):.2f} steps/s)"
+            )
+        else:
+            rate = f"{dt/max(done,1):.2f}s/step"
         print(
-            f"trained {done} steps in {dt:.1f}s "
-            f"({dt/max(done,1):.2f}s/step); stragglers flagged: "
+            f"trained {done} steps in {dt:.1f}s ({rate}); stragglers flagged: "
             f"{len(loop.straggler.flagged)}",
             flush=True,
         )

@@ -157,9 +157,9 @@ class QuantEmbedding:
         gather traffic."""
         if kd.is_packed(p["table"]):
             codes = jnp.take(p["table"].codes, tokens, axis=0)
-            y = floatsd.decode(
+            y = kd.inference_only(floatsd.decode(
                 codes, p["table"].bias, dtype=policy.cdt() or jnp.float32
-            )
+            ))
         else:
             t = quant_weight(p["table"], policy)
             y = jnp.take(t, tokens, axis=0)

@@ -12,13 +12,15 @@ multiplier the paper's MAC implements.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import os
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-import os
-
+from ..core.fp8 import quantize_fp8
 from ..core.policy import Policy
 from ..core.qsigmoid import qsigmoid, qtanh_fp8
 from ..kernels import dispatch as kd
@@ -32,6 +34,13 @@ __all__ = ["LSTMCell", "LSTMLayer", "BiLSTM", "LSTMState"]
 # (fake-quant is deterministic); REPRO_LSTM_HOIST=0 restores the naive
 # quantize-inside-step baseline.
 HOIST_WQUANT = os.environ.get("REPRO_LSTM_HOIST", "1") != "0"
+
+# Fused-BPTT remat (EXPERIMENTS.md §Perf hillclimb #5): drop the per-step z
+# residual too and recompute ALL of zs in the backward as one batched pair
+# of GEMMs over the saved h trajectory — residuals shrink to the cell-state
+# trajectory alone (~4x below plain autodiff) for one extra forward-sized
+# GEMM in the backward. REPRO_BPTT_REMAT=0 keeps zs saved instead.
+BPTT_REMAT = os.environ.get("REPRO_BPTT_REMAT", "1") != "0"
 
 
 class LSTMState(NamedTuple):
@@ -76,6 +85,11 @@ class LSTMCell:
         the inline math; no gradients flow, so the STE wrappers aren't
         needed). Packed (FloatSD8-coded) wx/wh route the matmuls through
         the dispatched decode+matmul kernel via ``policy_einsum``.
+
+        The fused quantized-BPTT training path does NOT go through this
+        method: ``LSTMLayer.apply`` routes whole-sequence training to the
+        scan-level ``lstm_bptt`` engine below (same forward values,
+        hand-written backward on the registered kernel pairs).
         """
         h = self.hidden
         cdt = policy.cdt() or x_t.dtype
@@ -115,6 +129,200 @@ class LSTMCell:
         tc = qtanh_fp8(c_t.astype(cdt)) if policy.sigmoid_quant else jnp.tanh(c_t.astype(cdt))
         h_t = (o_t * tc).astype(cdt)
         return h_t, LSTMState(h_t, c_t)
+
+
+# ---------------------------------------------------------------------------
+# fused quantized-BPTT: a hand-written VJP over the WHOLE time scan
+# ---------------------------------------------------------------------------
+#
+# Autodiff through the quantized step keeps ~13 per-gate residual tensors
+# per time step and accumulates each weight gradient as S small [B,·]x[·,4H]
+# outer products. This engine is the cuDNN-shaped alternative, built on the
+# registered kernel pairs of kernels/dispatch.py:
+#
+#   forward  : the dispatched matmuls + fused cell, saving only zs [S,B,4H]
+#              (or nothing, under BPTT_REMAT) and the cell-state trajectory
+#              cs [S,B,H].
+#   backward : one reverse scan running the recompute-gates cell kernel
+#              (lstm_cell_grad) + the dh recurrence matmul; then dWx/dWh as
+#              ONE [S*B,·]^T x [S*B,4H] GEMM each through matmul_dw — the
+#              paper's FP8 weight-gradient quantizer applied at the
+#              accumulator flush, inside the kernel — and dXs as one batched
+#              matmul_dx. Per-step weight-sized work (S FP8 snaps, S small
+#              GEMMs) collapses to one of each.
+#
+# Gradient semantics match the STE autodiff oracle (products use quantized
+# values, derivative factors are smooth); the one recorded deviation is that
+# the dc chain stays f32 where autodiff rounds through the fp16 cell state
+# (tests/test_train_grad_parity.py pins both).
+
+
+@functools.lru_cache(maxsize=None)
+def _make_lstm_bptt(pol, packed, masked, reverse, quantized, c_dtype,
+                    afwd, abwd, remat, w_dtype):
+    """Build the custom-VJP scan engine for one static configuration.
+
+    pol: resolved dispatch backend ("ref"/"pallas"/"auto"); packed: weights
+    hoisted as PackedTensor (pallas) vs dense STE (ref); afwd/abwd: the
+    activation fake-quant dtypes of the policy's hidden site (None = off);
+    w_dtype: the dense masters' dtype (their cotangent dtype).
+    """
+    f32 = jnp.float32
+
+    def q_act(h):
+        return quantize_fp8(h, afwd) if afwd is not None else h
+
+    def q_grad(g):
+        return quantize_fp8(g, abwd) if abwd is not None else g
+
+    def z_of(x_t, hq, wqx, wqh, b):
+        if packed:
+            return (
+                kd.matmul(x_t, wqx.codes, wqx.bias, out_dtype=f32, backend=pol)
+                + kd.matmul(hq, wqh.codes, wqh.bias, out_dtype=f32, backend=pol)
+                + b
+            )
+        return (
+            jnp.dot(x_t, wqx, preferred_element_type=f32)
+            + jnp.dot(hq, wqh, preferred_element_type=f32)
+            + b
+        ).astype(f32)
+
+    def forward(xs, h0, c0, wqx, wqh, b, lens):
+        s = xs.shape[0]
+
+        def body(st, inp):
+            h_prev, c_prev = st
+            x_t, t = inp
+            hq = q_act(h_prev)
+            z = z_of(x_t, hq, wqx, wqh, b)
+            h_new, c_new = kd.lstm_cell(
+                z, c_prev, quantized=quantized, c_dtype=c_dtype, backend=pol
+            )
+            h_new = h_new.astype(h_prev.dtype)
+            if masked:
+                keep = (t < lens)[:, None]
+                h_t = jnp.where(keep, h_new, h_prev)
+                c_t = jnp.where(keep, c_new, c_prev)
+            else:
+                h_t, c_t = h_new, c_new
+            # ys h is the raw cell output (pre-mask), matching the inline
+            # scan; the carry freezes, the emitted row does not. Masked
+            # configs additionally save the entry state h_prev — the frozen
+            # carry trajectory is NOT reconstructible from hs alone there.
+            ys = [h_new, c_prev]
+            if masked:
+                ys.append(h_prev)
+            if not remat:
+                ys.append(z)
+            return (h_t, c_t), tuple(ys)
+
+        (hT, cT), ys = jax.lax.scan(
+            body, (h0, c0), (xs, jnp.arange(s)), reverse=reverse
+        )
+        hs, cs_prev = ys[0], ys[1]
+        hs_prev = ys[2] if masked else None
+        zs = ys[-1] if not remat else None
+        return hs, hT, cT, zs, cs_prev, hs_prev
+
+    @jax.custom_vjp
+    def engine(xs, h0, c0, wx, wh, wqx, wqh, b, lens):
+        del wx, wh  # gradient targets only (packed path)
+        hs, hT, cT, _, _, _ = forward(xs, h0, c0, wqx, wqh, b, lens)
+        return hs, hT, cT
+
+    def engine_fwd(xs, h0, c0, wx, wh, wqx, wqh, b, lens):
+        del wx, wh
+        hs, hT, cT, zs, cs_prev, hs_prev = forward(xs, h0, c0, wqx, wqh, b, lens)
+        res = (xs, h0, c0, wqx, wqh, b, lens, zs, cs_prev, hs, hs_prev)
+        return (hs, hT, cT), res
+
+    def engine_bwd(res, cts):
+        xs, h0, c0, wqx, wqh, b, lens, zs, cs_prev, hs, hs_prev = res
+        g_hs, g_hT, g_cT = cts
+        s, bsz, d = xs.shape
+        h = hs.shape[-1]
+
+        # the hq trajectory, recomputed in ONE batched fake-quant: step t
+        # consumed Q(h_{t-1}) (forward) / Q(h_{t+1}) (reverse), h0 at the
+        # end. Masked scans saved the (frozen-carry) entry states instead.
+        if masked:
+            prevs = hs_prev
+        elif reverse:
+            prevs = jnp.concatenate([hs[1:], h0[None]], axis=0)
+        else:
+            prevs = jnp.concatenate([h0[None], hs[:-1]], axis=0)
+        hqs = q_act(prevs)
+        if zs is None:  # BPTT_REMAT: recompute ALL of zs as one GEMM pair
+            zs = z_of(
+                xs.reshape(s * bsz, d), hqs.reshape(s * bsz, h), wqx, wqh, b
+            ).reshape(s, bsz, 4 * h)
+        wqh_t = None if packed else wqh.T  # hoisted out of the reverse scan
+
+        def rbody(carry, inp):
+            dh_rec, dc = carry  # f32 cotangents of the carried state
+            z_t, c_prev_t, g_h_t, t = inp
+            if masked:
+                keep = (t < lens)[:, None]
+                dh_cell = g_h_t.astype(f32) + jnp.where(keep, dh_rec, 0.0)
+                dc_cell = jnp.where(keep, dc, 0.0)
+                dh_pass = jnp.where(keep, 0.0, dh_rec)
+                dc_pass = jnp.where(keep, 0.0, dc)
+            else:
+                dh_cell = g_h_t.astype(f32) + dh_rec
+                dc_cell, dh_pass, dc_pass = dc, 0.0, 0.0
+            dz, dc_prev = kd.lstm_cell_grad(
+                z_t, c_prev_t.astype(f32), dh_cell, dc_cell,
+                quantized=quantized, c_dtype=c_dtype, backend=pol,
+            )
+            # recurrence: cotangent of h_prev through the hq quantizer
+            if packed:
+                dhq = kd.matmul_dx(dz, wqh.codes, wqh.bias, backend=pol)
+            else:
+                dhq = jnp.dot(dz, wqh_t, preferred_element_type=f32)
+            dh_prev = dh_pass + q_grad(dhq)
+            dc_prev = dc_pass + dc_prev
+            return (dh_prev, dc_prev), dz
+
+        carry0 = (g_hT.astype(f32), g_cT.astype(f32))
+        (dh0, dc0), dzs = jax.lax.scan(
+            rbody, carry0, (zs, cs_prev, g_hs, jnp.arange(s)),
+            reverse=not reverse,
+        )
+
+        # weight grads: ONE kernel call each over the whole sequence, FP8
+        # emission at the accumulator flush; dXs batched the same way
+        dzs_f = dzs.reshape(s * bsz, 4 * h)
+        dwx = kd.matmul_dw(xs.reshape(s * bsz, d), dzs_f, backend=pol)
+        dwh = kd.matmul_dw(hqs.reshape(s * bsz, h), dzs_f, backend=pol)
+        if packed:
+            dxs = kd.matmul_dx(dzs_f, wqx.codes, wqx.bias, backend=pol)
+        else:
+            dxs = jnp.dot(dzs_f, wqx.T, preferred_element_type=f32)
+        dxs = dxs.reshape(s, bsz, d).astype(xs.dtype)
+        db = jnp.sum(dzs_f, axis=0).astype(b.dtype)
+        wdt = jnp.dtype(w_dtype)
+        if packed:
+            # FP8 dW straight-through to the dense masters (fp8 values are
+            # exactly representable at any master dtype >= fp16)
+            g_masters = (dwx.astype(wdt), dwh.astype(wdt))
+            g_wq = (
+                kd.PackedTensor(_f0(wqx.codes), _f0(wqx.bias)),
+                kd.PackedTensor(_f0(wqh.codes), _f0(wqh.bias)),
+            )
+        else:
+            # dW reaches the masters through the hoisted STE node on wq
+            g_masters = (jnp.zeros(wqx.shape, wdt), jnp.zeros(wqh.shape, wdt))
+            g_wq = (dwx.astype(wqx.dtype), dwh.astype(wqh.dtype))
+        return (dxs, dh0.astype(h0.dtype), dc0.astype(c0.dtype),
+                g_masters[0], g_masters[1], g_wq[0], g_wq[1], db, _f0(lens))
+
+    engine.defvjp(engine_fwd, engine_bwd)
+    return engine
+
+
+def _f0(x):
+    return np.zeros(np.shape(x), jax.dtypes.float0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,7 +371,46 @@ class LSTMLayer:
             )
         else:  # normalize external (cache) dtypes to the policy's
             state = LSTMState(state.h.astype(cdt), state.c.astype(c_dt))
+        if lengths is not None and self.reverse:
+            raise ValueError("lengths-masked scan requires a forward layer")
         xs_t = jnp.swapaxes(quant_act(xs, policy), 0, 1)  # [S, B, D]
+
+        # fused quantized-BPTT: training-mode twin of the inference dispatch
+        # (requires the hoist — the encode is T-invariant — and dense masters)
+        fused = (
+            not inference
+            and policy.grad_quant == "fp8_kernel"
+            and policy.weight_quant == "floatsd8"
+            # the engine computes z/h in f32; bf16-compute policies (e.g.
+            # floatsd8_tpu) round z to bf16 in the inline path, so they stay
+            # on autodiff to keep REPRO_FUSED_BPTT=0 trajectory-equivalent
+            and policy.cdt() in (None, jnp.float32)
+            and HOIST_WQUANT
+            and not (kd.is_packed(p["wx"]) or kd.is_packed(p["wh"]))
+        )
+
+        if fused:
+            # ref backend: dense STE quantize-at-use hoisted out of BOTH
+            # scans; pallas: codes stay packed for decode-in-VMEM fwd + bwd
+            wqx = kd.hoist_train(p["wx"], dtype=policy.cdt())
+            wqh = kd.hoist_train(p["wh"], dtype=policy.cdt())
+            bq = p["b"].astype(cdt)
+            afwd, abwd = policy.act_dtypes("hidden")
+            engine = _make_lstm_bptt(
+                kd.backend_policy(None), kd.is_packed(wqx),
+                lengths is not None, self.reverse, policy.sigmoid_quant,
+                c_dt, afwd, abwd, BPTT_REMAT, jnp.dtype(p["wx"].dtype).name,
+            )
+            lens_arr = (
+                jnp.asarray(lengths, jnp.int32)
+                if lengths is not None
+                else jnp.zeros((b,), jnp.int32)
+            )
+            hs, h_f, c_f = engine(
+                xs_t, state.h, state.c, p["wx"], p["wh"], wqx, wqh, bq,
+                lens_arr,
+            )
+            return jnp.swapaxes(hs, 0, 1), LSTMState(h_f, c_f)
 
         if HOIST_WQUANT:
             # quantize-at-use ONCE, outside the scan (T-invariant); STE
@@ -184,19 +431,19 @@ class LSTMLayer:
         if lengths is None:
             def body(st, x_t):
                 h_t, st2 = cell.step(pq, x_t, st, policy,
-                                     prequantized=prequantized, inference=inference)
+                                     prequantized=prequantized,
+                                     inference=inference)
                 return st2, h_t
 
             final, hs = jax.lax.scan(body, state, xs_t, reverse=self.reverse)
         else:
-            if self.reverse:
-                raise ValueError("lengths-masked scan requires a forward layer")
             lens = jnp.asarray(lengths, jnp.int32)
 
             def body(carry, x_t):
                 st, t = carry
                 h_t, st2 = cell.step(pq, x_t, st, policy,
-                                     prequantized=prequantized, inference=inference)
+                                     prequantized=prequantized,
+                                     inference=inference)
                 keep = (t < lens)[:, None]
                 st2 = LSTMState(
                     jnp.where(keep, st2.h, st.h), jnp.where(keep, st2.c, st.c)
@@ -206,7 +453,15 @@ class LSTMLayer:
             (final, _), hs = jax.lax.scan(
                 body, (state, jnp.zeros((), jnp.int32)), xs_t
             )
-        return jnp.swapaxes(hs, 0, 1), final
+        hs = jnp.swapaxes(hs, 0, 1)
+        if kd.is_packed(p["wx"]) or kd.is_packed(p["wh"]):
+            # packed layers are inference-only: a gradient through their
+            # outputs must fail loudly (the hoisted decode severs the VJP to
+            # the codes silently otherwise)
+            hs = kd.inference_only(hs)
+            final = LSTMState(kd.inference_only(final.h),
+                              kd.inference_only(final.c))
+        return hs, final
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,15 +1,34 @@
 """TrainState: the paper's full update pipeline as one jittable step.
 
   loss*1024 -> backward (acts/act-grads FP8 inside the model) ->
-  weight grads FP8 (grad_quant) -> unscale f32, finite check ->
+  weight grads FP8 -> unscale f32, finite check ->
   optimizer update -> FP16 master add -> (re)quantize-at-use next step.
+
+Two gradient paths, selected by ``make_train_step``:
+
+  * **fused** (default when ``policy.grad_quant == 'fp8'``): the loss runs
+    under ``grad_quant='fp8_kernel'`` — BPTT goes through the hand-written
+    scan VJP and the LSTM gate matmuls emit their dW through the FP8
+    quantizer *inside* the registered backward kernels
+    (``kernels.dispatch.matmul_dw``). The ``grad_quant`` sweep below is an
+    exact no-op on those leaves (fp8 is idempotent) and only provides the
+    paper's §III-D coverage + overflow saturation for params no kernel
+    emits (biases, embeddings, non-LSTM direct-use params) — it is a
+    safety net, not the quantizer, on the hot leaves.
+  * **autodiff baseline** (``fused=False`` or ``REPRO_FUSED_BPTT=0``): the
+    pre-fusion behaviour — plain autodiff BPTT, with the same tree pass
+    doing ALL the gradient quantization.
 
 Skip-on-nonfinite keeps dynamic loss scaling sound; with static scaling
 (paper) a nonfinite step is skipped the same way (equivalent to PyTorch's
-GradScaler semantics the baselines use).
+GradScaler semantics the baselines use). The finite check, skip select, and
+scale adjustment are all part of the single jitted step; ``donate=True``
+additionally donates the TrainState argument so the params/optimizer
+buffers are updated in place instead of copied every step.
 """
 from __future__ import annotations
 
+import os
 from typing import Any, NamedTuple
 
 import jax
@@ -40,17 +59,37 @@ def init_state(params, opt: Optimizer, policy: Policy, dynamic_scale=False) -> T
 
 
 def make_train_step(loss_fn, opt: Optimizer, policy: Policy, lr: float = 1e-3,
-                    grad_clip: float | None = 1.0):
-    """loss_fn(params, batch, policy) -> scalar. Returns jittable step fn."""
+                    grad_clip: float | None = 1.0, fused: bool | None = None,
+                    donate: bool = False):
+    """loss_fn(params, batch, policy) -> scalar. Returns a step fn.
+
+    ``fused=None`` resolves to ``policy.grad_quant == 'fp8'`` unless
+    ``REPRO_FUSED_BPTT=0`` (the killswitch restoring the tree-pass path).
+    ``donate=True`` returns the step already jitted with the TrainState
+    argument donated — callers must rebind ``state`` every step (every
+    driver in this repo does).
+    """
+    if fused is None:
+        fused = (
+            policy.grad_quant == "fp8"
+            and os.environ.get("REPRO_FUSED_BPTT", "1") != "0"
+        )
+    run_policy = (
+        policy.replace(grad_quant="fp8_kernel")
+        if fused and policy.grad_quant == "fp8"
+        else policy
+    )
 
     def step(state: TrainState, batch):
         def scaled_loss(p):
-            l = loss_fn(p, batch, policy)
+            l = loss_fn(p, batch, run_policy)
             return ls.scale_loss(l.astype(jnp.float32), state.scale), l
 
         grads, raw_loss = jax.grad(scaled_loss, has_aux=True)(state.params)
-        if policy.grad_quant == "fp8":
-            # paper §III-D: ALL gradients FP8 (scaled into fp8 range by ls)
+        if run_policy.grad_quant in ("fp8", "fp8_kernel"):
+            # paper §III-D: ALL gradients FP8. Idempotent (exact no-op) on
+            # the leaves the fused backward kernels already emitted on the
+            # fp8 grid; quantizes + saturates everything else.
             grads = grad_quant(grads)
         grads, finite = ls.unscale_and_check(grads, state.scale)
         if grad_clip is not None:
@@ -86,4 +125,6 @@ def make_train_step(loss_fn, opt: Optimizer, policy: Policy, lr: float = 1e-3,
         }
         return TrainState(state.step + 1, new_params, new_opt, new_scale), metrics
 
+    if donate:
+        return jax.jit(step, donate_argnums=(0,))
     return step

@@ -46,6 +46,10 @@ GRIDS = {
     "lstm_cell": LSTM_SHAPES,
     "floatsd_quantize": ELEMWISE_SHAPES,
     "qsigmoid": ELEMWISE_SHAPES,
+    # backward op pairs (the fused-BPTT training path)
+    "floatsd_matmul_dx": MATMUL_SHAPES,
+    "floatsd_matmul_dw": MATMUL_SHAPES,
+    "lstm_cell_grad": LSTM_SHAPES,
 }
 
 
@@ -106,6 +110,81 @@ def test_lstm_cell_parity_and_decision(b, h, quantized):
     np.testing.assert_allclose(
         np.asarray(c_got, np.float32), np.asarray(c_want, np.float32),
         rtol=1e-3, atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("m,k,n", MATMUL_SHAPES)
+def test_matmul_dx_parity_and_decision(m, k, n):
+    """Backward dx op: g [M,N] x decode(codes [K,N])^T, f32 precise path."""
+    g = jnp.asarray(_w((m, n), 0.5))
+    wts = jnp.asarray(_w((k, n), 0.05))
+    codes, bias = floatsd.encode(wts)
+    with kd.use_backend("pallas"):
+        got = kd.matmul_dx(g, codes, bias)
+        dec = kd.STATS.last["floatsd_matmul_dx"]
+    want = kd.matmul_dx(g, codes, bias, backend="ref")
+    assert dec.backend == "pallas"
+    assert dec.padded == _expect_padded(m, n, k), dec
+    assert got.shape == (m, k) and got.dtype == jnp.float32
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("m,k,n", MATMUL_SHAPES)
+def test_matmul_dw_parity_and_decision(m, k, n):
+    """Backward dw op: x^T g with the FP8 grid snap applied in-kernel —
+    outputs must land EXACTLY on the fp8-e5m2 grid on both backends."""
+    x = jnp.asarray(_w((m, k), 0.5))
+    g = jnp.asarray(_w((m, n), 0.5))
+    with kd.use_backend("pallas"):
+        got = kd.matmul_dw(x, g)
+        dec = kd.STATS.last["floatsd_matmul_dw"]
+    want = kd.matmul_dw(x, g, backend="ref")
+    assert dec.backend == "pallas"
+    assert dec.padded == bool(k % 8 or m % 128 or n % 128), dec
+    assert got.shape == (k, n)
+    # the in-kernel quantizer really ran: every value is fp8-representable
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(got.astype(jnp.float8_e5m2), np.float32)
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b,h", LSTM_SHAPES)
+@pytest.mark.parametrize("quantized", [True, False])
+@pytest.mark.parametrize("c_dtype", [jnp.float32, jnp.float16])
+def test_lstm_cell_grad_parity_and_decision(b, h, quantized, c_dtype):
+    """Recompute-gates backward: pallas(interpret) vs the jnp oracle.
+
+    f32 cell state: tight (pure f32 elementwise chain). f16 cell state:
+    f16-rounding envelope — the recomputed c_t can land one f16 ulp apart
+    between lowerings (fma/fusion), which the tanh path amplifies to ~1e-3
+    relative (same envelope as the forward cell parity above).
+    """
+    z = jnp.asarray(_w((b, 4 * h), 1.5))
+    c = jnp.asarray(_w((b, h), 0.8)).astype(c_dtype)
+    dh = jnp.asarray(_w((b, h), 1.0, seed_extra=1))
+    dc = jnp.asarray(_w((b, h), 1.0, seed_extra=2)).astype(c_dtype)
+    with kd.use_backend("pallas"):
+        dz_got, dcp_got = kd.lstm_cell_grad(
+            z, c, dh, dc, quantized=quantized, c_dtype=c_dtype
+        )
+        dec = kd.STATS.last["lstm_cell_grad"]
+    dz_want, dcp_want = kd.lstm_cell_grad(
+        z, c, dh, dc, quantized=quantized, c_dtype=c_dtype, backend="ref"
+    )
+    assert dec.backend == "pallas"
+    assert dec.padded == bool(b % 8 or h % 128), dec
+    assert dz_got.shape == (b, 4 * h) and dcp_got.shape == (b, h)
+    assert dcp_got.dtype == c_dtype
+    tol = dict(rtol=1e-5, atol=1e-6) if c_dtype == jnp.float32 else dict(
+        rtol=2e-3, atol=1e-5
+    )
+    np.testing.assert_allclose(np.asarray(dz_got), np.asarray(dz_want), **tol)
+    np.testing.assert_allclose(
+        np.asarray(dcp_got, np.float32), np.asarray(dcp_want, np.float32),
+        rtol=2e-3, atol=1e-4,
     )
 
 

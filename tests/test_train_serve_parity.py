@@ -105,6 +105,39 @@ def test_packed_serve_matches_fake_quant_under_both_backends(trained):
     assert streams["ref"] == streams["pallas"]
 
 
+def test_packed_weights_are_inference_only(trained):
+    """Satellite guard: differentiating through a PackedTensor weight site
+    must raise a clear error instead of silently yielding zero/missing
+    grads (the codes have no VJP)."""
+    model, params = trained
+    store = WeightStore.pack(params)
+    packed_params = store.tree
+
+    # grads w.r.t. a DENSE input while packed weights sit in the graph:
+    # the silent-zero hazard. The dispatch guard must raise.
+    def loss_wrt_x(x):
+        pt = packed_params["lstm0"]["wx"]
+        return jnp.sum(kd.packed_einsum("bd,dk->bk", x, pt))
+
+    x = jnp.ones((2, 32), jnp.float32)
+    with pytest.raises(TypeError, match="inference-only"):
+        jax.grad(loss_wrt_x)(x)
+
+    # and through a whole packed LSTM layer (the hoist_packed decode path):
+    # a training-style grad w.r.t. the sequence input must also fail loudly
+    from repro.nn.lstm import LSTMLayer
+
+    layer = LSTMLayer(model.emb, model.hidden)
+
+    def loss_wrt_xs(xs):
+        h, _ = layer.apply(packed_params["lstm0"], xs, POLICY)
+        return jnp.sum(h.astype(jnp.float32) ** 2)
+
+    xs = jnp.ones((2, 4, model.emb), jnp.float32)
+    with pytest.raises(TypeError, match="inference-only"):
+        jax.grad(loss_wrt_xs)(xs)
+
+
 def test_engine_default_backend_unchanged_tokens(trained):
     """auto (the default) must serve the exact same streams as forced ref on
     CPU — the dispatch layer cannot change served outputs by default."""
