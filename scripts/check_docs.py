@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""Docs link/path check: every file path named in the repo's markdown
+must actually exist.
+
+Scans all tracked *.md files (repo root, docs/, nested READMEs) for
+
+  * backtick code spans containing something that looks like a repo file
+    path (has a known extension: .py/.md/.sh/.json/.yml/.toml/.txt), and
+  * relative markdown link targets ``[text](path)``,
+
+then resolves each candidate against (a) the repo root, (b) ``src/repro/``
+(module docstrings and EXPERIMENTS.md cite paths relative to the
+package), and (c) the markdown file's own directory. Anything that
+resolves nowhere is reported and the script exits 1 — so renaming a file
+without fixing the docs that cite it fails CI rather than rotting the
+documentation. Placeholders (globs, <vars>, {braces}) are skipped.
+
+    python scripts/check_docs.py            # from the repo root
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+EXTS = ("py", "md", "sh", "json", "yml", "yaml", "toml", "txt")
+PATH_RE = re.compile(
+    r"[A-Za-z0-9_][A-Za-z0-9_./-]*\.(?:%s)\b" % "|".join(EXTS)
+)
+CODE_SPAN_RE = re.compile(r"`([^`]+)`")
+MD_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_CHARS = set("*<>{}$")
+
+# cited but intentionally absent (e.g. generated artifacts) — none today
+ALLOWLIST: set = set()
+
+# not about THIS repo's files: the per-PR task spec and the external-repo
+# reference digests cite paths that live elsewhere by design
+EXCLUDE = {"ISSUE.md", "SNIPPETS.md", "PAPERS.md"}
+
+
+def md_files():
+    for p in sorted(ROOT.rglob("*.md")):
+        if ".git" in p.parts or ".claude" in p.parts or "node_modules" in p.parts:
+            continue
+        if p.name in EXCLUDE:
+            continue
+        yield p
+
+
+def _basenames() -> set:
+    names = set()
+    for p in ROOT.rglob("*"):
+        if ".git" in p.parts:
+            continue
+        if p.is_file():
+            names.add(p.name)
+    return names
+
+
+BASENAMES = _basenames()
+
+
+def resolves(path: str, base: Path) -> bool:
+    cand = path.lstrip("./")
+    if "/" not in cand:
+        # bare filename cited in running text (directory clear from
+        # context): must exist SOMEWHERE in the repo, catching renames
+        return cand in BASENAMES
+    return any(
+        (root / c).exists()
+        for c in (cand, "." + cand)  # ".github/..." loses its dot to the regex
+        for root in (ROOT, ROOT / "src" / "repro", ROOT / "src", base)
+    )
+
+
+def candidates(text: str):
+    # file-looking tokens inside backtick spans
+    for span in CODE_SPAN_RE.findall(text):
+        if SKIP_CHARS & set(span):
+            continue
+        for m in PATH_RE.finditer(span.split("::")[0]):
+            yield m.group(0)
+    # relative markdown links
+    for target in MD_LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "#", "mailto:")):
+            continue
+        if SKIP_CHARS & set(target):
+            continue
+        yield target.split("#")[0]
+
+
+def main() -> int:
+    missing = []
+    checked = 0
+    for md in md_files():
+        text = md.read_text(encoding="utf-8")
+        seen = set()
+        for cand in candidates(text):
+            if not cand or cand in seen or cand in ALLOWLIST:
+                continue
+            seen.add(cand)
+            checked += 1
+            if not resolves(cand, md.parent):
+                missing.append((md.relative_to(ROOT), cand))
+    if missing:
+        print(f"check_docs: {len(missing)} dangling path reference(s):")
+        for md, cand in missing:
+            print(f"  {md}: {cand}")
+        return 1
+    print(f"check_docs: OK ({checked} path references across "
+          f"{len(list(md_files()))} markdown files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

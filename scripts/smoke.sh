@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Fast-tier verification (< 2 min): tier-1 tests minus the slow-marked
-# tier-2 set, plus a small serving smoke on the reduced config.
+# tier-2 set, a small serving smoke on the reduced config, a docs
+# link/path check, and an HTTP smoke against a real ephemeral-port socket.
 # Full suite: scripts/test_full.sh
 # Usage: scripts/smoke.sh
 set -euo pipefail
@@ -8,10 +9,36 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== docs link/path check =="
+python scripts/check_docs.py
+
 echo "== fast-tier tests (-m 'not slow') =="
 python -m pytest -x -q -m "not slow"
 
 echo "== serving smoke (8 requests, packed FloatSD8 weights) =="
 python -m repro.launch.serve --requests 8 --batch 4 --max-new 8
+
+echo "== http smoke (ephemeral port: /healthz + one /v1/generate) =="
+HTTP_LOG=$(mktemp)
+python -m repro.launch.serve --http --port 0 --batch 2 --requests 8 >"$HTTP_LOG" 2>&1 &
+HTTP_PID=$!
+trap 'kill $HTTP_PID 2>/dev/null || true' EXIT
+# wait for the "listening on http://host:port" line, then extract the port
+PORT=""
+for _ in $(seq 1 120); do
+    PORT=$(sed -n 's/.*listening on http:\/\/[^:]*:\([0-9]*\).*/\1/p' "$HTTP_LOG" | head -1)
+    [ -n "$PORT" ] && break
+    sleep 0.5
+done
+[ -n "$PORT" ] || { echo "http smoke: server never came up"; cat "$HTTP_LOG"; exit 1; }
+curl -fsS "http://127.0.0.1:$PORT/healthz"; echo
+curl -fsS -X POST "http://127.0.0.1:$PORT/v1/generate" \
+     -H 'X-Tenant: smoke' -d '{"prompt": [5, 6, 7, 8], "max_new": 4}'; echo
+curl -fsS "http://127.0.0.1:$PORT/metrics" | grep -q '^repro_requests_total 1$'
+curl -fsS -X POST "http://127.0.0.1:$PORT/admin/drain"; echo
+wait $HTTP_PID   # drain must exit the server cleanly
+trap - EXIT
+grep -q "served 1 requests" "$HTTP_LOG" || { cat "$HTTP_LOG"; exit 1; }
+rm -f "$HTTP_LOG"
 
 echo "smoke OK"

@@ -9,15 +9,23 @@ top: engine replicas share one cache, requests carry tenants, and the
 report includes hit rates and per-tenant latency percentiles. See
 src/repro/serving/README.md for the engine and frontend lifecycles.
 
+``--http`` goes one step further: instead of draining a synthetic
+workload, the router is put behind the stdlib HTTP/SSE server
+(serving/http/) and serves real sockets until POST /admin/drain — the
+network-facing deployment of the whole stack. See serving/README.md §HTTP
+for the endpoint reference and runbook.
+
   PYTHONPATH=src python -m repro.launch.serve --requests 32 --batch 8 \
       --max-new 32 --policy floatsd8_table6            # reduced config
   ... --full                                            # paper-scale 85M LM
   ... --chunk 1 --dense                                 # seed-equivalent loop
   ... --frontend --replicas 2 --workload zipf-prefix    # router + cache
+  ... --http --port 8000 --replicas 2                   # network service
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 
 import jax
 import numpy as np
@@ -27,12 +35,48 @@ from ..core.policy import get_policy
 from ..models import build
 from ..serving import (
     ADMISSION_POLICIES,
+    HttpServer,
     PrefixCache,
     Router,
     ServeEngine,
     synthetic_prompts,
     zipf_prefix_prompts,
 )
+
+
+def _serve_http(router: Router, args) -> None:
+    """Run the HTTP/SSE service until /admin/drain (or Ctrl-C), then print
+    the final router report."""
+
+    async def run():
+        server = await HttpServer(
+            router, host=args.host, port=args.port,
+            default_max_new=args.max_new,
+        ).start()
+        print(
+            f"http: listening on http://{server.host}:{server.port} "
+            f"({args.replicas} replica(s) x {args.batch} lanes, "
+            f"admission={args.admission}); POST /admin/drain to stop",
+            flush=True,
+        )
+        try:
+            await server.serve_forever()
+        except (KeyboardInterrupt, asyncio.CancelledError):
+            pass
+
+    try:
+        asyncio.run(run())
+    except KeyboardInterrupt:
+        pass
+    rep = router.report()
+    print(
+        f"http: served {rep['requests']} requests, "
+        f"{rep['emitted_tokens']} tokens over {rep['replicas']} replica(s) | "
+        f"cache hit rate {rep['cache_hit_rate']:.0%} "
+        f"({rep['prefill_tokens_saved']} prefill tok saved) | "
+        f"rejections {rep['rejections']}",
+        flush=True,
+    )
 
 
 def main():
@@ -67,7 +111,20 @@ def main():
                     help="uniform prompt lengths, or shared-system-prompt "
                          "(zipf over a small prefix pool — what the prefix "
                          "cache is for)")
+    # http (network service) options — implies the frontend router
+    ap.add_argument("--http", action="store_true",
+                    help="serve the frontend router over HTTP/SSE "
+                         "(/v1/generate, /v1/stream, /healthz, /metrics, "
+                         "/admin/drain) instead of draining a synthetic "
+                         "workload; runs until POST /admin/drain")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="http: bind address")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="http: bind port (0 picks an ephemeral port, "
+                         "printed on startup)")
     args = ap.parse_args()
+    if args.http:
+        args.frontend = True  # the HTTP layer sits on the router
 
     cfg = get_config(args.arch)
     if cfg.family == "lstm" and not args.full:
@@ -120,6 +177,9 @@ def main():
             router_kw=dict(admission=args.admission, max_queue=args.requests),
             **engine_kw,
         )
+        if args.http:
+            _serve_http(router, args)
+            return
         for i, p in enumerate(prompts):
             router.submit(p, max_new=args.max_new, tenant=f"tenant{i % args.tenants}")
         router.drain()

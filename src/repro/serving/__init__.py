@@ -4,7 +4,9 @@ See README.md in this directory for the engine lifecycle and the packed
 weight memory model.
 """
 from .engine import Lane, ServeEngine
-from .frontend import AsyncRouter, PrefixCache, Router, Ticket
+from .frontend import AsyncRouter, PrefixCache, RequestRejected, Router, Ticket
+from .http import Client as HttpClient
+from .http import HttpError, HttpServer
 from .metrics import RequestRecord, ServeMetrics, tenant_summary
 from .scheduler import (
     ADMISSION_POLICIES,
@@ -22,6 +24,7 @@ __all__ = [
     "Scheduler", "Request", "ADMISSION_POLICIES",
     "synthetic_prompts", "zipf_prefix_prompts",
     "StatePool", "masked_reset",
-    "PrefixCache", "Router", "AsyncRouter", "Ticket",
+    "PrefixCache", "Router", "AsyncRouter", "Ticket", "RequestRejected",
+    "HttpServer", "HttpClient", "HttpError",
     "WeightStore", "PackedTensor", "pack_tree", "unpack_tree", "tree_nbytes",
 ]

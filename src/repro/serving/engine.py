@@ -55,6 +55,32 @@ class Lane:
 
 
 class ServeEngine:
+    """Continuous-batching engine: one instance owns `lanes` decode lanes,
+    a StatePool slab, and (packed) the uint8 WeightStore view of params.
+
+    Admission → inject → prefill lifecycle (per request, the contract the
+    frontend relies on): ``_arm_free_lanes`` binds the next scheduled
+    request to a free lane; if a prefix cache is attached, admission does
+    a trie ``lookup`` on the prompt first — on a hit the cached FP8 state
+    is dequantized and **injected** into the lane's slab slice
+    (``StatePool.inject``, replacing the masked reset) and prefill starts
+    at the match point; a *full* hit replays the stored ``next_token`` at
+    admission, so the request reaches first-token with zero device steps.
+    Prefill then consumes ``min(remaining, chunk)`` prompt tokens per
+    batched step (inserting block-boundary cache snapshots via
+    ``wants_snapshot``), decode emits one token per step, and retire
+    frees the lane and (``wants``) stores the final state keyed by
+    prompt + generated[:-1].
+
+    Concurrency contract: the engine is **not thread-safe** — ``submit``
+    / ``enqueue`` / ``step_once`` / ``run`` must be serialized by the
+    caller (the Router calls them from its pump; AsyncRouter serializes
+    pumps under its lock). ``step_once`` blocks the calling thread on one
+    jitted device step; everything else is host-side bookkeeping. Load
+    introspection (``free_lanes`` / ``load`` / ``has_work``) reads plain
+    host state and is safe to call between steps.
+    """
+
     def __init__(
         self,
         model,

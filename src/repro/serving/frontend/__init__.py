@@ -9,9 +9,9 @@ cache that stores per-layer (h, c) snapshots in FP8 so repeated prompt
 prefixes skip their prefill. See serving/README.md §Frontend.
 """
 from .prefix_cache import CacheEntry, CacheHit, PrefixCache
-from .router import AsyncRouter, Router, Ticket
+from .router import AsyncRouter, RequestRejected, Router, Ticket
 
 __all__ = [
     "PrefixCache", "CacheEntry", "CacheHit",
-    "Router", "AsyncRouter", "Ticket",
+    "Router", "AsyncRouter", "Ticket", "RequestRejected",
 ]

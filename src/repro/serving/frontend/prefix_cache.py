@@ -86,6 +86,20 @@ class _TrieNode:
 
 
 class PrefixCache:
+    """Token-trie keyed store of FP8 per-layer (h, c) snapshots, LRU under
+    a byte budget. See the module docstring for keying/insertion/eviction
+    semantics and the FP8 error bound.
+
+    Concurrency contract: a plain host-side object with **no internal
+    locking**. It is shared by every engine replica behind one Router,
+    which is safe because all engine calls (admission lookups, insertions
+    at prefill boundaries/retire) happen inside ``Router.pump()`` — and
+    the Router serializes pumps (single-threaded driver or the
+    AsyncRouter lock). Sharing one cache across *independently driven*
+    routers or threads requires external locking. ``stats()`` reads plain
+    counters and is safe anywhere.
+    """
+
     def __init__(
         self,
         budget_bytes: int = 64 * 2**20,

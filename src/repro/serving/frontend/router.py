@@ -42,9 +42,19 @@ from ..engine import ServeEngine
 from ..metrics import tenant_summary
 from ..scheduler import Request, Scheduler
 
-__all__ = ["Ticket", "Router", "AsyncRouter"]
+__all__ = ["Ticket", "Router", "AsyncRouter", "RequestRejected"]
 
 REJECT_REASONS = ("queue_full", "tenant_quota", "bad_request", "deadline_expired")
+
+
+class RequestRejected(RuntimeError):
+    """Raised by the asyncio streaming facade when admission rejects a
+    submission; carries the rejected Ticket so callers (e.g. the HTTP
+    layer) can map ``ticket.reason`` to a wire-level error."""
+
+    def __init__(self, ticket: "Ticket"):
+        super().__init__(f"request rejected: {ticket.reason}")
+        self.ticket = ticket
 
 
 @dataclasses.dataclass
@@ -71,6 +81,26 @@ class Ticket:
 
 
 class Router:
+    """Multi-tenant admission + dispatch over ServeEngine replicas.
+
+    Lifecycle per submission: ``submit`` (non-blocking, reject-with-reason
+    under backpressure) → bounded Scheduler queue → ``_dispatch`` to the
+    least-loaded replica with a free lane → engine admission (prefix-cache
+    lookup → ``StatePool.inject`` → chunked prefill from the match point)
+    → per-token delivery via ``_deliver`` → ticket ``done``.
+
+    Concurrency contract: the Router is **not thread-safe** and performs
+    no internal locking. ``submit``/``pump``/``drain``/``report`` must be
+    called from one thread at a time — either a single-threaded driver
+    (the CLI's ``drain()`` loop) or externally serialized, which is
+    exactly what ``AsyncRouter`` provides (one asyncio lock around every
+    mutation, pumps executed in a worker thread while holding it).
+    ``pump()`` itself never blocks on the network; one call is one
+    scheduling round (dispatch + one batched device step per busy replica
+    + token delivery), so drivers control latency/throughput trade-offs
+    by how often they pump.
+    """
+
     def __init__(
         self,
         engines: Sequence[ServeEngine],
@@ -265,6 +295,33 @@ class Router:
             e.metrics.stop()
 
     # -- reporting -------------------------------------------------------
+    @property
+    def idle(self) -> bool:
+        """True when nothing is queued or in flight — the drain condition
+        the HTTP layer's /admin/drain waits on."""
+        return not self._queue and not self._inflight
+
+    @property
+    def prefix_cache(self):
+        """The prefix cache shared by every replica (or None). All
+        replicas are built over one cache, so the first engine's is THE
+        cache — surfaced for /metrics scrapes."""
+        return self.engines[0].prefix_cache
+
+    def stats(self) -> dict:
+        """Cheap liveness snapshot (no percentile math, no record scans)
+        for health endpoints: replica/lane capacity, backlog, in-flight
+        count, and rejection counters."""
+        return {
+            "replicas": len(self.engines),
+            "lanes": sum(e.lanes_n for e in self.engines),
+            "free_lanes": sum(e.free_lanes for e in self.engines),
+            "queued": len(self._queue),
+            "inflight": len(self._inflight),
+            "tenants": len(self.tenants),
+            "rejections": dict(self.rejections),
+        }
+
     def report(self) -> dict:
         """Aggregate across replicas + router-level accounting."""
         reps = [e.metrics.report() for e in self.engines]
@@ -312,6 +369,18 @@ class AsyncRouter:
         self.router = router
         self._lock = asyncio.Lock()
 
+    async def _pump_once(self) -> None:
+        """One pump in a worker thread. Caller MUST hold ``self._lock``."""
+        fut = asyncio.ensure_future(asyncio.to_thread(self.router.pump))
+        try:
+            await asyncio.shield(fut)
+        except asyncio.CancelledError:
+            # cancelled (e.g. the caller cancelled generate()): the pump
+            # thread is still mutating the router — wait for it before the
+            # lock is released, THEN propagate
+            await fut
+            raise
+
     async def _drive(self, ticket: Ticket) -> Ticket:
         # NOT cancelled from outside: a cancel while the pump thread runs
         # would release the lock mid-pump and let a concurrent submit race
@@ -322,16 +391,29 @@ class AsyncRouter:
             async with self._lock:
                 if ticket.status in ("done", "rejected") or ticket.abandoned:
                     break
-                fut = asyncio.ensure_future(asyncio.to_thread(self.router.pump))
-                try:
-                    await asyncio.shield(fut)
-                except asyncio.CancelledError:
-                    # cancelled (e.g. the caller cancelled generate()):
-                    # the pump thread is still mutating the router — wait
-                    # for it before the lock is released, THEN propagate
-                    await fut
-                    raise
+                await self._pump_once()
         return ticket
+
+    async def snapshot(self, fn):
+        """Run ``fn(router)`` under the pump lock and return its result —
+        the safe way to read aggregate state (``report()``/``stats()``)
+        while pumps execute in a worker thread: iterating the tenant /
+        record collections concurrently with a mutating pump is a data
+        race. Keep ``fn`` host-side and cheap; it delays the next pump."""
+        async with self._lock:
+            return fn(self.router)
+
+    async def join(self) -> None:
+        """Pump until the router is fully idle (nothing queued, nothing in
+        flight). The drain primitive: /admin/drain stops admission at the
+        HTTP layer, then ``join()`` finishes every admitted request —
+        including tickets whose streaming consumer disconnected and
+        abandoned them."""
+        while not self.router.idle:
+            async with self._lock:
+                if self.router.idle:
+                    break
+                await self._pump_once()
 
     async def generate(self, prompt, **kw) -> Ticket:
         """Submit and await completion; returns the finished Ticket (check
@@ -342,14 +424,14 @@ class AsyncRouter:
             return ticket
         return await self._drive(ticket)
 
-    async def stream(self, prompt, **kw):
-        """Async generator of tokens as they are produced.
+    async def open_stream(self, prompt, **kw):
+        """Submit for streaming; returns ``(ticket, token_iterator)``.
 
-        If the consumer exits early (break / connection drop), the ticket
-        is marked abandoned: this coroutine stops driving it within one
-        pump, and the request finishes only if other activity keeps the
-        router pumping. Cancelling the request *inside the engine* (freeing
-        its lane mid-generation) is a ROADMAP item.
+        On rejection the iterator is ``None`` and the ticket carries the
+        reason — no exception, so protocol frontends can map the reason to
+        a wire-level status *before* committing to a streaming response.
+        The iterator (when present) yields tokens as they are produced and
+        must be fully consumed or ``aclose()``d.
         """
         loop = asyncio.get_running_loop()
         q: asyncio.Queue = asyncio.Queue()
@@ -361,20 +443,46 @@ class AsyncRouter:
                 **kw,
             )
         if ticket.status == "rejected":
-            raise RuntimeError(f"request rejected: {ticket.reason}")
+            return ticket, None
 
-        async def drive():
+        async def tokens():
+            async def drive():
+                try:
+                    await self._drive(ticket)
+                finally:
+                    # runs on the event loop AFTER any pending token
+                    # callbacks scheduled from the pump thread (loop
+                    # callbacks are FIFO)
+                    q.put_nowait(done)
+
+            task = asyncio.create_task(drive())
             try:
-                await self._drive(ticket)
+                while (tok := await q.get()) is not done:
+                    yield tok
             finally:
-                # runs on the event loop AFTER any pending token callbacks
-                # scheduled from the pump thread (loop callbacks are FIFO)
-                q.put_nowait(done)
+                ticket.abandoned = True
+                await task
 
-        task = asyncio.create_task(drive())
+        return ticket, tokens()
+
+    async def stream(self, prompt, **kw):
+        """Async generator of tokens as they are produced. Raises
+        ``RequestRejected`` (carrying the ticket) on admission rejection.
+
+        If the consumer exits early (break / connection drop), the ticket
+        is marked abandoned: this coroutine stops driving it within one
+        pump, and the request finishes only if other activity keeps the
+        router pumping (``join()`` during drain does). Cancelling the
+        request *inside the engine* (freeing its lane mid-generation) is a
+        ROADMAP item.
+        """
+        ticket, toks = await self.open_stream(prompt, **kw)
+        if toks is None:
+            raise RequestRejected(ticket)
         try:
-            while (tok := await q.get()) is not done:
+            async for tok in toks:
                 yield tok
         finally:
-            ticket.abandoned = True
-            await task
+            # `async for` does not close a half-consumed inner generator on
+            # early exit; closing it here is what flips ticket.abandoned
+            await toks.aclose()

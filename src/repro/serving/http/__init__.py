@@ -1,0 +1,13 @@
+"""repro.serving.http — stdlib HTTP/SSE network service over the router.
+
+The deployable face of the serving stack: ``HttpServer`` exposes
+/v1/generate (JSON), /v1/stream (SSE), /healthz, /metrics (Prometheus),
+and /admin/drain over ``asyncio.start_server``; ``Client`` is the
+matching stdlib client. See serving/README.md §HTTP for the endpoint
+reference, wire formats, and the operational runbook.
+"""
+from .client import Client, HttpError
+from .prometheus import render_metrics
+from .server import REASON_STATUS, HttpServer
+
+__all__ = ["HttpServer", "Client", "HttpError", "REASON_STATUS", "render_metrics"]

@@ -1,0 +1,153 @@
+"""Prometheus text exposition (version 0.0.4) for the serving stack.
+
+Renders one scrape from three sources, all host-side dicts — no device
+work happens on the scrape path:
+
+* ``Router.report()`` — aggregate engine counters (requests, steps,
+  tokens, cache hit/saved) and per-tenant TTFT/latency percentiles;
+* ``Router.stats()`` — instantaneous gauges (free lanes, queue depth,
+  in-flight) plus rejection counters by reason;
+* ``PrefixCache.stats()`` — entry/byte occupancy and hit/eviction
+  counters for the shared FP8 LSTM-state prefix cache.
+
+Percentiles are exported summary-style (``quantile`` label) because they
+are computed router-side over retired-request records; counters follow
+the ``_total`` naming convention. Everything is prefixed ``repro_`` so a
+shared Prometheus can scrape several services without collisions.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+__all__ = ["render_metrics", "CONTENT_TYPE"]
+
+CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+
+def _escape(value: str) -> str:
+    return value.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+class _Writer:
+    def __init__(self):
+        self.lines: list[str] = []
+
+    def metric(self, name: str, mtype: str, help_: str) -> None:
+        self.lines.append(f"# HELP {name} {help_}")
+        self.lines.append(f"# TYPE {name} {mtype}")
+
+    def sample(self, name: str, value, labels: Optional[dict] = None) -> None:
+        label_s = ""
+        if labels:
+            inner = ",".join(
+                f'{k}="{_escape(str(v))}"' for k, v in labels.items()
+            )
+            label_s = "{" + inner + "}"
+        # integral values render as exact integers: '%g' would round
+        # counters to 6 significant digits (1234567 -> 1.23457e+06),
+        # corrupting rate() and scrape-diff arithmetic on busy servers
+        v = float(value)
+        rendered = str(int(v)) if v.is_integer() and abs(v) < 2**53 else repr(v)
+        self.lines.append(f"{name}{label_s} {rendered}")
+
+    def render(self) -> str:
+        return "\n".join(self.lines) + "\n"
+
+
+def render_metrics(
+    report: dict,
+    stats: dict,
+    cache_stats: Optional[dict] = None,
+    draining: bool = False,
+    uptime_s: float = 0.0,
+    http_requests: int = 0,
+) -> str:
+    w = _Writer()
+
+    # -- service-level gauges -------------------------------------------
+    w.metric("repro_up", "gauge", "1 while the server accepts requests, 0 while draining.")
+    w.sample("repro_up", 0.0 if draining else 1.0)
+    w.metric("repro_uptime_seconds", "gauge", "Seconds since the HTTP server started.")
+    w.sample("repro_uptime_seconds", uptime_s)
+    w.metric("repro_replicas", "gauge", "Engine replicas behind the router.")
+    w.sample("repro_replicas", stats["replicas"])
+    w.metric("repro_lanes", "gauge", "Total decode lanes across replicas.")
+    w.sample("repro_lanes", stats["lanes"])
+    w.metric("repro_free_lanes", "gauge", "Currently unbound decode lanes.")
+    w.sample("repro_free_lanes", stats["free_lanes"])
+    w.metric("repro_queue_depth", "gauge", "Requests waiting in the router queue.")
+    w.sample("repro_queue_depth", stats["queued"])
+    w.metric("repro_inflight_requests", "gauge", "Requests admitted but not yet retired.")
+    w.sample("repro_inflight_requests", stats["inflight"])
+    w.metric("repro_http_requests_total", "counter",
+             "HTTP requests handled across ALL endpoints (scrapes and "
+             "rejections included) — distinguishes wire traffic from "
+             "router admissions.")
+    w.sample("repro_http_requests_total", http_requests)
+
+    # -- engine counters -------------------------------------------------
+    counters = (
+        ("repro_requests_total", "requests", "Requests retired across all replicas."),
+        ("repro_steps_total", "steps", "Batched device steps across all replicas."),
+        ("repro_prefill_steps_total", "prefill_steps", "Steps whose token block was wider than one position."),
+        ("repro_decode_steps_total", "decode_steps", "One-token decode steps."),
+        ("repro_emitted_tokens_total", "emitted_tokens", "Generated tokens delivered to clients."),
+        ("repro_prompt_tokens_total", "prompt_tokens", "Prompt tokens consumed by prefill."),
+    )
+    for name, key, help_ in counters:
+        w.metric(name, "counter", help_)
+        w.sample(name, report[key])
+
+    w.metric("repro_rejections_total", "counter",
+             "Admission rejections by reason (queue_full | tenant_quota | bad_request | deadline_expired).")
+    for reason, n in sorted(stats["rejections"].items()):
+        w.sample("repro_rejections_total", n, {"reason": reason})
+
+    # -- prefix cache ----------------------------------------------------
+    w.metric("repro_cache_lookups_total", "counter", "Prefix-cache admission lookups.")
+    w.sample("repro_cache_lookups_total", report["cache_lookups"])
+    w.metric("repro_cache_hits_total", "counter", "Lookups that injected a cached FP8 state.")
+    w.sample("repro_cache_hits_total", report["cache_hits"])
+    w.metric("repro_cache_full_hits_total", "counter", "Hits that skipped prefill entirely.")
+    w.sample("repro_cache_full_hits_total", report["cache_full_hits"])
+    w.metric("repro_prefill_tokens_saved_total", "counter",
+             "Prompt tokens never sent to the device thanks to cache injection.")
+    w.sample("repro_prefill_tokens_saved_total", report["prefill_tokens_saved"])
+    if cache_stats is not None:
+        w.metric("repro_cache_entries", "gauge", "Live prefix-cache entries.")
+        w.sample("repro_cache_entries", cache_stats["entries"])
+        w.metric("repro_cache_bytes", "gauge", "FP8 payload bytes resident in the prefix cache.")
+        w.sample("repro_cache_bytes", cache_stats["nbytes"])
+        w.metric("repro_cache_budget_bytes", "gauge", "Prefix-cache byte budget (--cache-mb).")
+        w.sample("repro_cache_budget_bytes", cache_stats["budget_bytes"])
+        w.metric("repro_cache_evictions_total", "counter", "LRU evictions under the byte budget.")
+        w.sample("repro_cache_evictions_total", cache_stats["evictions"])
+
+    # -- per-tenant summaries -------------------------------------------
+    w.metric("repro_tenant_requests_total", "counter", "Submissions by tenant.")
+    w.metric("repro_tenant_completed_total", "counter", "Completed requests by tenant.")
+    w.metric("repro_tenant_rejected_total", "counter", "Rejected submissions by tenant.")
+    w.metric("repro_tenant_tokens_total", "counter", "Generated tokens by tenant.")
+    for tenant, t in report.get("tenants", {}).items():
+        lbl = {"tenant": tenant}
+        w.sample("repro_tenant_requests_total", t.get("submitted", 0), lbl)
+        w.sample("repro_tenant_completed_total", t.get("completed", 0), lbl)
+        w.sample("repro_tenant_rejected_total", t.get("rejected", 0), lbl)
+        w.sample("repro_tenant_tokens_total", t.get("tokens", 0), lbl)
+    w.metric("repro_tenant_ttft_seconds", "summary",
+             "Time to first token by tenant (summary over retired requests).")
+    w.metric("repro_tenant_latency_seconds", "summary",
+             "Submit-to-done latency by tenant (summary over retired requests).")
+    for tenant, t in report.get("tenants", {}).items():
+        for metric, stem in (
+            ("repro_tenant_ttft_seconds", "ttft"),
+            ("repro_tenant_latency_seconds", "latency"),
+        ):
+            for q, key in (("0.5", "p50"), ("0.95", "p95")):
+                if f"{stem}_{key}_s" in t:
+                    w.sample(
+                        metric,
+                        t[f"{stem}_{key}_s"],
+                        {"tenant": tenant, "quantile": q},
+                    )
+    return w.render()

@@ -25,13 +25,22 @@ retired requests they return 0.0 (or empty aggregates), never raise.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Optional
 
 import numpy as np
 
-__all__ = ["RequestRecord", "ServeMetrics", "tenant_summary"]
+__all__ = ["RequestRecord", "ServeMetrics", "tenant_summary", "RECORD_WINDOW"]
+
+# Per-request records feed percentile summaries only, so they are kept in
+# a sliding window: a long-lived server (launch/serve --http) retires
+# requests forever, and an unbounded list would grow without limit while
+# every /metrics scrape paid O(history) percentile math under the router
+# pump lock. Totals ("requests" etc.) come from plain counters, not the
+# window, so counter metrics stay monotonic after the window wraps.
+RECORD_WINDOW = 4096
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,7 +96,10 @@ class ServeMetrics:
     cache_hits: int = 0  # ... that injected a cached state
     cache_full_hits: int = 0  # ... that skipped prefill entirely
     prefill_tokens_saved: int = 0  # prompt tokens not consumed due to hits
-    records: list = dataclasses.field(default_factory=list)
+    retired: int = 0  # total retired requests (records is only a window)
+    records: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=RECORD_WINDOW)
+    )
     t_start: Optional[float] = None
     t_stop: Optional[float] = None
 
@@ -119,6 +131,7 @@ class ServeMetrics:
 
     def on_retire(self, req, now: float | None = None) -> None:
         now = time.monotonic() if now is None else now
+        self.retired += 1
         t0 = req.t_submit if req.t_submit is not None else now
         t1 = req.t_first if req.t_first is not None else now
         self.records.append(
@@ -161,7 +174,7 @@ class ServeMetrics:
         ttfts = np.array([r.ttft for r in self.records])
         lats = np.array([r.latency for r in self.records])
         return {
-            "requests": len(self.records),
+            "requests": self.retired,
             "steps": self.steps,
             "prefill_steps": self.prefill_steps,
             "decode_steps": self.decode_steps,
