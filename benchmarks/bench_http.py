@@ -28,6 +28,15 @@ Phases (``--workload all``, the default, runs every one):
   is asserted (the model is briefly pretrained so greedy margins are
   decisive — see bench_serving.py).
 
+Every HTTP request streams with ``debug=True``, so the terminal SSE
+``done`` event carries the server-side phase breakdown
+(queue/prefill/decode ms + cache savings) — summarized per phase as
+TTFT-decomposition columns, which is what turns "warm p95 improved"
+into "warm p95 improved because prefill_ms collapsed". Each HTTP phase
+also pulls ``GET /admin/trace`` before drain; ``--trace-out`` writes the
+last one (the warm zipf phase under the default workload) as
+Perfetto-loadable Chrome trace-event JSON.
+
 Writes ``BENCH_http.json`` (tracked in EXPERIMENTS.md hillclimb #6):
 
     PYTHONPATH=src python benchmarks/bench_http.py --requests 24 --rate 8
@@ -129,36 +138,47 @@ async def run_inproc_phase(router, prompts, rate, max_new, tenants, chunk):
             for i, p in enumerate(prompts)
         )
     )
-    return results, time.monotonic() - t0, None
+    return results, time.monotonic() - t0, None, None
 
 
 async def run_http_phase(router, prompts, rate, max_new, tenants, chunk):
     """Open-loop arrivals through a real ephemeral-port TCP socket. The
     returned counters are scraped from the server's own /metrics endpoint,
     diffed around the measurement window so the jit-warmup request is
-    excluded."""
+    excluded; the returned trace is Chrome trace-event JSON pulled from
+    /admin/trace before drain, cleared after warmup so it covers exactly
+    the measurement window."""
     server = await HttpServer(router, port=0).start()
     serve_task = asyncio.create_task(server.serve_forever())
     admin = Client(server.host, server.port)
     await admin.generate(_warm_prompt(chunk), max_new=2)  # compile via socket
     baseline = _scrape_counters(await admin.metrics())
+    from repro.obs.trace import TRACER
+
+    TRACER.clear()  # trace the measurement window, not the warmup
 
     async def one(i, prompt):
         t_submit = time.monotonic()
-        toks, times = [], []
+        toks, times, phases = [], [], None
         try:
             async with Client(
                 server.host, server.port, tenant=f"tenant{i % tenants}"
             ) as c:
-                async for ev, data in c.stream(prompt, max_new=max_new):
+                async for ev, data in c.stream(
+                    prompt, max_new=max_new, debug=True
+                ):
                     if ev == "message":
                         toks.append(data["token"])
                         times.append(time.monotonic())
+                    elif ev == "done":
+                        phases = data.get("phases")
         except HttpError as e:
             # summarize() derives the rejected count from empty `times`
             return {"t_submit": t_submit, "tokens": [], "times": [],
                     "rejected": e.body.get("error", e.status)}
-        return _record(t_submit, toks, times)
+        rec = _record(t_submit, toks, times)
+        rec["phases"] = phases
+        return rec
 
     t0 = time.monotonic()
     results = await asyncio.gather(
@@ -169,11 +189,12 @@ async def run_http_phase(router, prompts, rate, max_new, tenants, chunk):
     )
     wall = time.monotonic() - t0
     final = _scrape_counters(await admin.metrics())  # BEFORE drain shuts us down
+    trace = await admin.trace()
     await admin.drain()
     await admin.close()
     await asyncio.wait_for(serve_task, timeout=120)
     counters = {k: final[k] - baseline.get(k, 0) for k in final}
-    return results, wall, counters
+    return results, wall, counters, trace
 
 
 _COUNTERS = (
@@ -220,6 +241,16 @@ def summarize(results, wall, counters=None):
     }
     if counters is not None:
         out.update(counters)
+    # server-side TTFT decomposition (debug=True phase breakdowns): where
+    # did the time go — queued behind other requests, prefilling, decoding?
+    breakdown = [r["phases"] for r in served if r.get("phases")]
+    if breakdown:
+        for key in ("queue_ms", "prefill_ms", "decode_ms"):
+            vals = [b[key] for b in breakdown]
+            out[f"{key[:-3]}_p50_ms"] = round(_pct(vals, 50), 2)
+            out[f"{key[:-3]}_p95_ms"] = round(_pct(vals, 95), 2)
+        out["cache_hit_requests"] = sum(bool(b["cache_hit"]) for b in breakdown)
+        out["cache_saved_steps"] = sum(b["cache_saved_steps"] for b in breakdown)
     return out
 
 
@@ -244,6 +275,16 @@ def print_phase(name, s):
         f" | {s['gen_tok_per_s']:6.1f} gen tok/s{extra}",
         flush=True,
     )
+    if "queue_p95_ms" in s:
+        print(
+            f"{'':18} breakdown p50/p95:"
+            f" queue {s['queue_p50_ms']:6.1f}/{s['queue_p95_ms']:6.1f}ms"
+            f" | prefill {s['prefill_p50_ms']:6.1f}/{s['prefill_p95_ms']:6.1f}ms"
+            f" | decode {s['decode_p50_ms']:6.1f}/{s['decode_p95_ms']:6.1f}ms"
+            f" | cache-hit reqs {s['cache_hit_requests']}"
+            f" (saved {s['cache_saved_steps']} steps)",
+            flush=True,
+        )
 
 
 def main():
@@ -264,6 +305,9 @@ def main():
     ap.add_argument("--workload", choices=["uniform", "zipf-prefix", "all"],
                     default="all")
     ap.add_argument("--out", default="BENCH_http.json")
+    ap.add_argument("--trace-out", default="BENCH_http_trace.json",
+                    help="write the last HTTP phase's /admin/trace export "
+                    "(Chrome trace-event JSON; open in Perfetto); '' skips")
     args = ap.parse_args()
 
     policy = get_policy("floatsd8_table6")
@@ -273,6 +317,7 @@ def main():
     rng = np.random.default_rng(args.seed)
     phases: dict = {}
     agree: dict = {}
+    last_trace = None
 
     def run(phase_coro):
         return asyncio.run(phase_coro)
@@ -283,7 +328,7 @@ def main():
 
         print(f"== uniform workload: {args.requests} requests @ "
               f"{args.rate}/s, max_new={args.max_new} ==", flush=True)
-        results, wall, _ = run(
+        results, wall, _, _ = run(
             run_inproc_phase(
                 build_router(model, params, policy, args),
                 prompts, args.rate, args.max_new, args.tenants, args.chunk,
@@ -293,7 +338,7 @@ def main():
         inproc_tokens = tokens_of(results)
         print_phase("inproc_uniform", phases["inproc_uniform"])
 
-        results, wall, counters = run(
+        results, wall, counters, last_trace = run(
             run_http_phase(
                 build_router(model, params, policy, args),
                 prompts, args.rate, args.max_new, args.tenants, args.chunk,
@@ -319,7 +364,7 @@ def main():
         measure = zipf_prefix_prompts(
             args.requests, args.vocab, np.random.default_rng(args.seed + 2), **wkw
         )
-        results, wall, counters = run(
+        results, wall, counters, _ = run(
             run_http_phase(
                 build_router(model, params, policy, args),
                 measure, args.rate, args.max_new, args.tenants, args.chunk,
@@ -335,7 +380,7 @@ def main():
             warm_pass.submit(p, max_new=args.max_new)
         warm_pass.drain()
 
-        results, wall, counters = run(
+        results, wall, counters, last_trace = run(
             run_http_phase(
                 build_router(model, params, policy, args, cache=cache),
                 measure, args.rate, args.max_new, args.tenants, args.chunk,
@@ -384,6 +429,13 @@ def main():
         json.dump(out, f, indent=2)
         f.write("\n")
     print(f"wrote {args.out}", flush=True)
+    if args.trace_out and last_trace is not None:
+        with open(args.trace_out, "w") as f:
+            json.dump(last_trace, f)
+            f.write("\n")
+        n_ev = len(last_trace.get("traceEvents", []))
+        print(f"wrote {args.trace_out} ({n_ev} trace events; open in "
+              f"https://ui.perfetto.dev)", flush=True)
 
     failures = []
     if agree.get("http_vs_inproc", 1.0) != 1.0:

@@ -17,6 +17,13 @@ Plus the acceptance trajectory: the fused loss curve must be bit-identical
 across two runs on ref (deterministic recompute), and ref-vs-pallas
 divergence over the measured steps is reported when --backend both.
 
+A separate telemetry phase (``--telemetry-steps``, default 50; 0 skips)
+runs a telemetry-enabled step with the in-kernel FP8 flush counters on
+and records the quantization-health aggregate (FP8 saturation/underflow,
+FloatSD carry/clamp, loss-scale events, per-layer grad norms) under the
+``"telemetry"`` key of BENCH_train.json. It is deliberately NOT the
+timed run: the perf numbers stay free of telemetry overhead.
+
     PYTHONPATH=src python benchmarks/bench_train.py --steps 30 --seq 128
     PYTHONPATH=src python benchmarks/bench_train.py --backend both --steps 5
     PYTHONPATH=src python benchmarks/bench_train.py --seqs 64,128,256
@@ -117,9 +124,36 @@ def _measure(model, policy, batch_iter, batch_dims, steps, fused, backend,
     }
 
 
+def _telemetry_run(model, policy, batch_iter, steps, seed=0):
+    """Quantization-health pass: telemetry-enabled step + kernel FP8 flush
+    counters over ``steps`` steps on the ref backend. Separate from the
+    timed measurement so those numbers stay telemetry-free."""
+    from repro.obs.telemetry import KERNEL_STATS, TelemetryLogger
+    from repro.optim import sgd
+    from repro.optim.train_state import init_state, make_train_step
+
+    opt = sgd(0.9)
+    params = model.init(jax.random.PRNGKey(seed))
+    state = init_state(params, opt, policy)
+    KERNEL_STATS.reset()
+    KERNEL_STATS.enable()  # trace-time gate: before the first step compiles
+    try:
+        step_fn = make_train_step(model.loss, opt, policy, lr=0.5,
+                                  donate=True, telemetry=True)
+        logger = TelemetryLogger()
+        for i in range(1, steps + 1):
+            bt = {k: jnp.asarray(v) for k, v in next(batch_iter).items()}
+            state, m = step_fn(state, bt)
+            logger.update(i, m)
+        rec = logger.emit(steps)
+    finally:
+        KERNEL_STATS.disable()
+    return rec.to_dict()
+
+
 def run(backends=("ref",), seqs=(128,), steps=10, batch=16, vocab=2048,
         emb=256, hidden=256, layers=2, policy_name="floatsd8_table6",
-        out=None, verbose=True):
+        out=None, verbose=True, telemetry_steps=50):
     from repro.core.policy import get_policy
 
     policy = get_policy(policy_name)
@@ -182,6 +216,24 @@ def run(backends=("ref",), seqs=(128,), steps=10, batch=16, vocab=2048,
         "results": results,
         "ref_vs_pallas_loss_divergence": divergence,
     }
+    if telemetry_steps > 0:
+        tel = _telemetry_run(
+            model, policy, _batches(batch, seqs[0], vocab),
+            telemetry_steps,
+        )
+        report["telemetry"] = tel
+        if verbose:
+            k = tel.get("kernel", {}).get("floatsd_matmul_dw", {})
+            print(
+                f"[telemetry {telemetry_steps} steps] fp8 sat "
+                f"{tel['fp8_sat_frac']:.2e} under {tel['fp8_underflow_frac']:.2e} "
+                f"zero {tel['fp8_zero_frac']:.3f} | sd carry "
+                f"{tel['sd_carry_frac']:.3f} clamp {tel['sd_clamp_frac']:.2e} | "
+                f"scale {tel['loss_scale']:.0f} "
+                f"({tel['nonfinite_steps']} skipped) | kernel dw flushes "
+                f"{k.get('calls', 0)} (zero_frac {k.get('zero_frac', 0):.3f})",
+                flush=True,
+            )
     if out:
         os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
         with open(out, "w") as f:
@@ -205,12 +257,15 @@ def main():
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--policy", default="floatsd8_table6")
     ap.add_argument("--out", default="BENCH_train.json")
+    ap.add_argument("--telemetry-steps", type=int, default=50,
+                    help="steps for the quantization-health telemetry pass "
+                    "(0 skips it; never part of the timed measurement)")
     a = ap.parse_args()
     backends = ("ref", "pallas") if a.backend == "both" else (a.backend,)
     seqs = tuple(int(s) for s in a.seqs.split(",")) if a.seqs else (a.seq,)
     run(backends=backends, seqs=seqs, steps=a.steps, batch=a.batch,
         vocab=a.vocab, emb=a.emb, hidden=a.hidden, layers=a.layers,
-        policy_name=a.policy, out=a.out)
+        policy_name=a.policy, out=a.out, telemetry_steps=a.telemetry_steps)
 
 
 if __name__ == "__main__":

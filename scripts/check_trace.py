@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""Validate a Chrome trace-event JSON export (what GET /admin/trace and
+bench_http --trace-out produce).
+
+Checks the invariants Perfetto / chrome://tracing rely on, so a broken
+export fails in CI instead of failing silently in the viewer:
+
+  * top level is ``{"traceEvents": [...]}``
+  * every event has the required keys (name/ph/ts/pid/tid), sane types,
+    and a known phase (B, E, X, i, C)
+  * timestamps are monotone non-decreasing in array order (the exporter
+    sorts; Perfetto tolerates disorder but our exporter promises order)
+  * per (pid, tid), B/E events pair up like brackets: no E without a
+    matching B, matching names, nothing left open at the end
+  * X (complete) events carry a non-negative ``dur``
+
+Usage:
+    scripts/check_trace.py trace.json
+    curl -fsS http://host:port/admin/trace | scripts/check_trace.py -
+
+Importable too: ``validate_trace(obj) -> list[str]`` returns problems
+(empty list = valid), used by the test suite and smoke script.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+REQUIRED_KEYS = ("name", "ph", "ts", "pid", "tid")
+KNOWN_PHASES = {"B", "E", "X", "i", "C"}
+
+
+def validate_trace(obj) -> list:
+    """Return a list of problem strings (empty = valid trace)."""
+    problems = []
+    if not isinstance(obj, dict) or "traceEvents" not in obj:
+        return ["top level must be an object with a 'traceEvents' array"]
+    events = obj["traceEvents"]
+    if not isinstance(events, list):
+        return ["'traceEvents' must be an array"]
+
+    last_ts = None
+    stacks: dict = {}  # (pid, tid) -> [(name, idx), ...] open B spans
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            problems.append(f"event {i}: not an object")
+            continue
+        missing = [k for k in REQUIRED_KEYS if k not in ev]
+        if missing:
+            problems.append(f"event {i}: missing keys {missing}")
+            continue
+        ph = ev["ph"]
+        if ph not in KNOWN_PHASES:
+            problems.append(f"event {i}: unknown phase {ph!r}")
+            continue
+        ts = ev["ts"]
+        if not isinstance(ts, (int, float)) or ts < 0:
+            problems.append(f"event {i}: bad ts {ts!r}")
+            continue
+        if last_ts is not None and ts < last_ts:
+            problems.append(
+                f"event {i}: ts {ts} goes backwards (prev {last_ts})"
+            )
+        last_ts = ts
+        key = (ev["pid"], ev["tid"])
+        if ph == "B":
+            stacks.setdefault(key, []).append((ev["name"], i))
+        elif ph == "E":
+            stack = stacks.get(key)
+            if not stack:
+                problems.append(
+                    f"event {i}: E {ev['name']!r} with no open B on tid {key}"
+                )
+            else:
+                name, j = stack.pop()
+                if name != ev["name"]:
+                    problems.append(
+                        f"event {i}: E {ev['name']!r} closes B {name!r} "
+                        f"(event {j}) on tid {key}"
+                    )
+        elif ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                problems.append(f"event {i}: X without non-negative dur")
+
+    for key, stack in stacks.items():
+        for name, j in stack:
+            problems.append(
+                f"unterminated B {name!r} (event {j}) on tid {key}"
+            )
+    return problems
+
+
+def main(argv) -> int:
+    if len(argv) != 2 or argv[1] in ("-h", "--help"):
+        print(__doc__, file=sys.stderr)
+        return 2
+    raw = (
+        sys.stdin.read() if argv[1] == "-" else open(argv[1]).read()
+    )
+    try:
+        obj = json.loads(raw)
+    except json.JSONDecodeError as e:
+        print(f"check_trace: not JSON: {e}", file=sys.stderr)
+        return 1
+    problems = validate_trace(obj)
+    if problems:
+        for p in problems[:20]:
+            print(f"check_trace: {p}", file=sys.stderr)
+        if len(problems) > 20:
+            print(f"check_trace: ... {len(problems) - 20} more", file=sys.stderr)
+        return 1
+    n = len(obj["traceEvents"])
+    print(f"check_trace: OK ({n} events)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

@@ -34,7 +34,16 @@ done
 curl -fsS "http://127.0.0.1:$PORT/healthz"; echo
 curl -fsS -X POST "http://127.0.0.1:$PORT/v1/generate" \
      -H 'X-Tenant: smoke' -d '{"prompt": [5, 6, 7, 8], "max_new": 4}'; echo
-curl -fsS "http://127.0.0.1:$PORT/metrics" | grep -q '^repro_requests_total 1$'
+METRICS=$(curl -fsS "http://127.0.0.1:$PORT/metrics")
+echo "$METRICS" | grep -q '^repro_requests_total 1$'
+# kernel dispatch decisions must be exported with op/backend labels
+echo "$METRICS" | grep -q '^repro_dispatch_decisions_total{' \
+    || { echo "http smoke: repro_dispatch_decisions_total missing from /metrics"; exit 1; }
+echo "$METRICS" | grep -q '^repro_trace_enabled 1$' \
+    || { echo "http smoke: tracer not enabled on the serve path"; exit 1; }
+# the trace export must be valid Chrome trace-event JSON (required keys,
+# monotone ts, matched B/E pairs) — scripts/check_trace.py asserts all of it
+curl -fsS "http://127.0.0.1:$PORT/admin/trace" | python scripts/check_trace.py -
 curl -fsS -X POST "http://127.0.0.1:$PORT/admin/drain"; echo
 wait $HTTP_PID   # drain must exit the server cleanly
 trap - EXIT

@@ -36,6 +36,7 @@ import contextlib
 import dataclasses
 import functools
 import os
+import threading
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -43,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import floatsd
+from ..obs import telemetry as obs_telemetry
 from .floatsd_matmul.bwd import (
     matmul_dw_pallas,
     matmul_dw_ref,
@@ -109,28 +111,40 @@ class Decision(NamedTuple):
 
 
 class DispatchStats:
-    """Per-(op, backend) resolution counters + the last Decision per op."""
+    """Per-(op, backend) resolution counters + the last Decision per op.
+
+    Lock-guarded: resolutions happen at trace time on whatever thread is
+    tracing (the serving pump worker, a test thread), while the /metrics
+    scrape path reads ``snapshot()`` from the HTTP event loop — iterating
+    the Counter during a concurrent ``record`` would be a data race."""
 
     def __init__(self):
         self.counts: collections.Counter = collections.Counter()
         self.last: dict[str, Decision] = {}
+        self._lock = threading.Lock()
 
     def record(self, d: Decision) -> None:
-        self.counts[(d.op, d.backend)] += 1
-        self.last[d.op] = d
+        with self._lock:
+            self.counts[(d.op, d.backend)] += 1
+            self.last[d.op] = d
 
     def count(self, op: str | None = None, backend: str | None = None) -> int:
-        return sum(
-            n for (o, b), n in self.counts.items()
-            if (op is None or o == op) and (backend is None or b == backend)
-        )
+        with self._lock:
+            return sum(
+                n for (o, b), n in self.counts.items()
+                if (op is None or o == op) and (backend is None or b == backend)
+            )
 
     def reset(self) -> None:
-        self.counts.clear()
-        self.last.clear()
+        with self._lock:
+            self.counts.clear()
+            self.last.clear()
 
     def snapshot(self) -> dict:
-        return dict(self.counts)
+        """{(op, backend): resolutions} — what /metrics exports as
+        ``repro_dispatch_decisions_total{op,backend}``."""
+        with self._lock:
+            return dict(self.counts)
 
 
 STATS = DispatchStats()
@@ -414,6 +428,26 @@ def matmul_dx(g, codes, bias, *, backend: str | None = None):
     return dx.reshape(*lead, k)
 
 
+def _dw_flush_telemetry(dw, quant: bool):
+    """Quantizer-health hook at the matmul_dw flush: when the telemetry
+    sink is enabled (checked at trace time — see ``KernelStats``), count
+    saturated (|dw| at the e5m2 clamp) and zero (true zeros + underflow,
+    already collapsed by the in-kernel quantizer) elements of the flushed
+    dW and report them host-side via ``jax.debug.callback``."""
+    if not (quant and obs_telemetry.KERNEL_STATS.enabled):
+        return dw
+    sat = jnp.sum(jnp.abs(dw) >= obs_telemetry.FP8_SAT_THRESHOLD)
+    zero = jnp.sum(dw == 0)
+    jax.debug.callback(
+        functools.partial(
+            obs_telemetry.KERNEL_STATS.record, "floatsd_matmul_dw", dw.size
+        ),
+        sat,
+        zero,
+    )
+    return dw
+
+
 def matmul_dw(x, g, *, quant: bool = True, backend: str | None = None):
     """Weight gradient of the FloatSD8 matmul, backend-resolved:
     x [..., K]^T x g [..., N] -> [K, N], f32 accumulation, the paper's FP8
@@ -429,7 +463,7 @@ def matmul_dw(x, g, *, quant: bool = True, backend: str | None = None):
     native, waste, (kp, mp, np_) = _matmul_geometry(k, m, n)
     dec = _choose("floatsd_matmul_dw", native, waste, backend)
     if dec.backend == "ref":
-        return matmul_dw_ref(x2, g2, quant=quant)
+        return _dw_flush_telemetry(matmul_dw_ref(x2, g2, quant=quant), quant)
     xx, gg = x2, g2
     if dec.padded:
         xx = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
@@ -439,7 +473,7 @@ def matmul_dw(x, g, *, quant: bool = True, backend: str | None = None):
                           interpret=dec.interpret)
     if dec.padded:
         dw = dw[:k, :n]
-    return dw
+    return _dw_flush_telemetry(dw, quant)
 
 
 def lstm_cell_grad(z, c_prev, dh, dc, *, quantized: bool = True,

@@ -51,7 +51,7 @@ def _serve_http(router: Router, args) -> None:
     async def run():
         server = await HttpServer(
             router, host=args.host, port=args.port,
-            default_max_new=args.max_new,
+            default_max_new=args.max_new, trace=not args.no_trace,
         ).start()
         print(
             f"http: listening on http://{server.host}:{server.port} "
@@ -122,6 +122,9 @@ def main():
     ap.add_argument("--port", type=int, default=8000,
                     help="http: bind port (0 picks an ephemeral port, "
                          "printed on startup)")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="http: disable the request-lifecycle tracer "
+                         "(GET /admin/trace then exports an empty trace)")
     args = ap.parse_args()
     if args.http:
         args.frontend = True  # the HTTP layer sits on the router

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import argparse
 import collections
+import os
 import time
 
 import jax
@@ -34,6 +35,7 @@ from ..distributed.fault_tolerance import (
     StragglerMonitor,
 )
 from ..models import build
+from ..obs.telemetry import TelemetryLogger
 from ..optim import adam, sgd
 from ..optim.train_state import init_state, make_train_step
 
@@ -79,6 +81,11 @@ def main():
     ap.add_argument("--no-fused", action="store_true",
                     help="disable the fused quantized-BPTT backward "
                     "(restores the autodiff + grad_quant tree-pass path)")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="drop quantization-health telemetry from the step")
+    ap.add_argument("--telemetry-out", default=None,
+                    help="JSONL file for TrainTelemetry records "
+                    "(default: <ckpt-dir>/telemetry.jsonl)")
     args = ap.parse_args()
 
     policy = get_policy(args.policy)
@@ -91,6 +98,7 @@ def main():
         step_fn = make_train_step(
             model.loss, opt, policy, lr=lr,
             fused=False if args.no_fused else None, donate=True,
+            telemetry=not args.no_telemetry,
         )
 
         def init_fn():
@@ -111,11 +119,21 @@ def main():
         # unbounded growth over long runs
         hist = collections.deque(maxlen=max(args.log_every, 100))
         t_first_done = [None]  # wall time when the first (compile) step ends
+        telemetry = None
+        if not args.no_telemetry:
+            tel_path = args.telemetry_out or os.path.join(
+                args.ckpt_dir, "telemetry.jsonl"
+            )
+            os.makedirs(os.path.dirname(tel_path) or ".", exist_ok=True)
+            telemetry = TelemetryLogger(path=tel_path)
+            print(f"telemetry -> {tel_path}", flush=True)
 
         def on_metrics(step, m):
             hist.append(float(m["loss"]))
             if t_first_done[0] is None:
                 t_first_done[0] = time.time()
+            if telemetry is not None:
+                telemetry.update(step, m)
             if step % args.log_every == 0:
                 window = list(hist)[-args.log_every:]
                 print(
@@ -124,6 +142,8 @@ def main():
                     f"finite {bool(m['grads_finite'])}",
                     flush=True,
                 )
+                if telemetry is not None:
+                    print(telemetry.format(telemetry.emit(step)), flush=True)
 
         t0 = time.time()
         state, last = loop.run(

@@ -1,0 +1,37 @@
+"""repro.obs — tracing + quantization-health telemetry.
+
+Two halves, split by dependency weight:
+
+  * ``obs.trace`` (stdlib-only): the span tracer the serving stack threads
+    through the request lifecycle, exported as Chrome trace-event JSON via
+    ``GET /admin/trace``.
+  * ``obs.telemetry`` (imports jax): FP8/FloatSD quantization-health stats
+    computed inside the train step, the host-side kernel-event sink, and
+    the ``TrainTelemetry`` JSONL logger.
+
+Import the submodules directly on hot paths (``from repro.obs import
+trace``); this package root re-exports the common names for convenience
+and therefore pulls jax.
+"""
+from .trace import TRACER, Tracer  # noqa: F401
+from .telemetry import (  # noqa: F401
+    KERNEL_STATS,
+    KernelStats,
+    TelemetryLogger,
+    TrainTelemetry,
+    floatsd_update_stats,
+    fp8_grad_stats,
+    layer_grad_norms,
+)
+
+__all__ = [
+    "TRACER",
+    "Tracer",
+    "KERNEL_STATS",
+    "KernelStats",
+    "TelemetryLogger",
+    "TrainTelemetry",
+    "floatsd_update_stats",
+    "fp8_grad_stats",
+    "layer_grad_norms",
+]

@@ -1,0 +1,315 @@
+"""Quantization-health telemetry for FloatSD8/FP8 training (paper §III).
+
+The paper's training scheme lives or dies by a handful of numerical
+events that a loss curve cannot show:
+
+  * **FP8 grad saturation / underflow** — loss-scaled gradients that clamp
+    at the e5m2 max (±57344) or round to zero below the subnormal floor at
+    the §III-D ``grad_quant`` sweep. Sustained saturation means the loss
+    scale is too high; a growing underflow fraction means it is too low.
+  * **FloatSD carry / clamp** — master-weight updates large enough to move
+    a weight to a different FloatSD8 grid point (a signed-digit group
+    carry in the paper's circuit), and weights pinned at the top of the
+    exponent-biased grid (saturating rounding in ``core.floatsd.quantize``).
+  * **Loss-scale adjustments** and per-layer grad-norm snapshots.
+
+``make_train_step(..., telemetry=True)`` computes the jnp-side stats below
+inside the jitted step and returns them under ``metrics["tel"]``;
+``TelemetryLogger`` aggregates those per-step dicts host-side into
+``TrainTelemetry`` records and appends them to a JSONL events file.
+
+``KERNEL_STATS`` is the host-side sink for the in-kernel FP8 flush hook:
+``kernels.dispatch.matmul_dw`` reports saturation/zero fractions of every
+flushed dW via ``jax.debug.callback`` when the sink is enabled (a
+trace-time switch: enable it *before* the first step compiles).
+
+This module may import jax (unlike ``obs.trace``, which stays stdlib-only
+for the serving hot path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import floatsd
+from ..core.fp8 import FP8_E5M2, _MAX
+
+__all__ = [
+    "FP8_SAT_THRESHOLD",
+    "FP8_UNDERFLOW_THRESHOLD",
+    "fp8_grad_stats",
+    "layer_grad_norms",
+    "floatsd_update_stats",
+    "KernelStats",
+    "KERNEL_STATS",
+    "TrainTelemetry",
+    "TelemetryLogger",
+]
+
+#: e5m2 saturating clamp value (``core.fp8.quantize_fp8``).
+FP8_SAT_THRESHOLD = float(_MAX[FP8_E5M2])
+#: Below half the smallest e5m2 subnormal (2^-16), round-to-nearest-even
+#: sends a nonzero gradient to exactly zero.
+FP8_UNDERFLOW_THRESHOLD = 2.0 ** -17
+
+
+def fp8_grad_stats(tree) -> dict:
+    """Saturation/underflow/zero fractions over a (loss-scaled) grad tree.
+
+    Evaluated at the §III-D ``grad_quant`` sweep point, i.e. on the values
+    the FP8 quantizer sees. On leaves the fused backward kernels already
+    emitted on the fp8 grid, ``sat_frac`` counts values sitting AT the
+    clamp (post-quant) and ``underflow_frac`` is zero by construction —
+    underflowed values are already exact zeros, counted by ``zero_frac``.
+    Returns f32 scalars (jit-safe).
+    """
+    n = jnp.zeros((), jnp.float32)
+    sat = jnp.zeros((), jnp.float32)
+    under = jnp.zeros((), jnp.float32)
+    zero = jnp.zeros((), jnp.float32)
+    for g in jax.tree_util.tree_leaves(tree):
+        a = jnp.abs(g.astype(jnp.float32))
+        n += a.size
+        sat += jnp.sum(a >= FP8_SAT_THRESHOLD).astype(jnp.float32)
+        under += jnp.sum(
+            (a > 0) & (a < FP8_UNDERFLOW_THRESHOLD)
+        ).astype(jnp.float32)
+        zero += jnp.sum(a == 0).astype(jnp.float32)
+    n = jnp.maximum(n, 1.0)
+    return {
+        "fp8_sat_frac": sat / n,
+        "fp8_underflow_frac": under / n,
+        "fp8_zero_frac": zero / n,
+    }
+
+
+def layer_grad_norms(grads) -> dict:
+    """Per-top-level-key L2 norms of a grad tree (f32 scalars).
+
+    Keyed by the model's parameter groups (the dict ``model.init`` returns);
+    a non-dict tree gets a single ``"all"`` entry.
+    """
+    def _norm(sub) -> jax.Array:
+        sq = sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(sub)
+        )
+        return jnp.sqrt(jnp.asarray(sq, jnp.float32))
+
+    if isinstance(grads, dict):
+        return {str(k): _norm(v) for k, v in sorted(grads.items())}
+    return {"all": _norm(grads)}
+
+
+def floatsd_update_stats(old_params, new_params) -> dict:
+    """FloatSD carry/clamp fractions for one master-weight update.
+
+    Over every weight-matrix leaf (ndim >= 2 — the tensors the models
+    FloatSD8-quantize at use):
+
+      * ``sd_carry_frac`` — fraction of weights whose nearest FloatSD8 grid
+        point changed between the old and new master value (quantized on a
+        shared bias so the comparison is grid-aligned). In the paper's
+        circuit this is exactly an SD mantissa-group update, carries
+        included.
+      * ``sd_clamp_frac`` — fraction of new weights at/beyond the top of
+        the exponent-biased grid, where ``quantize``'s saturating rounding
+        clamps them.
+    """
+    top = float(floatsd._GRID_POS[-1])
+    n = jnp.zeros((), jnp.float32)
+    carried = jnp.zeros((), jnp.float32)
+    clamped = jnp.zeros((), jnp.float32)
+    old_leaves = jax.tree_util.tree_leaves(old_params)
+    new_leaves = jax.tree_util.tree_leaves(new_params)
+    for o, w in zip(old_leaves, new_leaves):
+        if w.ndim < 2:
+            continue
+        bias = floatsd.fit_bias(w)  # the quantize-at-use bias
+        q_old = floatsd.quantize(o.astype(jnp.float32), bias).values
+        q_new = floatsd.quantize(w.astype(jnp.float32), bias).values
+        n += w.size
+        carried += jnp.sum(q_old != q_new).astype(jnp.float32)
+        scale = floatsd.exp2i(bias)
+        clamped += jnp.sum(
+            jnp.abs(w.astype(jnp.float32)) >= top * scale
+        ).astype(jnp.float32)
+    n = jnp.maximum(n, 1.0)
+    return {"sd_carry_frac": carried / n, "sd_clamp_frac": clamped / n}
+
+
+class KernelStats:
+    """Host-side sink for in-kernel quantizer events.
+
+    ``kernels.dispatch.matmul_dw`` calls ``record`` through
+    ``jax.debug.callback`` when ``enabled`` at trace time — the check is
+    staged out of compiled code, so enable the sink before the first step
+    compiles (re-tracing after a toggle also works: the flag is read when
+    the op is traced). Thread-safe; jax may run callbacks off-thread.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._enabled = False
+        self._data: dict = {}
+
+    @property
+    def enabled(self) -> bool:
+        return self._enabled
+
+    def enable(self) -> None:
+        self._enabled = True
+
+    def disable(self) -> None:
+        self._enabled = False
+
+    def reset(self) -> None:
+        with self._lock:
+            self._data = {}
+
+    def record(self, op: str, elems: int, saturated, zeros) -> None:
+        """One kernel flush: total element count plus saturated/zero counts
+        (arrive as 0-d arrays from the debug callback)."""
+        with self._lock:
+            d = self._data.setdefault(
+                op, {"calls": 0, "elems": 0, "saturated": 0, "zeros": 0}
+            )
+            d["calls"] += 1
+            d["elems"] += int(elems)
+            d["saturated"] += int(saturated)
+            d["zeros"] += int(zeros)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            out = {}
+            for op, d in sorted(self._data.items()):
+                e = max(d["elems"], 1)
+                out[op] = dict(
+                    d,
+                    sat_frac=d["saturated"] / e,
+                    zero_frac=d["zeros"] / e,
+                )
+            return out
+
+
+#: Process-wide kernel-event sink (see class docstring for the trace-time
+#: enable caveat).
+KERNEL_STATS = KernelStats()
+
+
+@dataclasses.dataclass
+class TrainTelemetry:
+    """One aggregated telemetry record: the window since the last emit."""
+
+    step: int
+    window_steps: int
+    loss_mean: float
+    loss_scale: float
+    scale_ups: int  # cumulative loss-scale increases since logger start
+    scale_downs: int  # ... and decreases (overflow backoffs)
+    nonfinite_steps: int  # cumulative skipped steps
+    fp8_sat_frac: float  # window means of the per-step fractions
+    fp8_underflow_frac: float
+    fp8_zero_frac: float
+    sd_carry_frac: float
+    sd_clamp_frac: float
+    grad_norms: dict  # last snapshot in the window, per layer
+    kernel: dict  # KERNEL_STATS.snapshot() (cumulative), may be empty
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class TelemetryLogger:
+    """Host-side aggregator: feed every step's metrics via ``update``,
+    ``emit`` at each ``--log-every`` boundary to get a ``TrainTelemetry``
+    record (appended as one JSONL line when ``path`` is set)."""
+
+    _FRACS = (
+        "fp8_sat_frac", "fp8_underflow_frac", "fp8_zero_frac",
+        "sd_carry_frac", "sd_clamp_frac",
+    )
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.scale_ups = 0
+        self.scale_downs = 0
+        self.nonfinite_steps = 0
+        self._last_scale: Optional[float] = None
+        self._reset_window()
+
+    def _reset_window(self) -> None:
+        self._n = 0
+        self._loss_sum = 0.0
+        self._frac_sums = {k: 0.0 for k in self._FRACS}
+        self._grad_norms: dict = {}
+        self._scale = 0.0
+
+    def update(self, step: int, metrics: dict) -> None:
+        """Accumulate one step. ``metrics`` is the train-step output —
+        jax scalars are pulled to host here (one device_get per step on
+        values the driver prints anyway)."""
+        m = jax.device_get(metrics)
+        self._n += 1
+        self._loss_sum += float(m["loss"])
+        self._scale = float(m["loss_scale"])
+        if not bool(m["grads_finite"]):
+            self.nonfinite_steps += 1
+        if self._last_scale is not None and self._scale != self._last_scale:
+            if self._scale > self._last_scale:
+                self.scale_ups += 1
+            else:
+                self.scale_downs += 1
+        self._last_scale = self._scale
+        tel = m.get("tel")
+        if tel:
+            for k in self._FRACS:
+                if k in tel:
+                    self._frac_sums[k] += float(tel[k])
+            if "grad_norm" in tel:
+                self._grad_norms = {
+                    k: float(v) for k, v in tel["grad_norm"].items()
+                }
+
+    def emit(self, step: int) -> TrainTelemetry:
+        """Close the window: build the record, append JSONL, reset."""
+        n = max(self._n, 1)
+        rec = TrainTelemetry(
+            step=int(step),
+            window_steps=self._n,
+            loss_mean=self._loss_sum / n,
+            loss_scale=self._scale,
+            scale_ups=self.scale_ups,
+            scale_downs=self.scale_downs,
+            nonfinite_steps=self.nonfinite_steps,
+            fp8_sat_frac=self._frac_sums["fp8_sat_frac"] / n,
+            fp8_underflow_frac=self._frac_sums["fp8_underflow_frac"] / n,
+            fp8_zero_frac=self._frac_sums["fp8_zero_frac"] / n,
+            sd_carry_frac=self._frac_sums["sd_carry_frac"] / n,
+            sd_clamp_frac=self._frac_sums["sd_clamp_frac"] / n,
+            grad_norms=self._grad_norms,
+            kernel=KERNEL_STATS.snapshot(),
+        )
+        if self.path:
+            with open(self.path, "a") as f:
+                f.write(json.dumps(rec.to_dict()) + "\n")
+        self._reset_window()
+        return rec
+
+    def format(self, rec: TrainTelemetry) -> str:
+        """One compact human line for the training log."""
+        line = (
+            f"tel: sat {rec.fp8_sat_frac:.2e} under {rec.fp8_underflow_frac:.2e} "
+            f"zero {rec.fp8_zero_frac:.3f} | sd carry {rec.sd_carry_frac:.3f} "
+            f"clamp {rec.sd_clamp_frac:.2e} | scale {rec.loss_scale:.0f} "
+            f"(+{rec.scale_ups}/-{rec.scale_downs}, {rec.nonfinite_steps} skipped)"
+        )
+        if rec.grad_norms:
+            top = max(rec.grad_norms.items(), key=lambda kv: kv[1])
+            line += f" | max layer gnorm {top[0]}={top[1]:.3g}"
+        return line

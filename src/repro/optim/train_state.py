@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from ..core import loss_scaling as ls
 from ..core.fp8 import grad_quant
 from ..core.policy import Policy
+from ..obs import telemetry as obs_telemetry
 from .optimizers import Optimizer
 
 __all__ = ["TrainState", "make_train_step"]
@@ -60,7 +61,7 @@ def init_state(params, opt: Optimizer, policy: Policy, dynamic_scale=False) -> T
 
 def make_train_step(loss_fn, opt: Optimizer, policy: Policy, lr: float = 1e-3,
                     grad_clip: float | None = 1.0, fused: bool | None = None,
-                    donate: bool = False):
+                    donate: bool = False, telemetry: bool = False):
     """loss_fn(params, batch, policy) -> scalar. Returns a step fn.
 
     ``fused=None`` resolves to ``policy.grad_quant == 'fp8'`` unless
@@ -68,6 +69,14 @@ def make_train_step(loss_fn, opt: Optimizer, policy: Policy, lr: float = 1e-3,
     ``donate=True`` returns the step already jitted with the TrainState
     argument donated — callers must rebind ``state`` every step (every
     driver in this repo does).
+
+    ``telemetry=True`` adds quantization-health stats (obs.telemetry) to
+    the metrics dict under ``"tel"``: FP8 saturation/underflow/zero
+    fractions measured on the loss-scaled grads at the §III-D sweep
+    point, per-layer grad norms on the unscaled grads, and FloatSD
+    carry/clamp fractions of the master-weight update. All computed
+    inside the jitted step; feed the per-step dicts to a
+    ``TelemetryLogger`` for aggregation + JSONL output.
     """
     if fused is None:
         fused = (
@@ -86,12 +95,17 @@ def make_train_step(loss_fn, opt: Optimizer, policy: Policy, lr: float = 1e-3,
             return ls.scale_loss(l.astype(jnp.float32), state.scale), l
 
         grads, raw_loss = jax.grad(scaled_loss, has_aux=True)(state.params)
+        # sweep-point telemetry: the loss-scaled values the FP8 quantizer
+        # is about to see (saturation/underflow are scale-relative)
+        tel = obs_telemetry.fp8_grad_stats(grads) if telemetry else None
         if run_policy.grad_quant in ("fp8", "fp8_kernel"):
             # paper §III-D: ALL gradients FP8. Idempotent (exact no-op) on
             # the leaves the fused backward kernels already emitted on the
             # fp8 grid; quantizes + saturates everything else.
             grads = grad_quant(grads)
         grads, finite = ls.unscale_and_check(grads, state.scale)
+        if telemetry:
+            tel["grad_norm"] = obs_telemetry.layer_grad_norms(grads)
         if grad_clip is not None:
             gnorm = jnp.sqrt(
                 sum(
@@ -123,6 +137,13 @@ def make_train_step(loss_fn, opt: Optimizer, policy: Policy, lr: float = 1e-3,
             "grads_finite": finite,
             "loss_scale": new_scale.scale,
         }
+        if telemetry:
+            # carry/clamp on the applied update (post skip-select, so a
+            # skipped step honestly reports zero carries)
+            tel.update(
+                obs_telemetry.floatsd_update_stats(state.params, new_params)
+            )
+            metrics["tel"] = tel
         return TrainState(state.step + 1, new_params, new_opt, new_scale), metrics
 
     if donate:

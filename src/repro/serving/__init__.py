@@ -7,7 +7,7 @@ from .engine import Lane, ServeEngine
 from .frontend import AsyncRouter, PrefixCache, RequestRejected, Router, Ticket
 from .http import Client as HttpClient
 from .http import HttpError, HttpServer
-from .metrics import RequestRecord, ServeMetrics, tenant_summary
+from .metrics import RequestRecord, ServeMetrics, phase_summary, tenant_summary
 from .scheduler import (
     ADMISSION_POLICIES,
     Request,
@@ -20,7 +20,7 @@ from .weight_store import PackedTensor, WeightStore, pack_tree, tree_nbytes, unp
 
 __all__ = [
     "ServeEngine", "Lane",
-    "ServeMetrics", "RequestRecord", "tenant_summary",
+    "ServeMetrics", "RequestRecord", "tenant_summary", "phase_summary",
     "Scheduler", "Request", "ADMISSION_POLICIES",
     "synthetic_prompts", "zipf_prefix_prompts",
     "StatePool", "masked_reset",

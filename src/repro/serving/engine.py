@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.trace import TRACER
 from .metrics import ServeMetrics
 from .scheduler import Request, Scheduler
 from .state_pool import StatePool, masked_reset
@@ -251,16 +252,34 @@ class ServeEngine:
                         "engine (or use an LSTM-family model)"
                     )
                 req = self.scheduler.pop()
+                req.t_admit = now  # queue wait ends; prefill phase begins
                 lane = Lane(req)
                 self._lanes[i] = lane
                 self._lane_used[i] = True
                 hit = None
                 if self.prefix_cache is not None:
-                    hit = self.prefix_cache.lookup(req.prompt)
+                    with TRACER.span("cache.lookup", cat="cache", rid=req.rid):
+                        hit = self.prefix_cache.lookup(req.prompt)
                     self.metrics.on_cache_lookup(
                         hit=hit is not None,
                         full=hit is not None and hit.full,
                         saved=hit.match_len if hit is not None else 0,
+                    )
+                    if hit is not None:
+                        req.cache_hit = True
+                        req.cache_saved_tokens = hit.match_len
+                        # whole prefill steps the injection replaced; the
+                        # residual partial chunk merges into the suffix step
+                        req.cache_saved_steps = hit.match_len // self.chunk
+                if TRACER.enabled:
+                    TRACER.instant(
+                        "engine.admit", cat="engine", rid=req.rid, lane=i,
+                        prompt_len=req.prompt_len,
+                        cache=(
+                            "full" if (hit is not None and hit.full)
+                            else "hit" if hit is not None else "miss"
+                        ),
+                        saved_tokens=req.cache_saved_tokens,
                     )
                 if hit is None:
                     self._reset[i] = 1  # zeroed inside the next jitted step
@@ -284,6 +303,8 @@ class ServeEngine:
     def _retire(self, i: int) -> None:
         lane = self._lanes[i]
         req = lane.req
+        now = time.monotonic()
+        req.t_done = now  # decode phase ends; req.phases() is now total
         if self.prefix_cache is not None and len(req.out) >= 2:
             # The lane's final state summarizes prompt + out[:-1] (the last
             # generated token was emitted but never fed back); out[-1] is
@@ -293,10 +314,16 @@ class ServeEngine:
                 [req.prompt, np.asarray(req.out[:-1], np.int32)]
             )
             if self.prefix_cache.wants(key, len(key)):
-                self.prefix_cache.insert(
-                    key, self.pool.extract(i), next_token=req.out[-1]
-                )
-        self.metrics.on_retire(req)
+                with TRACER.span("cache.insert", cat="cache", rid=req.rid):
+                    self.prefix_cache.insert(
+                        key, self.pool.extract(i), next_token=req.out[-1]
+                    )
+        self.metrics.on_retire(req, now)
+        if TRACER.enabled:
+            TRACER.instant(
+                "engine.retire", cat="engine", rid=req.rid, lane=i,
+                new_tokens=len(req.out),
+            )
         self._lanes[i] = None
 
     # -- the batched step ------------------------------------------------
@@ -337,14 +364,32 @@ class ServeEngine:
         # re-armed lanes). A fresh zeros array per step sidesteps aliasing;
         # tokens/ks are likewise freshly allocated and never mutated.
         reset, self._reset = self._reset, np.zeros((B,), np.int32)
-        nxt, caches = self._step(
-            self.serve_params,
-            jnp.asarray(tokens),
-            jnp.asarray(ks),
-            self.pool.caches,
-            jnp.asarray(reset),
+        # Per-lane attribution without per-lane cost: one span per batched
+        # step (the engine's unit of device work) carrying the lane→rid map
+        # and each lane's token count. Arg construction is guarded so the
+        # disabled tracer costs one branch on this hot path.
+        step_span = (
+            TRACER.span(
+                "engine.step", cat="engine",
+                kind="prefill" if any_prefill else "decode",
+                width=S, useful=int(ks.sum()),
+                lanes={
+                    str(i): {"rid": self._lanes[i].req.rid, "k": int(ks[i])}
+                    for i in active
+                },
+            )
+            if TRACER.enabled
+            else TRACER.span("engine.step")
         )
-        nxt = np.asarray(nxt)  # sync point: step outputs are materialized
+        with step_span:
+            nxt, caches = self._step(
+                self.serve_params,
+                jnp.asarray(tokens),
+                jnp.asarray(ks),
+                self.pool.caches,
+                jnp.asarray(reset),
+            )
+            nxt = np.asarray(nxt)  # sync point: step outputs materialized
         self.pool.swap(caches)
 
         self.metrics.on_step(

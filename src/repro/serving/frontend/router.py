@@ -38,8 +38,9 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from ...obs.trace import TRACER
 from ..engine import ServeEngine
-from ..metrics import tenant_summary
+from ..metrics import phase_summary, tenant_summary
 from ..scheduler import Request, Scheduler
 
 __all__ = ["Ticket", "Router", "AsyncRouter", "RequestRejected"]
@@ -208,6 +209,11 @@ class Router:
         self._queue.submit(req)
         self._queued_by_tenant[tenant] = self._queued_by_tenant.get(tenant, 0) + 1
         self._inflight[rid] = ticket
+        if TRACER.enabled:
+            TRACER.instant(
+                "router.submit", cat="router", rid=rid, tenant=tenant,
+                queued=len(self._queue),
+            )
         return ticket
 
     # -- dispatch / progress ---------------------------------------------
@@ -254,6 +260,15 @@ class Router:
             eng = min(free, key=lambda e: (e.load, self.engines.index(e)))
             eng.enqueue(req)
             ticket.status = "running"
+            if TRACER.enabled:
+                TRACER.instant(
+                    "router.dispatch", cat="router", rid=req.rid,
+                    replica=self.engines.index(eng),
+                    queue_wait_ms=(
+                        (time.monotonic() - req.t_submit) * 1e3
+                        if req.t_submit is not None else 0.0
+                    ),
+                )
 
     def _deliver(self) -> None:
         for ticket in list(self._inflight.values()):
@@ -279,12 +294,13 @@ class Router:
         """One scheduling round: dispatch queued work, advance every busy
         replica one batched step, deliver new tokens. Returns True while
         there is anything left to do."""
-        self._dispatch()
-        progressed = False
-        for e in self.engines:
-            if e.has_work():
-                progressed = e.step_once() or progressed
-        self._deliver()
+        with TRACER.span("router.pump", cat="router"):
+            self._dispatch()
+            progressed = False
+            for e in self.engines:
+                if e.has_work():
+                    progressed = e.step_once() or progressed
+            self._deliver()
         return progressed or bool(self._queue) or bool(self._inflight)
 
     def drain(self) -> None:
@@ -352,7 +368,25 @@ class Router:
             t: {**acct, **percentiles.get(t, {})}
             for t, acct in sorted(self.tenants.items())
         }
+        summed["phases"] = phase_summary(records)
         return summed
+
+    def scrape(self) -> dict:
+        """Everything a /metrics scrape reads, in one call: the aggregate
+        report, the cheap liveness stats, and the shared prefix cache's
+        stats. Like ``report``/``stats``, this iterates live collections
+        (tenant dicts, metric record windows, the cache's LRU bookkeeping)
+        and is therefore only safe while no pump is mutating them — HTTP
+        scrape paths MUST call it through ``AsyncRouter.snapshot``.
+        Bundling the three reads keeps every scrape consumer behind that
+        single locked entry point instead of re-assembling the pieces
+        (and forgetting the lock on one of them)."""
+        cache = self.prefix_cache
+        return {
+            "report": self.report(),
+            "stats": self.stats(),
+            "cache": cache.stats() if cache is not None else None,
+        }
 
 
 class AsyncRouter:

@@ -159,12 +159,18 @@ class Client:
         max_new: Optional[int] = None,
         tenant: Optional[str] = None,
         deadline_ms: Optional[float] = None,
+        debug: bool = False,
     ) -> dict:
+        """``debug=True`` asks the server for the per-request phase
+        breakdown (``phases`` key: queue/prefill/decode ms + cache
+        savings) alongside the usual summary."""
         body: dict = {"prompt": [int(t) for t in prompt]}
         if max_new is not None:
             body["max_new"] = max_new
         if deadline_ms is not None:
             body["deadline_ms"] = deadline_ms
+        if debug:
+            body["debug"] = True
         return await self._json(
             "POST", "/v1/generate", body, self._headers(tenant)
         )
@@ -175,11 +181,13 @@ class Client:
         max_new: Optional[int] = None,
         tenant: Optional[str] = None,
         deadline_ms: Optional[float] = None,
+        debug: bool = False,
     ) -> AsyncIterator[Tuple[str, dict]]:
         """Async iterator of SSE frames as ``(event, data)`` pairs:
         ``("message", {"index": i, "token": t})`` per token, then one
-        ``("done", {...summary})``. Raises HttpError on rejection —
-        either pre-admission (the server answers with the mapped status
+        ``("done", {...summary})``. ``debug=True`` adds the ``phases``
+        breakdown to the ``done`` payload. Raises HttpError on rejection
+        — either pre-admission (the server answers with the mapped status
         instead of a stream) or post-admission (a terminal ``error``
         event carrying the mapped status, e.g. a deadline that expired
         while queued)."""
@@ -188,6 +196,8 @@ class Client:
             body["max_new"] = max_new
         if deadline_ms is not None:
             body["deadline_ms"] = deadline_ms
+        if debug:
+            body["debug"] = True
         payload = json.dumps(body).encode("utf-8")
         reader, writer = await self._connect()  # dedicated conn per stream
         try:
@@ -244,3 +254,8 @@ class Client:
 
     async def drain(self) -> dict:
         return await self._json("POST", "/admin/drain")
+
+    async def trace(self) -> dict:
+        """Chrome trace-event JSON from ``GET /admin/trace`` — dump it to
+        a file and open in Perfetto (see docs/observability.md)."""
+        return await self._json("GET", "/admin/trace")

@@ -8,12 +8,18 @@ work happens on the scrape path:
 * ``Router.stats()`` — instantaneous gauges (free lanes, queue depth,
   in-flight) plus rejection counters by reason;
 * ``PrefixCache.stats()`` — entry/byte occupancy and hit/eviction
-  counters for the shared FP8 LSTM-state prefix cache.
+  counters for the shared FP8 LSTM-state prefix cache;
+* ``kernels.dispatch.STATS.snapshot()`` — per-(op, backend) kernel
+  dispatch decisions, so a silent pallas→ref fallback shows up in the
+  scrape instead of only in a perf regression;
+* ``obs.trace.TRACER.stats()`` — tracer health (enabled, event/drop
+  totals) and per-span-name counts + cumulative durations.
 
 Percentiles are exported summary-style (``quantile`` label) because they
 are computed router-side over retired-request records; counters follow
 the ``_total`` naming convention. Everything is prefixed ``repro_`` so a
-shared Prometheus can scrape several services without collisions.
+shared Prometheus can scrape several services without collisions. The
+full name reference lives in docs/observability.md.
 """
 from __future__ import annotations
 
@@ -61,6 +67,8 @@ def render_metrics(
     draining: bool = False,
     uptime_s: float = 0.0,
     http_requests: int = 0,
+    dispatch_counts: Optional[dict] = None,
+    trace_stats: Optional[dict] = None,
 ) -> str:
     w = _Writer()
 
@@ -122,6 +130,67 @@ def render_metrics(
         w.sample("repro_cache_budget_bytes", cache_stats["budget_bytes"])
         w.metric("repro_cache_evictions_total", "counter", "LRU evictions under the byte budget.")
         w.sample("repro_cache_evictions_total", cache_stats["evictions"])
+
+    # -- request phase breakdown ----------------------------------------
+    # queue + prefill == TTFT and queue + prefill + decode == latency, so
+    # these decompose the tail metrics above into attributable phases.
+    phases = report.get("phases")
+    if phases:
+        w.metric("repro_request_phase_seconds", "summary",
+                 "Per-request latency by phase (queue | prefill | decode), "
+                 "summary over the retired-request record window.")
+        for phase, agg in phases.items():
+            for q, key in (("0.5", "p50_s"), ("0.95", "p95_s")):
+                w.sample(
+                    "repro_request_phase_seconds",
+                    agg[key],
+                    {"phase": phase, "quantile": q},
+                )
+        w.metric("repro_request_phase_seconds_mean", "gauge",
+                 "Mean per-request phase latency over the record window.")
+        for phase, agg in phases.items():
+            w.sample(
+                "repro_request_phase_seconds_mean",
+                agg["mean_s"],
+                {"phase": phase},
+            )
+
+    # -- kernel dispatch decisions --------------------------------------
+    if dispatch_counts is not None:
+        w.metric("repro_dispatch_decisions_total", "counter",
+                 "Kernel dispatch-layer backend decisions by (op, backend) "
+                 "— a nonzero ref count where pallas was expected is a "
+                 "silent-fallback alarm.")
+        for (op, backend), n in sorted(dispatch_counts.items()):
+            w.sample(
+                "repro_dispatch_decisions_total",
+                n,
+                {"op": op, "backend": backend},
+            )
+
+    # -- tracer ----------------------------------------------------------
+    if trace_stats is not None:
+        w.metric("repro_trace_enabled", "gauge",
+                 "1 while the request-lifecycle tracer is recording.")
+        w.sample("repro_trace_enabled", 1.0 if trace_stats["enabled"] else 0.0)
+        w.metric("repro_trace_events_total", "counter",
+                 "Trace events emitted since the tracer was last cleared.")
+        w.sample("repro_trace_events_total", trace_stats["emitted"])
+        w.metric("repro_trace_dropped_total", "counter",
+                 "Trace events evicted by the bounded ring buffer.")
+        w.sample("repro_trace_dropped_total", trace_stats["dropped"])
+        if trace_stats.get("spans"):
+            w.metric("repro_trace_spans_total", "counter",
+                     "Completed spans (and instants) by name.")
+            w.metric("repro_trace_span_seconds_total", "counter",
+                     "Cumulative duration inside each span name.")
+            for name, agg in trace_stats["spans"].items():
+                w.sample("repro_trace_spans_total", agg["count"], {"name": name})
+                w.sample(
+                    "repro_trace_span_seconds_total",
+                    agg["total_s"],
+                    {"name": name},
+                )
 
     # -- per-tenant summaries -------------------------------------------
     w.metric("repro_tenant_requests_total", "counter", "Submissions by tenant.")

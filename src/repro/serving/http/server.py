@@ -16,12 +16,19 @@ Endpoints:
 * ``POST /admin/drain`` — graceful shutdown: stops admission (new
   submissions get 503 ``draining``), finishes every in-flight request via
   ``AsyncRouter.join()``, then exits ``serve_forever``.
+* ``GET  /admin/trace`` — the request-lifecycle tracer's ring buffer as
+  Chrome trace-event JSON (open in Perfetto / chrome://tracing; see
+  docs/observability.md). The server enables the process tracer on
+  ``start()`` unless constructed with ``trace=False``.
 
 Request conventions: the tenant comes from the ``X-Tenant`` header
 (default ``"default"``); the deadline from the JSON field ``deadline_ms``
 (a relative budget, converted to the router's absolute monotonic
-deadline at parse time). Router reject reasons map to distinct HTTP
-status codes — see ``REASON_STATUS``.
+deadline at parse time); a boolean JSON field ``debug`` asks for the
+per-request phase breakdown (``queue_ms``/``prefill_ms``/``decode_ms``/
+``cache_saved_steps``…) in the ``/v1/generate`` response and the terminal
+SSE ``done`` event. Router reject reasons map to distinct HTTP status
+codes — see ``REASON_STATUS``.
 
 Concurrency contract: one asyncio task per connection; every router
 mutation goes through the ``AsyncRouter`` lock, and device steps run in a
@@ -36,6 +43,8 @@ import time
 import traceback
 from typing import Optional
 
+from ...kernels import dispatch as kernel_dispatch
+from ...obs.trace import TRACER
 from ..frontend.router import AsyncRouter, Router
 from .protocol import (
     HttpRequest,
@@ -84,6 +93,7 @@ class HttpServer:
         port: int = 0,
         default_max_new: int = 32,
         max_new_cap: int = 1024,
+        trace: bool = True,
     ):
         self.router = router
         self.aroute = AsyncRouter(router)
@@ -91,6 +101,7 @@ class HttpServer:
         self.port = port  # replaced by the bound port after start()
         self.default_max_new = default_max_new
         self.max_new_cap = max_new_cap
+        self.trace = trace  # enable the process tracer on start()
         self.draining = False
         self.t_start: Optional[float] = None
         self._server: Optional[asyncio.base_events.Server] = None
@@ -102,6 +113,10 @@ class HttpServer:
 
     # -- lifecycle -------------------------------------------------------
     async def start(self) -> "HttpServer":
+        if self.trace:
+            # process-wide tracer (obs.trace.TRACER): /admin/trace serves
+            # its ring buffer; the bounded ring makes always-on safe
+            TRACER.enable()
         self._server = await asyncio.start_server(
             self._on_connection, self.host, self.port
         )
@@ -192,6 +207,9 @@ class HttpServer:
             if req is None:
                 return
             self.http_requests += 1
+            # async scope on the shared event-loop thread: stamped as one
+            # retroactive X event at completion (see Tracer.complete)
+            t0_us = time.monotonic_ns() // 1000 if TRACER.enabled else 0
             try:
                 close = await self._route(req, writer)
             except ProtocolError as e:
@@ -213,6 +231,12 @@ class HttpServer:
                 )
                 close = True
             await writer.drain()
+            if TRACER.enabled:
+                now_us = time.monotonic_ns() // 1000
+                TRACER.complete(
+                    "http.request", t0_us, now_us - t0_us, cat="http",
+                    method=req.method, path=req.path,
+                )
             if close or not req.keep_alive:
                 return
 
@@ -234,7 +258,11 @@ class HttpServer:
         if route == ("POST", "/admin/drain"):
             writer.write(await self._drain())
             return False
-        known = {"/v1/generate", "/v1/stream", "/healthz", "/metrics", "/admin/drain"}
+        if route == ("GET", "/admin/trace"):
+            writer.write(self._trace())
+            return False
+        known = {"/v1/generate", "/v1/stream", "/healthz", "/metrics",
+                 "/admin/drain", "/admin/trace"}
         if req.path in known:
             writer.write(
                 json_response(405, {"error": "method_not_allowed", "path": req.path})
@@ -244,10 +272,14 @@ class HttpServer:
         return False
 
     # -- request parsing -------------------------------------------------
-    def _parse_submission(self, req: HttpRequest) -> dict:
+    def _parse_submission(self, req: HttpRequest) -> tuple[dict, bool]:
+        """Returns (router submit kwargs, debug flag)."""
         body = req.json()
         if "prompt" not in body:
             raise ProtocolError(400, "missing required field 'prompt'")
+        debug = body.get("debug", False)
+        if not isinstance(debug, bool):
+            raise ProtocolError(400, "'debug' must be a boolean")
         max_new = body.get("max_new", self.default_max_new)
         if not isinstance(max_new, int) or isinstance(max_new, bool):
             raise ProtocolError(400, "'max_new' must be an integer")
@@ -262,11 +294,14 @@ class HttpServer:
                 raise ProtocolError(400, "'deadline_ms' must be a number")
             # relative budget on the wire -> absolute monotonic deadline
             deadline = time.monotonic() + float(d) / 1e3
-        return dict(
-            prompt=body["prompt"],
-            max_new=max_new,
-            tenant=req.headers.get("x-tenant", "default"),
-            deadline=deadline,
+        return (
+            dict(
+                prompt=body["prompt"],
+                max_new=max_new,
+                tenant=req.headers.get("x-tenant", "default"),
+                deadline=deadline,
+            ),
+            debug,
         )
 
     # -- endpoint handlers -----------------------------------------------
@@ -278,24 +313,24 @@ class HttpServer:
                     503, {"error": "draining"},
                     extra_headers=[("Retry-After", "5")],
                 )
-            kw = self._parse_submission(req)
+            kw, debug = self._parse_submission(req)
             ticket = await self.aroute.generate(**kw)
         finally:
             self._admitting -= 1
         if not ticket.ok:
             return _reject_response(ticket.reason)
         r = ticket.req
-        return json_response(
-            200,
-            {
-                "rid": ticket.rid,
-                "tenant": ticket.tenant,
-                "tokens": ticket.tokens,
-                "n_tokens": len(ticket.tokens),
-                "ttft_ms": (r.t_first - r.t_submit) * 1e3,
-                "latency_ms": (ticket.t_done - r.t_submit) * 1e3,
-            },
-        )
+        payload = {
+            "rid": ticket.rid,
+            "tenant": ticket.tenant,
+            "tokens": ticket.tokens,
+            "n_tokens": len(ticket.tokens),
+            "ttft_ms": (r.t_first - r.t_submit) * 1e3,
+            "latency_ms": (ticket.t_done - r.t_submit) * 1e3,
+        }
+        if debug:
+            payload["phases"] = r.phases()
+        return json_response(200, payload)
 
     async def _stream(self, req: HttpRequest, writer) -> bool:
         self._admitting += 1  # before the draining check: see _do_drain
@@ -308,7 +343,7 @@ class HttpServer:
                     )
                 )
                 return False
-            kw = self._parse_submission(req)
+            kw, debug = self._parse_submission(req)
             # submit BEFORE committing to a status line: a rejection must
             # reach the client as its mapped status, not a broken stream
             ticket, toks = await self.aroute.open_stream(**kw)
@@ -340,19 +375,22 @@ class HttpServer:
                 await writer.drain()
                 return True
             r = ticket.req
-            writer.write(
-                sse_event(
-                    {
-                        "rid": ticket.rid,
-                        "tenant": ticket.tenant,
-                        "n_tokens": len(ticket.tokens),
-                        "ttft_ms": (r.t_first - r.t_submit) * 1e3,
-                        "latency_ms": (ticket.t_done - r.t_submit) * 1e3,
-                    },
-                    event="done",
-                )
-            )
+            done_payload = {
+                "rid": ticket.rid,
+                "tenant": ticket.tenant,
+                "n_tokens": len(ticket.tokens),
+                "ttft_ms": (r.t_first - r.t_submit) * 1e3,
+                "latency_ms": (ticket.t_done - r.t_submit) * 1e3,
+            }
+            if debug:
+                done_payload["phases"] = r.phases()
+            writer.write(sse_event(done_payload, event="done"))
             await writer.drain()
+            if TRACER.enabled:
+                TRACER.instant(
+                    "http.sse_flush", cat="http", rid=ticket.rid,
+                    frames=index + 1,
+                )
         finally:
             # closing a half-consumed iterator abandons the ticket, so a
             # dropped connection stops burning device steps within one pump
@@ -373,25 +411,30 @@ class HttpServer:
         )
 
     async def _metrics(self) -> bytes:
-        cache = self.router.prefix_cache
-        report, stats, cache_stats = await self.aroute.snapshot(
-            lambda r: (
-                r.report(),
-                r.stats(),
-                cache.stats() if cache is not None else None,
-            )
-        )
+        # One consolidated scrape read under the pump lock: Router.scrape()
+        # bundles report + stats + prefix-cache stats so no consumer can
+        # re-assemble the pieces and miss the lock on one of them. Dispatch
+        # and tracer stats are internally locked and safe to read here.
+        scrape = await self.aroute.snapshot(lambda r: r.scrape())
         text = render_metrics(
-            report,
-            stats,
-            cache_stats=cache_stats,
+            scrape["report"],
+            scrape["stats"],
+            cache_stats=scrape["cache"],
             draining=self.draining,
             uptime_s=self.uptime_s,
             http_requests=self.http_requests,
+            dispatch_counts=kernel_dispatch.STATS.snapshot(),
+            trace_stats=TRACER.stats(),
         )
         return render_response(
             200, text.encode("utf-8"), content_type=PROM_CONTENT_TYPE
         )
+
+    def _trace(self) -> bytes:
+        """GET /admin/trace: the tracer ring as Chrome trace-event JSON.
+        The tracer snapshots under its own lock, so this does not need the
+        pump lock (and must not hold it: the export can be MBs)."""
+        return json_response(200, TRACER.chrome_trace())
 
     async def _drain(self) -> bytes:
         stats = await self.aroute.snapshot(lambda r: r.stats())

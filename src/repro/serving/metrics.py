@@ -32,7 +32,13 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["RequestRecord", "ServeMetrics", "tenant_summary", "RECORD_WINDOW"]
+__all__ = [
+    "RequestRecord",
+    "ServeMetrics",
+    "tenant_summary",
+    "phase_summary",
+    "RECORD_WINDOW",
+]
 
 # Per-request records feed percentile summaries only, so they are kept in
 # a sliding window: a long-lived server (launch/serve --http) retires
@@ -51,10 +57,31 @@ class RequestRecord:
     ttft: float  # submit -> first generated token (seconds)
     latency: float  # submit -> done (seconds)
     tenant: str = "default"
+    # phase decomposition (seconds): queue_s + prefill_s == ttft and
+    # queue_s + prefill_s + decode_s == latency, up to clock-read clamping
+    queue_s: float = 0.0  # submit -> lane admission
+    prefill_s: float = 0.0  # admission -> first generated token
+    decode_s: float = 0.0  # first token -> retire
+    cache_saved_tokens: int = 0  # prompt tokens skipped via prefix cache
 
 
 def _pct(xs: np.ndarray, q: float) -> float:
     return float(np.percentile(xs, q)) if xs.size else 0.0
+
+
+def phase_summary(records) -> dict:
+    """Per-phase latency aggregates over RequestRecords: for each of
+    queue/prefill/decode, mean/p50/p95 seconds — the warm-tail attribution
+    the tracer exists for, as scrapeable numbers. Empty-safe."""
+    out = {}
+    for phase in ("queue", "prefill", "decode"):
+        xs = np.array([getattr(r, phase + "_s") for r in records])
+        out[phase] = {
+            "mean_s": float(xs.mean()) if xs.size else 0.0,
+            "p50_s": _pct(xs, 50),
+            "p95_s": _pct(xs, 95),
+        }
+    return out
 
 
 def tenant_summary(records) -> dict:
@@ -134,6 +161,9 @@ class ServeMetrics:
         self.retired += 1
         t0 = req.t_submit if req.t_submit is not None else now
         t1 = req.t_first if req.t_first is not None else now
+        t_admit = getattr(req, "t_admit", None)
+        if t_admit is None:
+            t_admit = t0  # admission never stamped: attribute all to prefill
         self.records.append(
             RequestRecord(
                 rid=req.rid,
@@ -142,6 +172,10 @@ class ServeMetrics:
                 ttft=t1 - t0,
                 latency=now - t0,
                 tenant=getattr(req, "tenant", "default"),
+                queue_s=max(t_admit - t0, 0.0),
+                prefill_s=max(t1 - t_admit, 0.0),
+                decode_s=max(now - t1, 0.0),
+                cache_saved_tokens=getattr(req, "cache_saved_tokens", 0),
             )
         )
 
@@ -196,6 +230,7 @@ class ServeMetrics:
             "ttft_p95_s": _pct(ttfts, 95),
             "latency_mean_s": float(lats.mean()) if lats.size else 0.0,
             "latency_p95_s": _pct(lats, 95),
+            "phases": phase_summary(self.records),
         }
 
     def format(self) -> str:

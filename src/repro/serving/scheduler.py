@@ -92,7 +92,18 @@ def zipf_prefix_prompts(
 
 @dataclasses.dataclass
 class Request:
-    """One generation request plus its lifecycle timestamps."""
+    """One generation request plus its lifecycle timestamps.
+
+    The four timestamps split a request's wall-clock into the three phases
+    the observability layer attributes latency to (see ``phases``):
+
+        t_submit ──queue──▶ t_admit ──prefill──▶ t_first ──decode──▶ t_done
+
+    ``t_submit`` is stamped once at first scheduler submission (preserved
+    across router→engine resubmission), ``t_admit`` when the engine binds
+    the request to a lane, ``t_first`` at the first generated token, and
+    ``t_done`` at retire.
+    """
 
     rid: int
     prompt: np.ndarray  # int32 [L], L >= 1
@@ -101,8 +112,12 @@ class Request:
     deadline: Optional[float] = None  # absolute time.monotonic() deadline
     out: list = dataclasses.field(default_factory=list)
     t_submit: Optional[float] = None
+    t_admit: Optional[float] = None  # bound to a lane (queue wait ends)
     t_first: Optional[float] = None  # first generated token (TTFT anchor)
     t_done: Optional[float] = None
+    cache_hit: bool = False  # prefix-cache hit at admission
+    cache_saved_tokens: int = 0  # prompt tokens skipped via state injection
+    cache_saved_steps: int = 0  # ... as whole prefill steps at engine chunk
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -118,6 +133,27 @@ class Request:
     @property
     def done(self) -> bool:
         return len(self.out) >= self.max_new
+
+    def phases(self) -> Optional[dict]:
+        """Per-request latency breakdown in milliseconds, or None until the
+        request retires. This is the payload the HTTP layer returns under
+        the ``debug`` flag and the benchmark turns into TTFT-breakdown
+        columns; each phase is clamped at 0 so clock-read ordering noise
+        can never produce a negative duration."""
+        if self.t_submit is None or self.t_done is None:
+            return None
+        t0 = self.t_submit
+        t_admit = self.t_admit if self.t_admit is not None else t0
+        t1 = self.t_first if self.t_first is not None else self.t_done
+        return {
+            "queue_ms": max(t_admit - t0, 0.0) * 1e3,
+            "prefill_ms": max(t1 - t_admit, 0.0) * 1e3,
+            "decode_ms": max(self.t_done - t1, 0.0) * 1e3,
+            "total_ms": max(self.t_done - t0, 0.0) * 1e3,
+            "cache_hit": self.cache_hit,
+            "cache_saved_tokens": self.cache_saved_tokens,
+            "cache_saved_steps": self.cache_saved_steps,
+        }
 
     def sort_key(self, policy: str) -> float:
         if policy == "sjf":

@@ -448,3 +448,175 @@ def test_metrics_tenant_percentiles_after_traffic():
     assert 'repro_tenant_completed_total{tenant="acme"} 1' in text
     assert 'repro_tenant_ttft_seconds{tenant="acme",quantile="0.95"}' in text
     assert 'repro_tenant_latency_seconds{tenant="acme",quantile="0.5"}' in text
+
+
+# ---------------------------------------------------------------------------
+# observability: /admin/trace, debug phase breakdowns, scrape consistency
+# ---------------------------------------------------------------------------
+
+import importlib.util as _ilu
+from pathlib import Path as _Path
+
+from repro.obs.trace import TRACER
+
+_spec = _ilu.spec_from_file_location(
+    "check_trace", _Path(__file__).parent.parent / "scripts" / "check_trace.py"
+)
+_check_trace = _ilu.module_from_spec(_spec)
+_spec.loader.exec_module(_check_trace)
+validate_trace = _check_trace.validate_trace
+
+
+def test_admin_trace_exports_valid_chrome_trace_with_lifecycle_spans():
+    """GET /admin/trace after real traffic: the export validates (required
+    keys, monotone ts, matched B/E) and carries the request-lifecycle
+    span names end to end."""
+    [prompt] = prompts_for(tiny_model(), 1, seed=11)
+
+    async def main():
+        server, task = await start_server(make_router(cache=PrefixCache(block=4)))
+        TRACER.clear()
+        try:
+            async with Client(server.host, server.port) as c:
+                await c.generate(prompt, max_new=3)
+                return await c.trace()
+        finally:
+            await stop_server(server, task)
+
+    trace = asyncio.run(main())
+    assert validate_trace(trace) == []
+    evs = trace["traceEvents"]
+    names = {e["name"] for e in evs}
+    for expected in ("http.request", "router.submit", "router.dispatch",
+                     "router.pump", "engine.admit", "cache.lookup",
+                     "engine.step", "engine.retire"):
+        assert expected in names, expected
+    # engine.step carries per-lane attribution and prefill/decode kind
+    step_args = [e["args"] for e in evs
+                 if e["name"] == "engine.step" and e["ph"] == "B"]
+    assert any(a.get("kind") == "prefill" for a in step_args)
+    assert any(a.get("kind") == "decode" for a in step_args)
+    assert all("lanes" in a for a in step_args)
+
+
+def test_debug_flag_returns_phase_breakdown():
+    """`"debug": true` adds the queue/prefill/decode decomposition to
+    /v1/generate and to the SSE terminal done event; absent by default;
+    non-bool debug is a 400."""
+    [prompt] = prompts_for(tiny_model(), 1, seed=12)
+
+    async def main():
+        server, task = await start_server(make_router(cache=PrefixCache(block=4)))
+        try:
+            async with Client(server.host, server.port) as c:
+                plain = await c.generate(prompt, max_new=3)
+                dbg = await c.generate(prompt, max_new=3, debug=True)
+                done = {}
+                async for ev, data in c.stream(prompt, max_new=3, debug=True):
+                    if ev == "done":
+                        done = data
+                status, _, _ = await c.request(
+                    "POST", "/v1/generate",
+                    {"prompt": prompt.tolist(), "debug": "yes"},
+                )
+            return plain, dbg, done, status
+        finally:
+            await stop_server(server, task)
+
+    plain, dbg, done, bad_status = asyncio.run(main())
+    assert "phases" not in plain
+    assert bad_status == 400
+    for resp in (dbg, done):
+        ph = resp["phases"]
+        for k in ("queue_ms", "prefill_ms", "decode_ms", "total_ms"):
+            assert ph[k] >= 0.0, (k, ph)
+        assert ph["queue_ms"] + ph["prefill_ms"] + ph["decode_ms"] == pytest.approx(
+            ph["total_ms"], abs=0.1
+        )
+        assert ph["total_ms"] >= resp["ttft_ms"] - 0.1
+    # third identical prompt hit the cache warmed by the first two
+    assert done["phases"]["cache_hit"]
+    assert done["phases"]["cache_saved_tokens"] > 0
+
+
+def test_metrics_export_dispatch_and_trace_stats():
+    """Satellite: kernels.dispatch.STATS and tracer aggregates surface in
+    /metrics with op/backend and span-name labels."""
+    [prompt] = prompts_for(tiny_model(), 1, seed=13)
+
+    async def main():
+        server, task = await start_server(make_router())
+        try:
+            async with Client(server.host, server.port) as c:
+                await c.generate(prompt, max_new=2)
+                return await c.metrics()
+        finally:
+            await stop_server(server, task)
+
+    text = asyncio.run(main())
+    assert "repro_trace_enabled 1" in text
+    m = re.findall(r'repro_dispatch_decisions_total\{op="([^"]+)",backend="([^"]+)"\} (\d+)', text)
+    assert m, "dispatch decisions missing from /metrics"
+    assert all(int(v) > 0 for _, _, v in m)
+    assert re.search(r'repro_trace_spans_total\{name="engine\.step"\} \d+', text)
+    assert re.search(r'repro_trace_span_seconds_total\{name="engine\.step"\} \d', text)
+    assert re.search(r'repro_request_phase_seconds\{phase="prefill",quantile="0\.95"\}', text)
+
+
+@pytest.mark.slow
+def test_metrics_scrape_consistent_under_concurrent_load():
+    """Regression (scrape-path races): hammer /metrics while streams are
+    in flight. Every scrape must parse as Prometheus text with sane,
+    monotone counters — one locked Router.scrape() snapshot per scrape."""
+    model = tiny_model()
+    prompts = prompts_for(model, 8, seed=14)
+
+    async def main():
+        server, task = await start_server(
+            make_router(lanes=2, cache=PrefixCache(block=4), max_queue=64)
+        )
+        try:
+            scrapes = []
+            done = asyncio.Event()
+
+            async def scraper():
+                async with Client(server.host, server.port) as c:
+                    while not done.is_set():
+                        scrapes.append(await c.metrics())
+                        await asyncio.sleep(0.005)
+                    scrapes.append(await c.metrics())
+
+            async def one(i, p):
+                async with Client(server.host, server.port) as c:
+                    return [t async for t in _collect(c, p)]
+
+            async def _collect(c, p):
+                async for ev, data in c.stream(p, max_new=4):
+                    if ev == "message":
+                        yield data["token"]
+
+            scrape_task = asyncio.create_task(scraper())
+            outs = await asyncio.gather(*(one(i, p) for i, p in enumerate(prompts)))
+            done.set()
+            await scrape_task
+            return outs, scrapes
+        finally:
+            await stop_server(server, task)
+
+    outs, scrapes = asyncio.run(main())
+    assert all(len(t) == 4 for t in outs)
+    assert len(scrapes) >= 2
+    last_requests = -1.0
+    for text in scrapes:
+        samples = {}
+        for line in text.strip().splitlines():
+            if line.startswith("#"):
+                continue
+            assert _SAMPLE_RE.match(line), line
+            name_labels, value = line.rsplit(" ", 1)
+            samples[name_labels] = float(value)
+        assert samples["repro_up"] == 1.0
+        # counters never go backwards across interleaved scrapes
+        assert samples["repro_requests_total"] >= last_requests
+        last_requests = samples["repro_requests_total"]
+    assert scrapes[-1].count("repro_requests_total 8") == 1

@@ -1,0 +1,337 @@
+"""Observability subsystem tests: the span tracer (thread/async safety,
+ring bounds, Chrome trace-event export invariants, the near-zero
+disabled-path cost bound), the quantization-health telemetry stats, the
+TelemetryLogger JSONL aggregation, and the in-kernel FP8 flush hook."""
+import asyncio
+import importlib.util
+import json
+import threading
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import telemetry as tel
+from repro.obs.trace import Tracer
+
+# scripts/check_trace.py doubles as the importable trace validator
+_spec = importlib.util.spec_from_file_location(
+    "check_trace", Path(__file__).parent.parent / "scripts" / "check_trace.py"
+)
+check_trace = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_trace)
+validate_trace = check_trace.validate_trace
+
+
+# ---------------------------------------------------------------------------
+# tracer core
+# ---------------------------------------------------------------------------
+
+
+def test_span_emits_matched_pair_and_aggregates():
+    t = Tracer()
+    t.enable()
+    with t.span("work", cat="test", rid=7):
+        t.instant("tick", cat="test")
+    evs = t.events()
+    assert [e["ph"] for e in evs] == ["B", "i", "E"]
+    assert evs[0]["name"] == evs[2]["name"] == "work"
+    assert evs[0]["args"] == {"rid": 7}
+    s = t.stats()
+    assert s["spans"]["work"]["count"] == 1
+    assert s["spans"]["work"]["total_s"] >= 0
+    assert s["spans"]["tick"]["count"] == 1
+    assert validate_trace(t.chrome_trace()) == []
+
+
+def test_disabled_tracer_emits_nothing_and_reuses_null_span():
+    t = Tracer()
+    assert not t.enabled
+    s1 = t.span("a", rid=1)
+    s2 = t.span("b")
+    assert s1 is s2  # the cached null span: no allocation per call
+    with s1:
+        pass
+    t.instant("x")
+    t.counter("c", v=1)
+    assert t.events() == [] and t.stats()["emitted"] == 0
+
+
+def test_ring_bound_counts_drops_but_keeps_aggregates():
+    t = Tracer(capacity=8)
+    t.enable()
+    for i in range(20):
+        with t.span("w"):
+            pass
+    assert len(t.events()) == 8
+    s = t.stats()
+    assert s["dropped"] == 40 - 8 and s["emitted"] == 40
+    # aggregate counts survive eviction even though events fell out
+    assert s["spans"]["w"]["count"] == 20
+
+
+def test_complete_events_resort_monotone_and_validate():
+    """Retroactive X events (async scopes) are pushed at completion with
+    an earlier start ts; the exporter must restore monotone order."""
+    t = Tracer()
+    t.enable()
+    t0 = time.monotonic_ns() // 1000
+    with t.span("inner"):
+        pass
+    t.complete("outer", t0, (time.monotonic_ns() // 1000) - t0, cat="http")
+    raw = t.events()
+    # pushed after inner's B/E, but starts before them
+    assert raw[-1]["ph"] == "X" and raw[-1]["ts"] <= raw[0]["ts"]
+    exported = t.chrome_trace()["traceEvents"]
+    assert validate_trace({"traceEvents": exported}) == []
+    assert [e["ts"] for e in exported] == sorted(e["ts"] for e in exported)
+    assert t.stats()["spans"]["outer"]["count"] == 1
+
+
+def test_export_sanitizes_orphan_E_and_unterminated_B():
+    """Ring eviction can orphan half a B/E pair; the export must still be
+    bracket-matched (what Perfetto and check_trace.py require)."""
+    t = Tracer(capacity=3)
+    t.enable()
+    with t.span("evicted"):  # B will fall out of the 3-slot ring...
+        with t.span("kept"):
+            pass
+        # ...leaving its E an orphan among ["kept" B, "kept" E, "evicted" E]
+    raw = t.events()
+    assert [e["ph"] for e in raw] == ["B", "E", "E"]
+    exported = t.chrome_trace()["traceEvents"]
+    assert validate_trace({"traceEvents": exported}) == []
+    assert [e["name"] for e in exported] == ["kept", "kept"]
+
+    t2 = Tracer()
+    t2.enable()
+    cm = t2.span("open")
+    cm.__enter__()  # never exited: unterminated B must be dropped
+    with t2.span("closed"):
+        pass
+    exported = t2.chrome_trace()["traceEvents"]
+    assert validate_trace({"traceEvents": exported}) == []
+    assert [e["name"] for e in exported] == ["closed", "closed"]
+
+
+def test_clear_resets_buffer_and_counters():
+    t = Tracer()
+    t.enable()
+    with t.span("w"):
+        pass
+    t.clear()
+    s = t.stats()
+    assert t.events() == [] and s["emitted"] == 0 and s["spans"] == {}
+
+
+def test_validator_rejects_broken_traces():
+    ok = {"traceEvents": [
+        {"name": "a", "ph": "B", "ts": 1, "pid": 0, "tid": 1},
+        {"name": "a", "ph": "E", "ts": 2, "pid": 0, "tid": 1},
+    ]}
+    assert validate_trace(ok) == []
+    bad_order = {"traceEvents": [
+        {"name": "a", "ph": "i", "ts": 5, "pid": 0, "tid": 1, "s": "t"},
+        {"name": "b", "ph": "i", "ts": 1, "pid": 0, "tid": 1, "s": "t"},
+    ]}
+    assert any("backwards" in p for p in validate_trace(bad_order))
+    orphan = {"traceEvents": [
+        {"name": "a", "ph": "E", "ts": 1, "pid": 0, "tid": 1},
+    ]}
+    assert any("no open B" in p for p in validate_trace(orphan))
+    unterminated = {"traceEvents": [
+        {"name": "a", "ph": "B", "ts": 1, "pid": 0, "tid": 1},
+    ]}
+    assert any("unterminated" in p for p in validate_trace(unterminated))
+    missing = {"traceEvents": [{"ph": "B", "ts": 1}]}
+    assert any("missing keys" in p for p in validate_trace(missing))
+
+
+# ---------------------------------------------------------------------------
+# concurrency: engine worker thread + asyncio pump interleave
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_thread_and_asyncio_interleave_stays_consistent():
+    """The serving shape: worker threads emit nested B/E spans while
+    event-loop coroutines emit retroactive X completes, all into one
+    tracer. Nothing may corrupt — counts exact, export valid."""
+    t = Tracer(capacity=100_000)
+    t.enable()
+    N, WORKERS, COROS = 200, 4, 8
+
+    def worker(w):
+        for i in range(N):
+            with t.span("step", worker=w, i=i):
+                with t.span("inner"):
+                    pass
+
+    async def coro(c):
+        for i in range(N):
+            t0 = time.monotonic_ns() // 1000
+            await asyncio.sleep(0)  # force interleaving on the loop thread
+            t.complete("request", t0, (time.monotonic_ns() // 1000) - t0,
+                       coro=c, i=i)
+
+    async def main():
+        threads = [
+            threading.Thread(target=worker, args=(w,)) for w in range(WORKERS)
+        ]
+        for th in threads:
+            th.start()
+        await asyncio.gather(*(coro(c) for c in range(COROS)))
+        for th in threads:
+            th.join()
+
+    asyncio.run(main())
+    s = t.stats()
+    assert s["dropped"] == 0
+    assert s["spans"]["step"]["count"] == WORKERS * N
+    assert s["spans"]["inner"]["count"] == WORKERS * N
+    assert s["spans"]["request"]["count"] == COROS * N
+    exported = t.chrome_trace()
+    assert validate_trace(exported) == []
+    assert len(exported["traceEvents"]) == 4 * WORKERS * N + COROS * N
+
+
+def test_disabled_tracer_overhead_is_negligible():
+    """The <2% serving bound, asserted arithmetically with huge margin:
+    an engine step is >= 1ms of device work and crosses a handful of
+    trace sites; a disabled site must cost well under 50us per call
+    (measured mean is ~100ns), so tracing-off overhead is < 0.1%."""
+    t = Tracer()
+    calls = 20_000
+    t0 = time.perf_counter()
+    for i in range(calls):
+        with t.span("hot"):
+            pass
+    per_call = (time.perf_counter() - t0) / calls
+    assert per_call < 50e-6, f"disabled span cost {per_call*1e6:.1f}us/call"
+    assert t.events() == []
+
+
+# ---------------------------------------------------------------------------
+# quantization-health telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_fp8_grad_stats_fractions():
+    g = {"w": jnp.asarray([0.0, 1e-20, 60000.0, 1.0], jnp.float32)}
+    out = jax.device_get(tel.fp8_grad_stats(g))
+    assert out["fp8_sat_frac"] == pytest.approx(0.25)
+    assert out["fp8_underflow_frac"] == pytest.approx(0.25)
+    assert out["fp8_zero_frac"] == pytest.approx(0.25)
+
+
+def test_layer_grad_norms_per_top_level_key():
+    g = {
+        "a": {"w": jnp.asarray([3.0, 4.0])},
+        "b": jnp.asarray([5.0]),
+    }
+    out = jax.device_get(tel.layer_grad_norms(g))
+    assert out["a"] == pytest.approx(5.0)
+    assert out["b"] == pytest.approx(5.0)
+    flat = jax.device_get(tel.layer_grad_norms(jnp.asarray([6.0, 8.0])))
+    assert flat["all"] == pytest.approx(10.0)
+
+
+def test_floatsd_update_stats_carry_and_clamp():
+    old = {"w": jnp.full((4, 4), 1.0, jnp.float32)}
+    moved = {"w": jnp.full((4, 4), 1.3, jnp.float32)}  # different grid point
+    out = jax.device_get(tel.floatsd_update_stats(old, moved))
+    assert out["sd_carry_frac"] == pytest.approx(1.0)
+    same = jax.device_get(tel.floatsd_update_stats(old, old))
+    assert same["sd_carry_frac"] == 0.0 and same["sd_clamp_frac"] == 0.0
+    # 1-D leaves (biases) are excluded from the weight-update stats
+    bias_only = jax.device_get(tel.floatsd_update_stats(
+        {"b": jnp.asarray([1.0])}, {"b": jnp.asarray([2.0])}
+    ))
+    assert bias_only["sd_carry_frac"] == 0.0
+
+
+def test_train_step_telemetry_metrics_shape():
+    from repro.core.policy import get_policy
+    from repro.models.lstm_models import WikiText2LM
+    from repro.optim import sgd
+    from repro.optim.train_state import init_state, make_train_step
+
+    policy = get_policy("floatsd8_table6")
+    model = WikiText2LM(vocab=64, emb=16, hidden=16, n_layers=1)
+    opt = sgd(0.9)
+    params = model.init(jax.random.PRNGKey(0))
+    state = init_state(params, opt, policy)
+    step = make_train_step(model.loss, opt, policy, lr=0.5, telemetry=True)
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, 64, (2, 8)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, 64, (2, 8)), jnp.int32),
+    }
+    state, m = step(state, batch)
+    t = jax.device_get(m["tel"])
+    for k in ("fp8_sat_frac", "fp8_underflow_frac", "fp8_zero_frac",
+              "sd_carry_frac", "sd_clamp_frac"):
+        assert 0.0 <= float(t[k]) <= 1.0, k
+    assert set(t["grad_norm"]) == set(params)
+    # telemetry=False must not add the key
+    state2 = init_state(params, opt, policy)
+    _, m2 = make_train_step(model.loss, opt, policy, lr=0.5)(state2, batch)
+    assert "tel" not in m2
+
+
+def test_telemetry_logger_aggregates_and_writes_jsonl(tmp_path):
+    path = tmp_path / "tel.jsonl"
+    log = tel.TelemetryLogger(path=str(path))
+    for step in range(1, 5):
+        log.update(step, {
+            "loss": 2.0, "grads_finite": step != 2,  # one skipped step
+            "loss_scale": 1024.0 if step < 3 else 512.0,  # one backoff
+            "tel": {
+                "fp8_sat_frac": 0.1, "fp8_underflow_frac": 0.0,
+                "fp8_zero_frac": 0.5, "sd_carry_frac": 0.25,
+                "sd_clamp_frac": 0.0,
+                "grad_norm": {"lstm0": 1.5},
+            },
+        })
+    rec = log.emit(4)
+    assert rec.window_steps == 4 and rec.loss_mean == pytest.approx(2.0)
+    assert rec.nonfinite_steps == 1 and rec.scale_downs == 1
+    assert rec.fp8_sat_frac == pytest.approx(0.1)
+    assert rec.sd_carry_frac == pytest.approx(0.25)
+    assert rec.grad_norms == {"lstm0": 1.5}
+    [line] = path.read_text().splitlines()
+    assert json.loads(line)["step"] == 4
+    assert "sat" in log.format(rec)
+    # window resets: a second emit covers only what came after
+    log.update(5, {"loss": 4.0, "grads_finite": True, "loss_scale": 512.0})
+    rec2 = log.emit(5)
+    assert rec2.window_steps == 1 and rec2.loss_mean == pytest.approx(4.0)
+    assert rec2.nonfinite_steps == 1  # cumulative counters persist
+    assert len(path.read_text().splitlines()) == 2
+
+
+def test_kernel_flush_hook_records_dw_stats():
+    """matmul_dw with the sink enabled reports flush counts through
+    jax.debug.callback; disabled, the hook stages out entirely."""
+    from repro.kernels import dispatch as kd
+
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 8)), jnp.float32)
+    g = jnp.asarray(np.random.default_rng(1).normal(size=(4, 8)), jnp.float32)
+    tel.KERNEL_STATS.reset()
+    tel.KERNEL_STATS.enable()
+    try:
+        dw = jax.jit(lambda a, b: kd.matmul_dw(a, b, backend="ref"))(x, g)
+        jax.block_until_ready(dw)
+    finally:
+        tel.KERNEL_STATS.disable()
+    snap = tel.KERNEL_STATS.snapshot()
+    assert snap["floatsd_matmul_dw"]["calls"] == 1
+    assert snap["floatsd_matmul_dw"]["elems"] == dw.size
+    assert 0.0 <= snap["floatsd_matmul_dw"]["zero_frac"] <= 1.0
+
+    tel.KERNEL_STATS.reset()
+    dw2 = jax.jit(lambda a, b: kd.matmul_dw(a, b, backend="ref"))(x, g)
+    jax.block_until_ready(dw2)
+    assert tel.KERNEL_STATS.snapshot() == {}  # disabled: staged out
