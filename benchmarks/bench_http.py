@@ -27,6 +27,16 @@ Phases (``--workload all``, the default, runs every one):
   server's own ``/metrics`` endpoint, and warm-vs-cold token agreement
   is asserted (the model is briefly pretrained so greedy margins are
   decisive — see bench_serving.py).
+* ``http_zipf_warm_stress`` / ``http_zipf_warm_v2`` — the warm-tail
+  experiment (EXPERIMENTS hillclimb #6 measured warm p95 TTFT *worse*
+  than cold under load: skipping prefill admits the zipf head faster
+  than lanes drain it). Both phases replay the warm workload at
+  ``--stress-rate`` arrivals on identically re-warmed caches; stress is
+  the FIFO baseline, v2 runs scheduler v2 (``sjf_work``
+  remaining-work-first admission on router and engines + lane
+  preemption enabled). The v2-vs-cold token agreement assertion keeps
+  the scheduling change honest: reordering and FP8 snapshot restores
+  must not flip a single greedy token.
 
 Every HTTP request streams with ``debug=True``, so the terminal SSE
 ``done`` event carries the server-side phase breakdown
@@ -82,17 +92,19 @@ def pretrain(model, policy, steps, seed=0):
     return state.params
 
 
-def build_router(model, params, policy, args, cache=None, max_queue=None):
+def build_router(model, params, policy, args, cache=None, max_queue=None,
+                 admission="fifo", engine_kw=None):
     return Router.build(
         model, params, policy,
         replicas=args.replicas,
         prefix_cache=cache,
         router_kw=dict(
-            admission="fifo",
+            admission=admission,
             max_queue=max_queue if max_queue is not None else args.requests,
         ),
         lanes=args.batch,
         chunk=args.chunk,
+        **(engine_kw or {}),
     )
 
 
@@ -292,6 +304,9 @@ def main():
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--rate", type=float, default=8.0,
                     help="open-loop arrival rate (requests/s)")
+    ap.add_argument("--stress-rate", type=float, default=24.0,
+                    help="arrival rate for the warm-tail stress phases "
+                    "(fast enough that warm admissions outpace lane drain)")
     ap.add_argument("--batch", type=int, default=4, help="lanes per replica")
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--chunk", type=int, default=8)
@@ -374,15 +389,20 @@ def main():
         cold_tokens = tokens_of(results)
         print_phase("http_zipf_cold", phases["http_zipf_cold"])
 
-        cache = PrefixCache(block=args.chunk)
-        warm_pass = build_router(model, params, policy, args, cache=cache)
-        for p in warmup:  # populate: same system prompts, fresh suffixes
-            warm_pass.submit(p, max_new=args.max_new)
-        warm_pass.drain()
+        def warmed_cache():
+            """Fresh, identically-populated cache per phase: reusing one
+            cache would let later phases profit from entries the earlier
+            measured runs inserted, corrupting the A/B."""
+            cache = PrefixCache(block=args.chunk)
+            warm_pass = build_router(model, params, policy, args, cache=cache)
+            for p in warmup:  # populate: same system prompts, fresh suffixes
+                warm_pass.submit(p, max_new=args.max_new)
+            warm_pass.drain()
+            return cache
 
         results, wall, counters, last_trace = run(
             run_http_phase(
-                build_router(model, params, policy, args, cache=cache),
+                build_router(model, params, policy, args, cache=warmed_cache()),
                 measure, args.rate, args.max_new, args.tenants, args.chunk,
             )
         )
@@ -399,10 +419,50 @@ def main():
             flush=True,
         )
 
+        # -- warm-tail stress A/B: FIFO baseline vs scheduler v2 --------
+        print(f"== warm-tail stress: {args.requests} requests @ "
+              f"{args.stress_rate}/s ==", flush=True)
+        results, wall, counters, _ = run(
+            run_http_phase(
+                build_router(model, params, policy, args, cache=warmed_cache()),
+                measure, args.stress_rate, args.max_new, args.tenants,
+                args.chunk,
+            )
+        )
+        phases["http_zipf_warm_stress"] = summarize(results, wall, counters)
+        print_phase("http_zipf_warm_stress", phases["http_zipf_warm_stress"])
+
+        v2_router = build_router(
+            model, params, policy, args, cache=warmed_cache(),
+            # router and engines share the policy so the engines'
+            # preemption peek compares against the ordering the router
+            # dispatches under (same pairing as launch/serve --preempt)
+            admission="sjf_work",
+            engine_kw=dict(admission="sjf_work", preempt=True),
+        )
+        results, wall, counters, last_trace = run(
+            run_http_phase(
+                v2_router, measure, args.stress_rate, args.max_new,
+                args.tenants, args.chunk,
+            )
+        )
+        phases["http_zipf_warm_v2"] = summarize(results, wall, counters)
+        print_phase("http_zipf_warm_v2", phases["http_zipf_warm_v2"])
+        agree["warm_v2_vs_cold"] = agreement(tokens_of(results), cold_tokens)
+        print(
+            f"scheduler v2 at {args.stress_rate}/s: warm p95 TTFT "
+            f"{phases['http_zipf_warm_stress']['ttft_p95_ms']:.1f}ms (fifo) "
+            f"-> {phases['http_zipf_warm_v2']['ttft_p95_ms']:.1f}ms "
+            f"(sjf_work+preempt), token agreement v2 vs cold "
+            f"{agree['warm_v2_vs_cold']:.0%}",
+            flush=True,
+        )
+
     out = {
         "bench": "http",
         "config": {
             "requests": args.requests, "rate_per_s": args.rate,
+            "stress_rate_per_s": args.stress_rate,
             "batch": args.batch, "replicas": args.replicas,
             "chunk": args.chunk, "max_new": args.max_new,
             "vocab": args.vocab, "d_model": args.d_model,
@@ -442,6 +502,8 @@ def main():
         failures.append("http vs in-process token agreement != 100%")
     if agree.get("warm_vs_cold", 1.0) != 1.0:
         failures.append("warm vs cold token agreement != 100%")
+    if agree.get("warm_v2_vs_cold", 1.0) != 1.0:
+        failures.append("scheduler-v2 warm vs cold token agreement != 100%")
     if failures:
         raise SystemExit("; ".join(failures))
 

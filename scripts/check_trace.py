@@ -13,6 +13,9 @@ export fails in CI instead of failing silently in the viewer:
   * per (pid, tid), B/E events pair up like brackets: no E without a
     matching B, matching names, nothing left open at the end
   * X (complete) events carry a non-negative ``dur``
+  * request-lifecycle instants (engine.cancel / engine.preempt /
+    engine.resume / router.cancel) are ``i``-phase and carry the rid in
+    their args — the attribution the cancellation runbook greps for
 
 Usage:
     scripts/check_trace.py trace.json
@@ -28,6 +31,15 @@ import sys
 
 REQUIRED_KEYS = ("name", "ph", "ts", "pid", "tid")
 KNOWN_PHASES = {"B", "E", "X", "i", "C"}
+# Cancellation/preemption lifecycle markers: always instants, always
+# rid-attributed (a cancel event without a rid cannot be joined against
+# the request it released).
+RID_INSTANTS = {
+    "engine.cancel",
+    "engine.preempt",
+    "engine.resume",
+    "router.cancel",
+}
 
 
 def validate_trace(obj) -> list:
@@ -82,6 +94,16 @@ def validate_trace(obj) -> list:
             dur = ev.get("dur")
             if not isinstance(dur, (int, float)) or dur < 0:
                 problems.append(f"event {i}: X without non-negative dur")
+        if ev["name"] in RID_INSTANTS:
+            if ph != "i":
+                problems.append(
+                    f"event {i}: {ev['name']!r} must be an instant "
+                    f"(ph 'i'), got {ph!r}"
+                )
+            elif "rid" not in (ev.get("args") or {}):
+                problems.append(
+                    f"event {i}: {ev['name']!r} instant missing args.rid"
+                )
 
     for key, stack in stacks.items():
         for name, j in stack:

@@ -1,0 +1,110 @@
+#!/usr/bin/env python
+"""Disconnect-mid-stream probe against a LIVE serving endpoint.
+
+Plays the rude client: opens /v1/stream asking for far more tokens than
+it will read, drops the TCP connection after the first one, and then
+proves — from the /metrics scrape alone — that the server cancelled the
+abandoned request instead of decoding to ``max_new`` for nobody:
+
+  * ``repro_cancelled_total{reason="abandoned"}`` increments by exactly 1;
+  * decode steps stop advancing once the ticket is cancelled (a follow-up
+    ``max_new=2`` request, which is also the pump that runs the cancel,
+    costs at most a few steps — nowhere near the 256 abandoned tokens);
+  * every lane is free again afterwards.
+
+This is the runbook check for the runaway-abandoned-decode bug: before
+engine-level cancellation existed, this probe would show ~256 decode
+steps and a lane pinned for the whole window.
+
+Usage:
+    scripts/http_cancel_probe.py HOST PORT
+    (needs PYTHONPATH=src; run against `repro.launch.serve --http`)
+"""
+from __future__ import annotations
+
+import asyncio
+import re
+import sys
+
+from repro.serving.http import Client
+
+ABANDON_MAX_NEW = 256  # what the rude client asks for and never reads
+POST_CANCEL_STEP_BUDGET = 4  # prefill+decode cost of the max_new=2 pump
+
+
+def counter(text: str, name: str, labels: str = "") -> int:
+    m = re.search(rf"^{re.escape(name + labels)} (\d+)$", text, re.MULTILINE)
+    return int(m.group(1)) if m else 0
+
+
+async def probe(host: str, port: int) -> list:
+    prompt = [5, 6, 7, 8]
+    problems = []
+    async with Client(host, port, tenant="cancel-probe") as c:
+        m0 = await c.metrics()
+        lanes = counter(m0, "repro_lanes")
+        d0 = counter(m0, "repro_decode_steps_total")
+        ab0 = counter(m0, "repro_cancelled_total", '{reason="abandoned"}')
+
+        async for ev, _ in c.stream(prompt, max_new=ABANDON_MAX_NEW):
+            if ev == "message":
+                break  # closes the dedicated stream socket: the disconnect
+        # the server notices on its next failed token write, abandons the
+        # ticket, and stops driving it — give that write a moment to fail
+        await asyncio.sleep(0.3)
+
+        m1 = await c.metrics()
+        d1 = counter(m1, "repro_decode_steps_total")
+        if d1 - d0 >= ABANDON_MAX_NEW:
+            problems.append(
+                f"abandoned stream decoded to max_new anyway "
+                f"({d1 - d0} decode steps after disconnect)"
+            )
+
+        # any pump cancels stale tickets before dispatching; this tiny
+        # request is both the pump source and the lane-reuse check
+        await c.generate(prompt, max_new=2)
+
+        m2 = await c.metrics()
+        d2 = counter(m2, "repro_decode_steps_total")
+        ab2 = counter(m2, "repro_cancelled_total", '{reason="abandoned"}')
+        free2 = counter(m2, "repro_free_lanes")
+        if ab2 - ab0 != 1:
+            problems.append(
+                f"expected exactly one abandoned cancellation, got "
+                f"{ab2 - ab0} (repro_cancelled_total{{reason=\"abandoned\"}} "
+                f"{ab0} -> {ab2})"
+            )
+        if d2 - d1 > POST_CANCEL_STEP_BUDGET:
+            problems.append(
+                f"{d2 - d1} decode steps after the cancel pump (budget "
+                f"{POST_CANCEL_STEP_BUDGET}) — the cancelled request is "
+                f"still decoding"
+            )
+        if free2 != lanes:
+            problems.append(
+                f"{lanes - free2} lane(s) still bound after cancel "
+                f"(repro_free_lanes {free2} of {lanes})"
+            )
+        if not problems:
+            print(
+                f"cancel probe OK: disconnect cancelled after "
+                f"{d1 - d0} decode step(s) (asked for {ABANDON_MAX_NEW}), "
+                f"{d2 - d1} step(s) for the follow-up, "
+                f"{free2}/{lanes} lanes free"
+            )
+    return problems
+
+
+def main(argv) -> int:
+    if len(argv) != 3 or argv[1] in ("-h", "--help"):
+        print(__doc__, file=sys.stderr)
+        return 2
+    problems = asyncio.run(probe(argv[1], int(argv[2])))
+    for p in problems:
+        print(f"cancel probe: {p}", file=sys.stderr)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

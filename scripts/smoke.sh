@@ -41,13 +41,19 @@ echo "$METRICS" | grep -q '^repro_dispatch_decisions_total{' \
     || { echo "http smoke: repro_dispatch_decisions_total missing from /metrics"; exit 1; }
 echo "$METRICS" | grep -q '^repro_trace_enabled 1$' \
     || { echo "http smoke: tracer not enabled on the serve path"; exit 1; }
+# rude-client probe: disconnect mid-stream must cancel the request inside
+# the engine (scrape-diff: one abandoned cancellation, no runaway decode,
+# all lanes free again)
+python scripts/http_cancel_probe.py 127.0.0.1 "$PORT"
 # the trace export must be valid Chrome trace-event JSON (required keys,
 # monotone ts, matched B/E pairs) — scripts/check_trace.py asserts all of it
 curl -fsS "http://127.0.0.1:$PORT/admin/trace" | python scripts/check_trace.py -
 curl -fsS -X POST "http://127.0.0.1:$PORT/admin/drain"; echo
 wait $HTTP_PID   # drain must exit the server cleanly
 trap - EXIT
-grep -q "served 1 requests" "$HTTP_LOG" || { cat "$HTTP_LOG"; exit 1; }
+# 2 completed (the generate + the probe's follow-up); the probe's
+# abandoned stream was cancelled, which must NOT count as served
+grep -q "served 2 requests" "$HTTP_LOG" || { cat "$HTTP_LOG"; exit 1; }
 rm -f "$HTTP_LOG"
 
 echo "smoke OK"

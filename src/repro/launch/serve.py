@@ -21,6 +21,7 @@ for the endpoint reference and runbook.
   ... --chunk 1 --dense                                 # seed-equivalent loop
   ... --frontend --replicas 2 --workload zipf-prefix    # router + cache
   ... --http --port 8000 --replicas 2                   # network service
+  ... --http --admission sjf_work --preempt             # scheduler v2
 """
 from __future__ import annotations
 
@@ -89,6 +90,15 @@ def main():
     ap.add_argument("--chunk", type=int, default=8,
                     help="prefill chunk: prompt tokens consumed per step")
     ap.add_argument("--admission", default="fifo", choices=ADMISSION_POLICIES)
+    ap.add_argument("--preempt", action="store_true",
+                    help="scheduler v2: let engines preempt the "
+                         "longest-remaining decoding lane (FP8 state "
+                         "snapshot, resumed later) when the queue head "
+                         "owes much less work — pair with "
+                         "--admission sjf_work for the warm-tail win")
+    ap.add_argument("--admit-pace", type=int, default=None,
+                    help="scheduler v2: cap lane admissions per engine "
+                         "step (spreads a warm burst; default unlimited)")
     ap.add_argument("--dense", action="store_true",
                     help="serve dense f32 weights (fake-quant at use) "
                          "instead of packed uint8 codes")
@@ -154,6 +164,11 @@ def main():
         chunk=args.chunk,
         packed=not args.dense,
         cache_len=None if cfg.family == "lstm" else 2048,
+        # engines share the admission policy so the preemption check peeks
+        # at the same ordering the router dispatches under
+        admission=args.admission,
+        preempt=args.preempt,
+        admit_pace=args.admit_pace,
     )
 
     if args.frontend:
@@ -205,7 +220,7 @@ def main():
             )
         return
 
-    engine = ServeEngine(model, params, policy, admission=args.admission, **engine_kw)
+    engine = ServeEngine(model, params, policy, **engine_kw)
     if engine.store is not None:
         s = engine.store
         print(

@@ -73,13 +73,23 @@ class ServeEngine:
     frees the lane and (``wants``) stores the final state keyed by
     prompt + generated[:-1].
 
+    Cancellation (``cancel(rid)``) removes a request wherever it lives:
+    scheduler removal while queued, masked lane release while bound (the
+    free is folded into the step's existing reset mask — zero extra device
+    steps). Preemption (``preempt=True``) lets ``step_once`` displace the
+    longest-remaining decoding lane when the queue head owes much less
+    work: the lane's (h, c) is snapshotted to host FP8 (the prefix cache's
+    format and error bound), the victim requeued, and the snapshot
+    restored on re-admission.
+
     Concurrency contract: the engine is **not thread-safe** — ``submit``
-    / ``enqueue`` / ``step_once`` / ``run`` must be serialized by the
-    caller (the Router calls them from its pump; AsyncRouter serializes
-    pumps under its lock). ``step_once`` blocks the calling thread on one
-    jitted device step; everything else is host-side bookkeeping. Load
-    introspection (``free_lanes`` / ``load`` / ``has_work``) reads plain
-    host state and is safe to call between steps.
+    / ``enqueue`` / ``step_once`` / ``run`` / ``cancel`` must be
+    serialized by the caller (the Router calls them from its pump;
+    AsyncRouter serializes pumps under its lock). ``step_once`` blocks the
+    calling thread on one jitted device step; everything else is host-side
+    bookkeeping. Load introspection (``free_lanes`` / ``load`` /
+    ``has_work``) reads plain host state and is safe to call between
+    steps.
     """
 
     def __init__(
@@ -94,9 +104,15 @@ class ServeEngine:
         cache_len: int | None = None,
         greedy: bool = True,
         prefix_cache=None,
+        preempt: bool = False,
+        preempt_margin: int = 8,
+        preempt_max: int = 2,
+        admit_pace: int | None = None,
     ):
         if chunk < 1:
             raise ValueError("chunk must be >= 1")
+        if admit_pace is not None and admit_pace < 1:
+            raise ValueError("admit_pace must be >= 1 (or None to disable)")
         del greedy  # argmax decoding only, for now
         self.model = model
         self.policy = policy
@@ -154,6 +170,23 @@ class ServeEngine:
                 "state pool — an LSTM-family model with lengths support"
             )
         self.prefix_cache = prefix_cache
+        # Lane preemption: snapshot a decoding lane's (h, c) to host FP8
+        # (StatePool.snapshot_fp8 — the prefix cache's storage format and
+        # error bound), requeue the request, hand the lane to shorter
+        # queued work, and restore the snapshot when the request is
+        # re-admitted. Same lane-major requirement as injection.
+        if preempt and not self._rearmable:
+            raise ValueError(
+                "preempt=True requires a per-lane resettable (lane-major) "
+                "state pool — an LSTM-family model with lengths support"
+            )
+        self.preempt = preempt
+        self.preempt_margin = preempt_margin
+        self.preempt_max = preempt_max
+        self.admit_pace = admit_pace
+        # rid -> (fp8 snapshot, dtypes, next_token, pos) for requests
+        # preempted off a lane and waiting in the scheduler to resume
+        self._preempted: dict[int, tuple] = {}
         self._lanes: list[Lane | None] = [None] * lanes
         self._lane_used = [False] * lanes
         self._reset = np.zeros((lanes,), np.int32)
@@ -238,12 +271,17 @@ class ServeEngine:
 
     # -- lane lifecycle --------------------------------------------------
     def _arm_free_lanes(self) -> None:
-        now = time.monotonic()
+        armed = 0
         for i in range(self.lanes_n):
             # `while`, not `if`: a full prefix-cache hit with max_new == 1
             # retires at admission time without consuming a device step, so
             # the same slot can drain several queued requests in a row.
             while self._lanes[i] is None and self.scheduler:
+                if self.admit_pace is not None and armed >= self.admit_pace:
+                    # pacing: spread admissions over steps so a warm burst
+                    # (cheap full hits arriving faster than lanes drain)
+                    # cannot monopolize every freed lane in one round
+                    return
                 if self._lane_used[i] and not self._rearmable:
                     raise RuntimeError(
                         "cannot re-arm a used lane: this model's cache has "
@@ -252,10 +290,34 @@ class ServeEngine:
                         "engine (or use an LSTM-family model)"
                     )
                 req = self.scheduler.pop()
-                req.t_admit = now  # queue wait ends; prefill phase begins
+                armed += 1
+                # stamped per admission, not once per call: a slow cache
+                # lookup for lane j would otherwise be billed to the queue
+                # phase of every lane armed after it
+                now = time.monotonic()
+                if req.t_admit is None:
+                    req.t_admit = now  # queue wait ends; prefill begins
                 lane = Lane(req)
                 self._lanes[i] = lane
                 self._lane_used[i] = True
+                stash = self._preempted.pop(req.rid, None)
+                if stash is not None:
+                    # resuming a preempted decode: restore the FP8 snapshot
+                    # instead of reset-and-prefill; the request keeps its
+                    # original t_admit/t_first so the preempted wait shows
+                    # up in the decode phase it actually delayed
+                    snap, dtypes, next_token, pos = stash
+                    self.pool.inject_fp8(i, snap, dtypes)
+                    self._reset[i] = 0
+                    lane.pos = pos
+                    lane.next_token = next_token
+                    self.metrics.resumes += 1
+                    if TRACER.enabled:
+                        TRACER.instant(
+                            "engine.resume", cat="engine", rid=req.rid,
+                            lane=i, decoded=len(req.out),
+                        )
+                    break
                 hit = None
                 if self.prefix_cache is not None:
                     with TRACER.span("cache.lookup", cat="cache", rid=req.rid):
@@ -300,16 +362,24 @@ class ServeEngine:
                         continue
                 break
 
-    def _retire(self, i: int) -> None:
+    def _retire(self, i: int, status: str = "done", reason: str | None = None) -> None:
+        """Unbind lane ``i`` terminally. ``status="done"`` is the normal
+        completion path; ``status="cancelled"`` is the same bookkeeping
+        with cancel-side accounting — one retire path keeps the
+        metrics/tracer/prefix-cache invariants identical either way."""
         lane = self._lanes[i]
         req = lane.req
         now = time.monotonic()
         req.t_done = now  # decode phase ends; req.phases() is now total
-        if self.prefix_cache is not None and len(req.out) >= 2:
+        req.status = status
+        if status != "done":
+            req.cancel_reason = reason
+        if self.prefix_cache is not None and len(req.out) >= 2 and not lane.prefilling:
             # The lane's final state summarizes prompt + out[:-1] (the last
             # generated token was emitted but never fed back); out[-1] is
             # its exact greedy continuation. Serves resubmissions that
-            # extend this conversation.
+            # extend this conversation — and salvages the prefill a
+            # cancelled request already paid for.
             key = np.concatenate(
                 [req.prompt, np.asarray(req.out[:-1], np.int32)]
             )
@@ -318,18 +388,107 @@ class ServeEngine:
                     self.prefix_cache.insert(
                         key, self.pool.extract(i), next_token=req.out[-1]
                     )
-        self.metrics.on_retire(req, now)
+        if status == "done":
+            self.metrics.on_retire(req, now)
+        else:
+            self.metrics.on_cancel(req, reason or "cancelled")
+            # fold the lane release into the existing reset mask: the next
+            # jitted step zeroes the dead state as part of work it was
+            # doing anyway — cancellation costs zero extra device steps
+            self._reset[i] = 1
+        if TRACER.enabled:
+            if status == "done":
+                TRACER.instant(
+                    "engine.retire", cat="engine", rid=req.rid, lane=i,
+                    new_tokens=len(req.out),
+                )
+            else:
+                TRACER.instant(
+                    "engine.cancel", cat="engine", rid=req.rid, lane=i,
+                    new_tokens=len(req.out), reason=reason or "cancelled",
+                )
+        self._lanes[i] = None
+
+    # -- cancellation ----------------------------------------------------
+    def cancel(self, rid: int, reason: str = "cancelled") -> bool:
+        """Terminally remove a request wherever it currently lives: still
+        queued → scheduler removal; bound to a lane → masked lane release
+        (the free rides the reset mask of the next step, costing zero
+        extra device work). Idempotent: unknown / already-finished rids
+        return False. Host-side only — safe between steps under the same
+        serialization contract as ``step_once``."""
+        req = self.scheduler.remove(rid)
+        if req is not None:
+            self._preempted.pop(rid, None)  # preempted-and-requeued state
+            req.status = "cancelled"
+            req.cancel_reason = reason
+            req.t_done = time.monotonic()
+            self.metrics.on_cancel(req, reason)
+            if TRACER.enabled:
+                TRACER.instant(
+                    "engine.cancel", cat="engine", rid=rid,
+                    new_tokens=len(req.out), reason=reason,
+                )
+            return True
+        for i, lane in enumerate(self._lanes):
+            if lane is not None and lane.req.rid == rid:
+                self._retire(i, status="cancelled", reason=reason)
+                return True
+        return False
+
+    # -- preemption ------------------------------------------------------
+    def _maybe_preempt(self) -> None:
+        """If every lane is busy and the queue head owes far less work
+        than some decoding lane, snapshot that lane to host FP8 and hand
+        it over (SJF with bounded regret: the victim resumes later from
+        the snapshot). Only decoding lanes with at least one emitted token
+        are candidates — their TTFT is already banked, so preemption can
+        only improve the first-token tail, never worsen it."""
+        if not self.preempt or self.free_lanes > 0 or not self.scheduler:
+            return
+        cand = self.scheduler.peek()
+        if cand is None:
+            return
+        if cand.work_hint is None and self.prefix_cache is not None:
+            # the router stamps work_hint at submission; engine-direct
+            # submissions get the same probe here (non-mutating)
+            cand.work_hint = self.prefix_cache.match_len(cand.prompt)
+        cand_work = cand.remaining_work()
+        victim, victim_rem = None, -1
+        for i, lane in enumerate(self._lanes):
+            if lane is None or lane.prefilling or not lane.req.out:
+                continue
+            if lane.req.preempt_count >= self.preempt_max:
+                continue  # bounded thrash: a request is displaced at most preempt_max times
+            rem = lane.req.max_new - len(lane.req.out)
+            if rem > victim_rem:
+                victim, victim_rem = i, rem
+        if victim is None or victim_rem < cand_work + self.preempt_margin:
+            return
+        self._preempt_lane(victim)
+
+    def _preempt_lane(self, i: int) -> None:
+        lane = self._lanes[i]
+        req = lane.req
+        snap, dtypes = self.pool.snapshot_fp8(i)
+        self._preempted[req.rid] = (snap, dtypes, lane.next_token, lane.pos)
+        req.preempt_count += 1
+        self.metrics.preemptions += 1
         if TRACER.enabled:
             TRACER.instant(
-                "engine.retire", cat="engine", rid=req.rid, lane=i,
-                new_tokens=len(req.out),
+                "engine.preempt", cat="engine", rid=req.rid, lane=i,
+                decoded=len(req.out),
+                remaining=req.max_new - len(req.out),
             )
         self._lanes[i] = None
+        self._reset[i] = 1  # freed state is wiped by the next step's mask
+        self.scheduler.submit(req)  # t_submit preserved; resumes via stash
 
     # -- the batched step ------------------------------------------------
     def step_once(self) -> bool:
         """Advance every active lane one scheduling quantum. Returns False
         when there is nothing left to do."""
+        self._maybe_preempt()
         self._arm_free_lanes()
         active = [i for i, l in enumerate(self._lanes) if l is not None]
         if not active:

@@ -168,6 +168,27 @@ class PrefixCache:
             next_token=entry.next_token if full else None,
         )
 
+    def match_len(self, tokens) -> int:
+        """Length of the prefix a ``lookup`` on these tokens would inject,
+        with NO side effects: no hit/miss counters, no LRU refresh, no
+        dequantization. This is the scheduler's remaining-work probe — the
+        router calls it once per admission to stamp ``Request.work_hint``,
+        and a probe that warmed the LRU would let queue *inspection*
+        distort the eviction order that actual traffic earned."""
+        toks = [int(t) for t in np.asarray(tokens).reshape(-1)]
+        node = self._root
+        best = 0
+        depth = 0
+        for t in toks:
+            node = node.children.get(t)
+            if node is None:
+                break
+            depth += 1
+            e = node.entry
+            if e is not None and (depth < len(toks) or e.next_token is not None):
+                best = depth
+        return best
+
     # -- insertion policy ------------------------------------------------
     def wants_snapshot(self, tokens, pos: int) -> bool:
         """Should the engine bother extracting a mid-prefill snapshot at

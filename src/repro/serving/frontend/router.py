@@ -24,6 +24,12 @@ Lifecycle of a submission:
         ▼
   ticket.status == "done"  (tokens in ticket.tokens)
 
+Cancellation: ``cancel(rid)`` (or an abandoned stream / a deadline that
+expires mid-flight, both detected at the top of ``pump()``) removes the
+request wherever it lives — router queue, engine queue, or a bound lane
+(``ServeEngine.cancel`` folds the lane release into the step's reset
+mask) — and flips the ticket to "cancelled" with a reason.
+
 ``Router.pump()`` is non-blocking-style single-stepping (drive it from any
 event loop); ``drain()`` runs to completion; ``AsyncRouter`` wraps the
 pump in asyncio for genuinely concurrent ``await generate(...)`` /
@@ -64,8 +70,8 @@ class Ticket:
 
     rid: int
     tenant: str
-    status: str  # "queued" | "running" | "done" | "rejected"
-    reason: Optional[str] = None  # set iff rejected
+    status: str  # "queued" | "running" | "done" | "rejected" | "cancelled"
+    reason: Optional[str] = None  # set iff rejected or cancelled
     req: Optional[Request] = None
     on_token: Optional[Callable[[int], None]] = None
     sent: int = 0  # tokens already delivered to on_token
@@ -123,6 +129,10 @@ class Router:
         self._rid = 0
         self.tenants: dict[str, dict] = {}  # per-tenant accounting
         self.rejections: dict[str, int] = {}
+        # post-admission terminations by reason:
+        # "client_cancel" (explicit cancel/DELETE), "abandoned"
+        # (streaming consumer disconnected), "deadline_expired" (mid-flight)
+        self.cancellations: dict[str, int] = {}
         for e in self.engines:
             if e.metrics.t_start is None:
                 e.metrics.start()
@@ -206,6 +216,11 @@ class Router:
         except (ValueError, TypeError):
             return self._reject(ticket, "bad_request")
         ticket.req = req
+        if self.prefix_cache is not None:
+            # what the "sjf_work" policy sorts on: the cached prefix makes
+            # remaining work knowable at admission time. Non-mutating probe
+            # — queue inspection must not warm the cache LRU.
+            req.work_hint = self.prefix_cache.match_len(req.prompt)
         self._queue.submit(req)
         self._queued_by_tenant[tenant] = self._queued_by_tenant.get(tenant, 0) + 1
         self._inflight[rid] = ticket
@@ -270,9 +285,69 @@ class Router:
                     ),
                 )
 
+    # -- cancellation ----------------------------------------------------
+    def cancel(self, rid: int, reason: str = "client_cancel") -> bool:
+        """Terminally cancel an admitted request: queued at the router →
+        scheduler removal; dispatched → ``ServeEngine.cancel`` (scheduler
+        removal or masked lane release). Idempotent — unknown, finished,
+        or rejected rids return False. The ticket flips to "cancelled"
+        with the reason, and whatever tokens were already generated stay
+        readable on it."""
+        ticket = self._tickets.get(rid)
+        if ticket is None or ticket.status in ("done", "rejected", "cancelled"):
+            return False
+        if ticket.status == "queued":
+            req = self._queue.remove(rid)
+            if req is None:
+                return False  # submit raced a pump; next pump settles it
+            self._queued_by_tenant[req.tenant] -= 1
+            req.status = "cancelled"
+            req.cancel_reason = reason
+        elif not any(e.cancel(rid, reason=reason) for e in self.engines):
+            return False  # retired this very pump round; ticket flips in _deliver
+        ticket.status = "cancelled"
+        ticket.reason = reason
+        ticket.t_done = time.monotonic()
+        ticket.on_token = None  # no more deliveries to a dead consumer
+        acct = self._tenant(ticket.tenant)
+        acct["cancelled"] = acct.get("cancelled", 0) + 1
+        self.cancellations[reason] = self.cancellations.get(reason, 0) + 1
+        self._inflight.pop(rid, None)
+        self._tickets.pop(rid, None)  # caller holds the Ticket
+        if TRACER.enabled:
+            TRACER.instant(
+                "router.cancel", cat="router", rid=rid, reason=reason,
+            )
+        return True
+
+    def _cancel_stale(self) -> None:
+        """Cancel in-flight work nobody can use anymore: abandoned tickets
+        (the streaming consumer disconnected — before this existed they
+        decoded to ``max_new`` on a lane nobody was reading) and running
+        requests whose deadline expired after lane binding (deadlines were
+        previously only enforced at submit and dispatch). Queued tickets
+        with expired deadlines keep the established reject path in
+        ``_dispatch``/``_purge_expired``."""
+        now = time.monotonic()
+        for ticket in list(self._inflight.values()):
+            if ticket.abandoned:
+                self.cancel(ticket.rid, reason="abandoned")
+            elif (
+                self.drop_expired
+                and ticket.status == "running"
+                and ticket.req is not None
+                and ticket.req.deadline is not None
+                and now > ticket.req.deadline
+            ):
+                self.cancel(ticket.rid, reason="deadline_expired")
+
     def _deliver(self) -> None:
         for ticket in list(self._inflight.values()):
             req = ticket.req
+            if ticket.abandoned:
+                # consumer is gone: feeding its queue would grow it
+                # unbounded (the ticket itself is cancelled next pump)
+                ticket.on_token = None
             if len(req.out) > ticket.sent:
                 if ticket.on_token is not None:
                     for tok in req.out[ticket.sent :]:
@@ -295,6 +370,7 @@ class Router:
         replica one batched step, deliver new tokens. Returns True while
         there is anything left to do."""
         with TRACER.span("router.pump", cat="router"):
+            self._cancel_stale()
             self._dispatch()
             progressed = False
             for e in self.engines:
@@ -336,6 +412,7 @@ class Router:
             "inflight": len(self._inflight),
             "tenants": len(self.tenants),
             "rejections": dict(self.rejections),
+            "cancellations": dict(self.cancellations),
         }
 
     def report(self) -> dict:
@@ -348,8 +425,10 @@ class Router:
                 "requests", "steps", "prefill_steps", "decode_steps",
                 "emitted_tokens", "prompt_tokens", "cache_lookups",
                 "cache_hits", "cache_full_hits", "prefill_tokens_saved",
+                "cancelled", "preemptions", "resumes",
             )
         }
+        summed["cancellations"] = dict(self.cancellations)
         summed["cache_hit_rate"] = (
             summed["cache_hits"] / summed["cache_lookups"]
             if summed["cache_lookups"]
@@ -421,12 +500,21 @@ class AsyncRouter:
         # it. Early consumers set ticket.abandoned instead, bounding the
         # wait at one pump (one batched engine step), after which the loop
         # exits between pumps.
-        while ticket.status not in ("done", "rejected") and not ticket.abandoned:
+        terminal = ("done", "rejected", "cancelled")
+        while ticket.status not in terminal and not ticket.abandoned:
             async with self._lock:
-                if ticket.status in ("done", "rejected") or ticket.abandoned:
+                if ticket.status in terminal or ticket.abandoned:
                     break
                 await self._pump_once()
         return ticket
+
+    async def cancel(self, rid: int, reason: str = "client_cancel") -> bool:
+        """Cancel an in-flight request by rid (the DELETE endpoint's
+        backend). Serialized with pumps under the router lock, so the lane
+        is released between batched steps — within one step of the
+        request's next scheduling round."""
+        async with self._lock:
+            return self.router.cancel(rid, reason=reason)
 
     async def snapshot(self, fn):
         """Run ``fn(router)`` under the pump lock and return its result —
@@ -505,10 +593,9 @@ class AsyncRouter:
 
         If the consumer exits early (break / connection drop), the ticket
         is marked abandoned: this coroutine stops driving it within one
-        pump, and the request finishes only if other activity keeps the
-        router pumping (``join()`` during drain does). Cancelling the
-        request *inside the engine* (freeing its lane mid-generation) is a
-        ROADMAP item.
+        pump, and the next pump from any source cancels it inside the
+        engine (``_cancel_stale`` → ``ServeEngine.cancel``), freeing its
+        lane instead of decoding to ``max_new`` for nobody.
         """
         ticket, toks = await self.open_stream(prompt, **kw)
         if toks is None:

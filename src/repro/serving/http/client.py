@@ -183,14 +183,17 @@ class Client:
         deadline_ms: Optional[float] = None,
         debug: bool = False,
     ) -> AsyncIterator[Tuple[str, dict]]:
-        """Async iterator of SSE frames as ``(event, data)`` pairs:
-        ``("message", {"index": i, "token": t})`` per token, then one
-        ``("done", {...summary})``. ``debug=True`` adds the ``phases``
+        """Async iterator of SSE frames as ``(event, data)`` pairs: one
+        ``("start", {"rid": ...})`` (the id to DELETE for a mid-stream
+        ``cancel``), ``("message", {"index": i, "token": t})`` per token,
+        then one ``("done", {...summary})`` — with ``"status":
+        "cancelled"`` and the partial token count if the request was
+        cancelled mid-stream. ``debug=True`` adds the ``phases``
         breakdown to the ``done`` payload. Raises HttpError on rejection
         — either pre-admission (the server answers with the mapped status
         instead of a stream) or post-admission (a terminal ``error``
         event carrying the mapped status, e.g. a deadline that expired
-        while queued)."""
+        while queued or mid-flight)."""
         body: dict = {"prompt": [int(t) for t in prompt]}
         if max_new is not None:
             body["max_new"] = max_new
@@ -238,6 +241,11 @@ class Client:
                 await writer.wait_closed()
             except (ConnectionError, OSError):
                 pass
+
+    async def cancel(self, rid: int) -> dict:
+        """DELETE /v1/requests/{rid}. Returns ``{"cancelled": true}`` on
+        success; raises HttpError(404) for unknown/finished rids."""
+        return await self._json("DELETE", f"/v1/requests/{int(rid)}")
 
     async def healthz(self) -> dict:
         status, _, data = await self.request("GET", "/healthz")

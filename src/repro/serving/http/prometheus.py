@@ -111,6 +111,21 @@ def render_metrics(
     for reason, n in sorted(stats["rejections"].items()):
         w.sample("repro_rejections_total", n, {"reason": reason})
 
+    # -- cancellation / preemption --------------------------------------
+    w.metric("repro_cancelled_total", "counter",
+             "Post-admission cancellations by reason (client_cancel | "
+             "abandoned | deadline_expired) — each one released its lane "
+             "or queue slot instead of decoding to max_new.")
+    for reason, n in sorted(stats.get("cancellations", {}).items()):
+        w.sample("repro_cancelled_total", n, {"reason": reason})
+    w.metric("repro_preemptions_total", "counter",
+             "Decoding lanes snapshotted to host FP8 and requeued so "
+             "shorter queued work could run first.")
+    w.sample("repro_preemptions_total", report.get("preemptions", 0))
+    w.metric("repro_resumes_total", "counter",
+             "Preempted requests restored onto a lane from their FP8 snapshot.")
+    w.sample("repro_resumes_total", report.get("resumes", 0))
+
     # -- prefix cache ----------------------------------------------------
     w.metric("repro_cache_lookups_total", "counter", "Prefix-cache admission lookups.")
     w.sample("repro_cache_lookups_total", report["cache_lookups"])

@@ -8,8 +8,14 @@ protocol module in this package).
 Endpoints:
 
 * ``POST /v1/generate`` — JSON in/out, blocks until the request retires.
-* ``POST /v1/stream``   — Server-Sent Events, one frame per token plus a
-  terminal ``done`` event (see serving/README.md for the wire format).
+* ``POST /v1/stream``   — Server-Sent Events: a ``start`` event carrying
+  the request id (so a client can cancel mid-stream), one frame per
+  token, then a terminal ``done`` event (see serving/README.md for the
+  wire format). Disconnecting mid-stream cancels the request inside the
+  engine within one pump — the lane is freed, not decoded to ``max_new``.
+* ``DELETE /v1/requests/{rid}`` — explicit cancellation of an in-flight
+  request by id (200 with ``{"cancelled": true}``, or 404 if the rid is
+  unknown or already finished).
 * ``GET  /healthz``     — liveness + capacity snapshot (``Router.stats()``).
 * ``GET  /metrics``     — Prometheus text exposition (engine counters,
   prefix-cache hit/saved counters, per-tenant percentiles).
@@ -261,6 +267,16 @@ class HttpServer:
         if route == ("GET", "/admin/trace"):
             writer.write(self._trace())
             return False
+        if req.path.startswith("/v1/requests/"):
+            if req.method != "DELETE":
+                writer.write(
+                    json_response(
+                        405, {"error": "method_not_allowed", "path": req.path}
+                    )
+                )
+                return False
+            writer.write(await self._cancel(req))
+            return False
         known = {"/v1/generate", "/v1/stream", "/healthz", "/metrics",
                  "/admin/drain", "/admin/trace"}
         if req.path in known:
@@ -305,6 +321,21 @@ class HttpServer:
         )
 
     # -- endpoint handlers -----------------------------------------------
+    async def _cancel(self, req: HttpRequest) -> bytes:
+        """DELETE /v1/requests/{rid}: explicit engine-level cancellation.
+        The rid comes from the generate/stream response (``rid`` field /
+        the SSE ``start`` event)."""
+        suffix = req.path[len("/v1/requests/"):]
+        try:
+            rid = int(suffix)
+        except ValueError:
+            raise ProtocolError(400, f"request id must be an integer, got {suffix!r}")
+        cancelled = await self.aroute.cancel(rid)
+        if not cancelled:
+            # unknown, finished, or already cancelled: nothing to release
+            return json_response(404, {"error": "unknown_request", "rid": rid})
+        return json_response(200, {"rid": rid, "cancelled": True})
+
     async def _generate(self, req: HttpRequest) -> bytes:
         self._admitting += 1  # before the draining check: see _do_drain
         try:
@@ -320,14 +351,26 @@ class HttpServer:
         if not ticket.ok:
             return _reject_response(ticket.reason)
         r = ticket.req
+        if ticket.status == "cancelled" and ticket.reason == "deadline_expired":
+            # the deadline expired after lane binding: same contract as a
+            # queue-time expiry — the client asked for a budget we missed
+            return _reject_response("deadline_expired")
         payload = {
             "rid": ticket.rid,
             "tenant": ticket.tenant,
             "tokens": ticket.tokens,
             "n_tokens": len(ticket.tokens),
-            "ttft_ms": (r.t_first - r.t_submit) * 1e3,
+            # a request cancelled before its first token has no TTFT
+            "ttft_ms": (
+                (r.t_first - r.t_submit) * 1e3 if r.t_first is not None else None
+            ),
             "latency_ms": (ticket.t_done - r.t_submit) * 1e3,
         }
+        if ticket.status == "cancelled":
+            # explicit cancel mid-generate: 200 with the partial tokens —
+            # the caller (or another connection) asked for this outcome
+            payload["status"] = "cancelled"
+            payload["reason"] = ticket.reason
         if debug:
             payload["phases"] = r.phases()
         return json_response(200, payload)
@@ -353,6 +396,12 @@ class HttpServer:
             writer.write(_reject_response(ticket.reason))
             return False
         writer.write(sse_preamble())
+        # rid first: a streaming client can only DELETE /v1/requests/{rid}
+        # mid-stream if it learns the rid before the tokens start
+        writer.write(
+            sse_event({"rid": ticket.rid, "tenant": ticket.tenant}, event="start")
+        )
+        await writer.drain()
         index = 0
         try:
             async for tok in toks:
@@ -374,14 +423,36 @@ class HttpServer:
                 )
                 await writer.drain()
                 return True
+            if ticket.status == "cancelled" and ticket.reason == "deadline_expired":
+                # mid-flight deadline: surface the same 504 contract the
+                # queue-time expiry uses, as a terminal error event
+                writer.write(
+                    sse_event(
+                        {
+                            "error": "deadline_expired",
+                            "status": REASON_STATUS["deadline_expired"],
+                            "n_tokens": len(ticket.tokens),
+                        },
+                        event="error",
+                    )
+                )
+                await writer.drain()
+                return True
             r = ticket.req
             done_payload = {
                 "rid": ticket.rid,
                 "tenant": ticket.tenant,
                 "n_tokens": len(ticket.tokens),
-                "ttft_ms": (r.t_first - r.t_submit) * 1e3,
+                "ttft_ms": (
+                    (r.t_first - r.t_submit) * 1e3 if r.t_first is not None else None
+                ),
                 "latency_ms": (ticket.t_done - r.t_submit) * 1e3,
             }
+            if ticket.status == "cancelled":
+                # explicit DELETE while streaming: terminal done frame with
+                # the partial count — the consumer asked for this outcome
+                done_payload["status"] = "cancelled"
+                done_payload["reason"] = ticket.reason
             if debug:
                 done_payload["phases"] = r.phases()
             writer.write(sse_event(done_payload, event="done"))

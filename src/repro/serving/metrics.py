@@ -124,6 +124,10 @@ class ServeMetrics:
     cache_full_hits: int = 0  # ... that skipped prefill entirely
     prefill_tokens_saved: int = 0  # prompt tokens not consumed due to hits
     retired: int = 0  # total retired requests (records is only a window)
+    cancelled: int = 0  # requests cancelled before completing
+    cancelled_by_reason: dict = dataclasses.field(default_factory=dict)
+    preemptions: int = 0  # lanes snapshotted + requeued for shorter work
+    resumes: int = 0  # preempted requests restored onto a lane
     records: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=RECORD_WINDOW)
     )
@@ -179,6 +183,18 @@ class ServeMetrics:
             )
         )
 
+    def on_cancel(self, req, reason: str) -> None:
+        """A request left the engine without completing (client cancel,
+        abandoned stream, mid-flight deadline). Counted separately from
+        ``retired`` and kept OUT of the latency record window: a cancelled
+        request has no honest TTFT/latency sample, and an abandoned one
+        would otherwise poison the percentiles with its wall-clock age."""
+        del req  # counters only; per-request data stays with the caller
+        self.cancelled += 1
+        self.cancelled_by_reason[reason] = (
+            self.cancelled_by_reason.get(reason, 0) + 1
+        )
+
     def on_cache_lookup(self, hit: bool, full: bool, saved: int) -> None:
         self.cache_lookups += 1
         if hit:
@@ -209,6 +225,10 @@ class ServeMetrics:
         lats = np.array([r.latency for r in self.records])
         return {
             "requests": self.retired,
+            "cancelled": self.cancelled,
+            "cancelled_by_reason": dict(self.cancelled_by_reason),
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
             "steps": self.steps,
             "prefill_steps": self.prefill_steps,
             "decode_steps": self.decode_steps,

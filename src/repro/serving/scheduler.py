@@ -12,7 +12,15 @@ Admission policies:
     long prompts can starve under sustained load);
   * ``edf``  — earliest-deadline-first (deadline-aware admission for the
     multi-tenant frontend; requests without a deadline sort last, ties
-    break on arrival order).
+    break on arrival order);
+  * ``sjf_work`` — shortest-*remaining-work*-first: sorts on the estimated
+    device-token cost still ahead of the request, counting prompt tokens a
+    prefix-cache hit would skip (``work_hint``, stamped by the router at
+    submission) and prompt/output tokens already consumed (a preempted
+    request re-entering the queue owes only its remaining decode). This is
+    the scheduler-v2 policy for the warm-cache tail: a warm full hit costs
+    ~``max_new`` tokens while a cold long prompt costs ``prompt + max_new``,
+    and FIFO makes the cheap request wait behind the expensive one.
 """
 from __future__ import annotations
 
@@ -33,7 +41,7 @@ __all__ = [
     "zipf_prefix_prompts",
 ]
 
-ADMISSION_POLICIES = ("fifo", "sjf", "edf")
+ADMISSION_POLICIES = ("fifo", "sjf", "edf", "sjf_work")
 
 
 def synthetic_prompts(n, vocab, rng, lo=4, hi=24):
@@ -118,6 +126,10 @@ class Request:
     cache_hit: bool = False  # prefix-cache hit at admission
     cache_saved_tokens: int = 0  # prompt tokens skipped via state injection
     cache_saved_steps: int = 0  # ... as whole prefill steps at engine chunk
+    status: str = "active"  # "active" | "done" | "cancelled"
+    cancel_reason: Optional[str] = None  # set iff status == "cancelled"
+    work_hint: Optional[int] = None  # prefix-cache match length, if probed
+    preempt_count: int = 0  # times this request was preempted off a lane
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -133,6 +145,22 @@ class Request:
     @property
     def done(self) -> bool:
         return len(self.out) >= self.max_new
+
+    @property
+    def cancelled(self) -> bool:
+        return self.status == "cancelled"
+
+    def remaining_work(self) -> int:
+        """Estimated device-token cost still ahead: unconsumed prompt
+        tokens (minus the cached prefix the router probed into
+        ``work_hint``) plus undecoded output tokens. Once decoding has
+        started the prompt is fully paid for, so a preempted request owes
+        only its remaining decode."""
+        remaining_out = max(self.max_new - len(self.out), 0)
+        if self.out:
+            return remaining_out
+        cached = self.work_hint if self.work_hint is not None else 0
+        return max(self.prompt_len - cached, 0) + remaining_out
 
     def phases(self) -> Optional[dict]:
         """Per-request latency breakdown in milliseconds, or None until the
@@ -158,6 +186,8 @@ class Request:
     def sort_key(self, policy: str) -> float:
         if policy == "sjf":
             return float(self.prompt_len)
+        if policy == "sjf_work":
+            return float(self.remaining_work())
         # edf: missing deadline == infinitely lax, served after all dated work
         return self.deadline if self.deadline is not None else float("inf")
 
@@ -195,6 +225,32 @@ class Scheduler:
             return self._fifo.popleft() if self._fifo else None
         if self._heap:
             return heapq.heappop(self._heap)[2]
+        return None
+
+    def peek(self) -> Request | None:
+        """Next request ``pop`` would return, without removing it — the
+        engine's preemption check compares its remaining work against the
+        lanes' without committing to an admission."""
+        if self.policy == "fifo":
+            return self._fifo[0] if self._fifo else None
+        return self._heap[0][2] if self._heap else None
+
+    def remove(self, rid: int) -> Request | None:
+        """Remove and return the queued request with this rid, or None.
+        O(queue) scan + (heap policies) re-heapify — cancellation is rare
+        relative to queue churn and queues are bounded small, so linear
+        cost beats maintaining a rid index on the hot submit/pop path."""
+        for idx, r in enumerate(self._fifo):
+            if r.rid == rid:
+                del self._fifo[idx]
+                return r
+        for idx, (_, _, r) in enumerate(self._heap):
+            if r.rid == rid:
+                last = self._heap.pop()
+                if idx < len(self._heap):
+                    self._heap[idx] = last
+                    heapq.heapify(self._heap)
+                return r
         return None
 
     def __len__(self) -> int:

@@ -15,6 +15,9 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from ..core import fp8
 
 __all__ = ["StatePool", "masked_reset"]
 
@@ -86,6 +89,29 @@ class StatePool:
             lambda c, s: c.at[lane].set(jnp.asarray(s).astype(c.dtype)),
             self.caches,
             snapshot,
+        )
+
+    def snapshot_fp8(self, lane: int, dtype=fp8.FP8_E4M3) -> tuple[Any, Any]:
+        """Host-side FP8 copy of lane `lane`'s state plus the original leaf
+        dtypes — the same storage format (and therefore the same saturating
+        2^-4 relative-rounding bound) the frontend prefix cache uses for
+        its entries. This is the engine's preemption snapshot: cheap to
+        hold on the host, restored with ``inject_fp8``."""
+        states = self.extract(lane)
+        snap = jax.tree_util.tree_map(
+            lambda x: np.asarray(fp8.cast_fp8(jnp.asarray(x), dtype)), states
+        )
+        dtypes = jax.tree_util.tree_map(lambda x: jnp.asarray(x).dtype, states)
+        return snap, dtypes
+
+    def inject_fp8(self, lane: int, snapshot: Any, dtypes: Any) -> None:
+        """Dequantize a ``snapshot_fp8`` pytree back to the pool dtypes and
+        overwrite lane `lane` (same no-masked-reset caveat as ``inject``)."""
+        self.inject(
+            lane,
+            jax.tree_util.tree_map(
+                lambda q, dt: jnp.asarray(q).astype(dt), snapshot, dtypes
+            ),
         )
 
     def swap(self, new_caches: Any) -> None:

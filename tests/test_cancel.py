@@ -1,0 +1,403 @@
+"""Cancellation and preemption matrix: engine-level cancel in every
+request state (queued / prefilling / decoding / already-done), lane reuse
+after a cancel with no state bleed, preempt→resume token agreement,
+router-level cancellation (explicit, abandoned stream, mid-flight
+deadline), drain with cancelled work in flight, and the HTTP DELETE
+endpoint with its metrics scrape-diff acceptance check (a cancel frees
+the lane without further decode steps)."""
+import asyncio
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import get_policy
+from repro.models.lstm_models import WikiText2LM
+from repro.serving import PrefixCache, Router, ServeEngine
+from repro.serving.frontend import AsyncRouter
+from repro.serving.http import Client, HttpError, HttpServer
+
+POLICY = get_policy("floatsd8_table6")
+
+
+def tiny_model():
+    return WikiText2LM(vocab=300, emb=32, hidden=32, n_layers=2)
+
+
+_PARAMS = {}
+
+
+def tiny_params(model, seed=0):
+    key = (model.vocab, model.emb, model.hidden, model.n_layers, seed)
+    if key not in _PARAMS:
+        _PARAMS[key] = model.init(jax.random.PRNGKey(seed))
+    return _PARAMS[key]
+
+
+_TRAINED = {}
+
+
+def trained_params(model):
+    """Briefly-pretrained params (see test_serving.py): decisive argmax
+    margins, so the FP8 snapshot/restore perturbation of preemption must
+    not flip any greedy choice."""
+    key = (model.vocab, model.emb, model.hidden, model.n_layers)
+    if key not in _TRAINED:
+        from repro.data import synthetic
+        from repro.optim import sgd
+        from repro.optim.train_state import init_state, make_train_step
+
+        data = synthetic.wikitext2(batch=32, seq=24, vocab=model.vocab)
+        opt = sgd(0.9)
+        state = init_state(model.init(jax.random.PRNGKey(0)), opt, POLICY)
+        step_fn = jax.jit(make_train_step(model.loss, opt, POLICY, lr=1.0))
+        for _ in range(30):
+            batch = {k: jnp.asarray(v) for k, v in next(data.batches).items()}
+            state, _ = step_fn(state, batch)
+        _TRAINED[key] = state.params
+    return _TRAINED[key]
+
+
+def make_engine(params=None, **kw):
+    model = tiny_model()
+    return ServeEngine(
+        model, params if params is not None else tiny_params(model),
+        POLICY, **kw,
+    )
+
+
+def prompt_of(length, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 300, length).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# engine-level cancel matrix
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_queued_unknown_and_done_are_idempotent():
+    eng = make_engine(lanes=1, chunk=4)
+    a = eng.submit(prompt_of(6, 1), max_new=3)
+    b = eng.submit(prompt_of(6, 2), max_new=3)
+
+    # b still queued: scheduler removal, no lane or device work involved
+    assert eng.cancel(b.rid) is True
+    assert b.status == "cancelled" and b.cancel_reason == "cancelled"
+    assert eng.cancel(b.rid) is False  # second cancel is a no-op
+    assert eng.cancel(12345) is False  # unknown rid
+
+    m = eng.run()
+    assert a.status == "done" and len(a.out) == 3
+    assert eng.cancel(a.rid) is False  # already retired
+    assert m.cancelled == 1 and m.cancelled_by_reason == {"cancelled": 1}
+    assert m.retired == 1  # cancelled requests are not "retired" work
+
+
+def test_cancel_mid_decode_frees_lane_with_zero_extra_steps():
+    """The acceptance invariant: cancelling a decoding request releases
+    its lane immediately (host-side) and the engine does NOT spend a
+    single further device step on it — run() after the cancel has nothing
+    to do."""
+    eng = make_engine(lanes=1, chunk=4)
+    a = eng.submit(prompt_of(6, 3), max_new=64)
+    while len(a.out) < 3:
+        assert eng.step_once()
+    steps0 = eng.metrics.steps
+
+    assert eng.cancel(a.rid) is True
+    assert eng.free_lanes == 1  # lane released before any next step
+    eng.run()  # nothing left: must not step at all
+    assert eng.metrics.steps == steps0
+    assert a.status == "cancelled" and 3 <= len(a.out) < 64
+
+
+def test_cancel_mid_prefill_releases_lane_without_cache_insert():
+    """A lane cancelled while still consuming its prompt has produced no
+    tokens; the retire path must free it without salvaging a bogus cache
+    entry (the final-state insert requires >= 2 emitted tokens and a
+    finished prefill)."""
+    cache = PrefixCache(block=4)
+    eng = make_engine(lanes=1, chunk=4, prefix_cache=cache)
+    a = eng.submit(prompt_of(24, 4), max_new=8)
+    assert eng.step_once()  # 4 of 24 prompt tokens consumed: prefilling
+    assert a.out == []
+
+    inserts_before = cache.stats()["entries"]
+    assert eng.cancel(a.rid) is True
+    assert eng.free_lanes == 1 and a.status == "cancelled"
+    # block-boundary snapshots taken DURING prefill are legitimate; the
+    # cancel itself must not have added a terminal entry keyed by
+    # prompt+out (out is empty)
+    assert cache.stats()["entries"] == inserts_before
+
+
+def test_cancel_after_full_cache_hit_retire_returns_false():
+    """A full-hit admission with max_new=1 retires at admission time with
+    zero device steps; a cancel arriving after that finds nothing."""
+    cache = PrefixCache(block=4)
+    warm = make_engine(lanes=1, chunk=4, prefix_cache=cache)
+    p = prompt_of(8, 5)
+    warm.submit(p, max_new=4)
+    warm.run()  # stores state-after-prompt + its greedy continuation
+
+    eng = make_engine(lanes=1, chunk=4, prefix_cache=cache)
+    r = eng.submit(p, max_new=1)
+    assert eng.step_once() is False  # retired at admission, nothing ran
+    assert r.status == "done" and len(r.out) == 1
+    assert eng.cancel(r.rid) is False
+
+
+@pytest.mark.slow
+def test_lane_reuse_after_cancel_has_no_state_bleed():
+    """Cancel A mid-decode on a single-lane engine, then serve C on the
+    reused lane: C's tokens must be identical to a fresh engine serving
+    only C — the masked reset really wipes A's recurrent state."""
+    model = tiny_model()
+    params = trained_params(model)
+    pC = prompt_of(10, 7)
+
+    eng = ServeEngine(model, params, POLICY, lanes=1, chunk=4)
+    a = eng.submit(prompt_of(12, 6), max_new=48)
+    while len(a.out) < 4:
+        eng.step_once()
+    assert eng.cancel(a.rid) is True
+    c = eng.submit(pC, max_new=16)
+    eng.run()
+
+    ref_eng = ServeEngine(model, params, POLICY, lanes=1, chunk=4)
+    ref = ref_eng.submit(pC, max_new=16)
+    ref_eng.run()
+
+    assert c.status == "done" and c.out == ref.out and len(c.out) == 16
+
+
+# ---------------------------------------------------------------------------
+# preemption
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_preempt_resume_token_agreement_and_bounded_displacement():
+    """A long decode is preempted for a short arrival (sjf_work), resumed
+    from its FP8 snapshot, and still produces EXACTLY the tokens of an
+    undisturbed run — the snapshot round-trip must not flip any greedy
+    argmax. Displacement is bounded by preempt_max."""
+    model = tiny_model()
+    params = trained_params(model)
+    pL, pS = prompt_of(8, 8), prompt_of(4, 9)
+
+    eng = ServeEngine(
+        model, params, POLICY, lanes=1, chunk=4,
+        admission="sjf_work", preempt=True, preempt_margin=2, preempt_max=2,
+    )
+    long = eng.submit(pL, max_new=24)
+    while not long.out:  # TTFT banked: the lane is now a preemption candidate
+        eng.step_once()
+    short = eng.submit(pS, max_new=2)
+    eng.run()
+
+    assert eng.metrics.preemptions >= 1 and eng.metrics.resumes >= 1
+    assert eng.metrics.preemptions == eng.metrics.resumes
+    assert 1 <= long.preempt_count <= 2
+    assert short.status == "done" and len(short.out) == 2
+    assert long.status == "done" and len(long.out) == 24
+
+    ref_eng = ServeEngine(model, params, POLICY, lanes=1, chunk=4)
+    ref = ref_eng.submit(pL, max_new=24)
+    ref_eng.run()
+    assert long.out == ref.out  # 100% agreement through snapshot/restore
+
+
+def test_admit_pace_limits_admissions_per_step():
+    eng = make_engine(lanes=4, chunk=4, admit_pace=1)
+    for s in range(3):
+        eng.submit(prompt_of(6, 10 + s), max_new=8)
+    eng.step_once()
+    assert eng.active_lanes == 1  # one admission despite 4 free lanes
+    eng.step_once()
+    assert eng.active_lanes == 2
+
+    with pytest.raises(ValueError):
+        make_engine(lanes=2, admit_pace=0)
+
+
+# ---------------------------------------------------------------------------
+# router-level cancellation
+# ---------------------------------------------------------------------------
+
+
+def test_router_explicit_cancel_stops_decode_and_is_idempotent():
+    router = Router([make_engine(lanes=1, chunk=4)])
+    t = router.submit(prompt_of(6, 11), max_new=64)
+    while len(t.req.out) < 3:
+        router.pump()
+    steps0 = router.engines[0].metrics.steps
+
+    assert router.cancel(t.rid) is True
+    assert t.status == "cancelled" and t.reason == "client_cancel"
+    assert t.tokens  # partial output stays readable on the ticket
+    while router.pump():
+        pass
+    assert router.engines[0].metrics.steps == steps0  # no work after cancel
+    assert router.cancel(t.rid) is False
+    assert router.cancellations == {"client_cancel": 1}
+    assert router.stats()["cancellations"] == {"client_cancel": 1}
+    assert router.report()["cancellations"] == {"client_cancel": 1}
+
+
+def test_router_cancels_expired_deadline_mid_flight():
+    """Deadlines used to be enforced only at submit and dispatch; a
+    request whose deadline expires AFTER lane binding must now be
+    cancelled by the pump instead of decoding to max_new."""
+    router = Router([make_engine(lanes=1, chunk=4)])
+    t = router.submit(
+        prompt_of(6, 12), max_new=4096,
+        deadline=time.monotonic() + 0.05,
+    )
+    deadline_wall = time.monotonic() + 30.0
+    while t.status not in ("done", "cancelled", "rejected"):
+        assert time.monotonic() < deadline_wall, "pump never cancelled"
+        router.pump()
+    assert t.status == "cancelled" and t.reason == "deadline_expired"
+    assert len(t.tokens) < 4096
+    assert router.cancellations == {"deadline_expired": 1}
+
+
+def test_abandoned_stream_is_cancelled_inside_the_engine():
+    """Breaking out of ar.stream() marks the ticket abandoned; the next
+    pump (here: driven by a later generate) cancels it in the engine,
+    freeing the lane instead of decoding 64 tokens for nobody."""
+    router = Router([make_engine(lanes=2, chunk=4)])
+    ar = AsyncRouter(router)
+
+    async def main():
+        async for _ in ar.stream(prompt_of(6, 13), max_new=64):
+            break  # consumer disconnects after the first token
+        t = await ar.generate(prompt_of(6, 14), max_new=2)
+        return t
+
+    t = asyncio.run(main())
+    assert t.status == "done" and len(t.tokens) == 2
+    assert router.cancellations == {"abandoned": 1}
+    assert router.idle  # nothing left decoding for the dead consumer
+
+
+def test_drain_completes_with_abandoned_and_cancelled_work_in_flight():
+    router = Router([make_engine(lanes=2, chunk=4)])
+    t1 = router.submit(prompt_of(6, 15), max_new=64)
+    t2 = router.submit(prompt_of(6, 16), max_new=64)
+    t3 = router.submit(prompt_of(6, 17), max_new=4)
+    while len(t1.req.out) < 1:
+        router.pump()
+    assert router.cancel(t1.rid) is True
+    t2.abandoned = True  # simulate a consumer disconnect
+
+    router.drain()
+    assert router.idle
+    assert t1.status == "cancelled" and t2.status == "cancelled"
+    assert t3.status == "done" and len(t3.tokens) == 4
+    assert router.cancellations == {"client_cancel": 1, "abandoned": 1}
+
+
+# ---------------------------------------------------------------------------
+# HTTP DELETE endpoint
+# ---------------------------------------------------------------------------
+
+
+def _counter(metrics_text, name, labels=""):
+    pat = rf"^{re.escape(name + labels)} (\d+)$"
+    m = re.search(pat, metrics_text, re.MULTILINE)
+    return int(m.group(1)) if m else 0
+
+
+@pytest.mark.slow
+def test_http_delete_cancels_mid_stream_and_frees_the_lane():
+    """DELETE /v1/requests/{rid} from a second connection ends an active
+    stream with a terminal done(status=cancelled) event; the scrape-diff
+    acceptance check: after the cancel, decode steps stop advancing for
+    the dead request and the lane count is fully restored."""
+    prompt = prompt_of(6, 18)
+
+    async def main():
+        router = Router([make_engine(lanes=2, chunk=4)])
+        server = await HttpServer(router, port=0).start()
+        task = asyncio.create_task(server.serve_forever())
+        streamer = Client(server.host, server.port)
+        admin = Client(server.host, server.port)
+        try:
+            gen = streamer.stream(prompt, max_new=512)
+            start = await gen.__anext__()
+            assert start[0] == "start"
+            rid = start[1]["rid"]
+            first = await gen.__anext__()
+            assert first[0] == "message"
+
+            resp = await admin.cancel(rid)
+            assert resp == {"rid": rid, "cancelled": True}
+
+            events = [ev async for ev in gen]
+            done = events[-1]
+            assert done[0] == "done"
+            assert done[1]["status"] == "cancelled"
+            assert done[1]["reason"] == "client_cancel"
+            assert 1 <= done[1]["n_tokens"] < 512
+
+            # idempotent over the wire: the rid is gone now
+            with pytest.raises(HttpError) as ei:
+                await admin.cancel(rid)
+            assert ei.value.status == 404
+            with pytest.raises(HttpError):
+                await admin.cancel(999999)  # never existed
+
+            # scrape-diff: the cancelled request contributes zero decode
+            # steps after its cancel — a follow-up max_new=1 request costs
+            # only prefill (prompt of 6, chunk 4 -> 2 steps, first token
+            # emitted on the last prefill step)
+            m1 = await admin.metrics()
+            d1 = _counter(m1, "repro_decode_steps_total")
+            assert _counter(
+                m1, "repro_cancelled_total", '{reason="client_cancel"}'
+            ) == 1
+            assert _counter(m1, "repro_free_lanes") == 2  # lane restored
+            await admin.generate(prompt, max_new=1)
+            m2 = await admin.metrics()
+            assert _counter(m2, "repro_decode_steps_total") == d1
+            return True
+        finally:
+            await streamer.close()
+            await admin.close()
+            server.shutdown()
+            await asyncio.wait_for(task, timeout=30)
+
+    assert asyncio.run(main())
+
+
+@pytest.mark.slow
+def test_http_stream_mid_flight_deadline_maps_to_504_error_event():
+    """A deadline that expires after the stream started (lane bound,
+    tokens possibly flowing) surfaces as the terminal SSE error event
+    with the deadline_expired mapping, not as a silent truncation."""
+    prompt = prompt_of(6, 19)
+
+    async def main():
+        router = Router([make_engine(lanes=1, chunk=4)])
+        server = await HttpServer(router, port=0).start()
+        task = asyncio.create_task(server.serve_forever())
+        try:
+            async with Client(server.host, server.port) as c:
+                with pytest.raises(HttpError) as ei:
+                    async for _ in c.stream(
+                        prompt, max_new=512, deadline_ms=150
+                    ):
+                        pass
+                return ei.value.status, ei.value.reason
+        finally:
+            server.shutdown()
+            await asyncio.wait_for(task, timeout=30)
+
+    status, reason = asyncio.run(main())
+    assert status == 504 and reason == "deadline_expired"

@@ -131,7 +131,8 @@ def test_sse_stream_framing_and_generate_consistency():
 
     gen, events, raw = asyncio.run(main())
 
-    *token_events, done = events
+    start, *token_events, done = events
+    assert start[0] == "start" and isinstance(start[1]["rid"], int)
     assert done[0] == "done" and done[1]["n_tokens"] == 4
     assert [e for e, _ in token_events] == ["message"] * 4
     assert [d["index"] for _, d in token_events] == [0, 1, 2, 3]
@@ -143,8 +144,9 @@ def test_sse_stream_framing_and_generate_consistency():
     assert b"content-type: text/event-stream" in head.lower()
     assert b"connection: close" in head.lower()
     frames = [f for f in payload.decode().split("\n\n") if f]
-    assert len(frames) == 3  # 2 tokens + done
-    for f in frames[:-1]:
+    assert len(frames) == 4  # start + 2 tokens + done
+    assert frames[0].startswith("event: start\ndata: ")
+    for f in frames[1:-1]:
         assert f.startswith("data: ")
         json.loads(f.split("data: ", 1)[1])
     assert frames[-1].startswith("event: done\ndata: ")
@@ -227,7 +229,8 @@ def test_stream_rejected_after_admission_sends_error_event():
             blocker = Client(server.host, server.port)
             victim = Client(server.host, server.port)
             gen = blocker.stream(long_p, max_new=64)
-            await gen.__anext__()  # lane now busy for ~63 more pumps
+            await gen.__anext__()  # start event (pre-admission)
+            await gen.__anext__()  # first token: lane busy for ~63 pumps
             try:
                 with pytest.raises(HttpError) as ei:
                     # expires while queued: 63 pumps >> 5ms, but the
@@ -350,6 +353,8 @@ def test_drain_stops_admission_finishes_inflight_and_exits():
         streamer = Client(server.host, server.port)
         try:
             gen = streamer.stream(prompt, max_new=12)
+            start = await gen.__anext__()
+            assert start[0] == "start"
             first = await gen.__anext__()  # request is now in flight
             assert first[0] == "message"
 
