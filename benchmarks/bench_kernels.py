@@ -96,10 +96,15 @@ def run(verbose: bool = True) -> dict:
 
 
 def run_dispatch(backend: str, *, m=256, k=512, n=512, b=64, h=512,
-                 iters: int = 3, verbose: bool = True) -> dict:
+                 iters: int = 3, verbose: bool = True, reset: bool = True) -> dict:
     """Time the dispatched hot-path ops under one backend and report the
     resolver's decisions. On CPU the pallas numbers are interpret-mode
-    (validation, not speed); on TPU they are the compiled kernels."""
+    (validation, not speed); on TPU they are the compiled kernels.
+
+    Measured wall-time is fed back into the dispatch stats
+    (``STATS.add_time``) so the cost ledger can join predicted FLOPs/bytes
+    with a measured rate — microbenchmark granularity is the only place
+    per-op wall attribution is honest (one op per timed region)."""
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
     w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32) * 0.05)
@@ -109,13 +114,16 @@ def run_dispatch(backend: str, *, m=256, k=512, n=512, b=64, h=512,
 
     out = {"backend": backend}
     with kd.use_backend(backend):
-        kd.STATS.reset()
+        if reset:
+            kd.STATS.reset()
         # jit the dispatched call like the real hot paths do (the resolver
         # runs at trace time, under this backend context)
         t_mm = _time(jax.jit(lambda a: kd.matmul(a, codes, bias)), x, iters=iters)
         d_mm = kd.STATS.last["floatsd_matmul"]
+        kd.STATS.add_time("floatsd_matmul", d_mm.backend, t_mm)
         t_cell = _time(jax.jit(lambda zz: kd.lstm_cell(zz, c)), z, iters=iters)
         d_cell = kd.STATS.last["lstm_cell"]
+        kd.STATS.add_time("lstm_cell", d_cell.backend, t_cell)
     out.update(
         ms_matmul=round(t_mm * 1e3, 2),
         ms_lstm_cell=round(t_cell * 1e3, 2),
@@ -142,6 +150,12 @@ def main():
     ap.add_argument("--bh", type=int, nargs=2, default=[64, 512],
                     metavar=("B", "H"))
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--ledger", action="store_true",
+                    help="print the predicted-vs-measured cost ledger "
+                         "accumulated across the dispatched runs")
+    ap.add_argument("--ledger-out", metavar="PATH",
+                    help="dump the cost ledger as JSON (check_bench.py "
+                         "input / CI artifact)")
     args = ap.parse_args()
 
     run()
@@ -149,8 +163,12 @@ def main():
     b, h = args.bh
     print("dispatched hot-path ops per backend:")
     backends = ["ref", "pallas"] if args.backend == "both" else [args.backend]
+    want_ledger = args.ledger or args.ledger_out
+    if want_ledger:
+        kd.STATS.reset()  # one ledger across all backends, reset once
     rows = [
-        run_dispatch(be, m=m, k=k, n=n, b=b, h=h, iters=args.iters)
+        run_dispatch(be, m=m, k=k, n=n, b=b, h=h, iters=args.iters,
+                     reset=not want_ledger)
         for be in backends
     ]
     if len(rows) == 2:
@@ -158,6 +176,15 @@ def main():
         print(f"  ref-vs-pallas delta: matmul {p['ms_matmul']/max(r['ms_matmul'],1e-9):.2f}x, "
               f"lstm_cell {p['ms_lstm_cell']/max(r['ms_lstm_cell'],1e-9):.2f}x "
               f"({'interpret-mode validation, not speed' if p['interpret'] else 'compiled'})")
+    if args.ledger:
+        print("\ncost ledger (predicted analytical vs measured):")
+        print(kd.LEDGER.table())
+    if args.ledger_out:
+        kd.LEDGER.dump(args.ledger_out, meta={
+            "source": "bench_kernels", "mkn": [m, k, n], "bh": [b, h],
+            "iters": args.iters, "backends": backends,
+        })
+        print(f"ledger JSON written to {args.ledger_out}")
 
 
 if __name__ == "__main__":

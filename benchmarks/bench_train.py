@@ -155,9 +155,15 @@ def run(backends=("ref",), seqs=(128,), steps=10, batch=16, vocab=2048,
         emb=256, hidden=256, layers=2, policy_name="floatsd8_table6",
         out=None, verbose=True, telemetry_steps=50):
     from repro.core.policy import get_policy
+    from repro.kernels import dispatch as kd
 
     policy = get_policy(policy_name)
     model = _build(vocab, emb, hidden, layers)
+    # fresh cost ledger for this run: the report carries the predicted
+    # per-(op, backend) totals the training steps traced (no wall feed —
+    # per-op wall attribution is only honest in bench_kernels' one-op
+    # timed regions)
+    kd.STATS.reset()
     results = []
     for seq in seqs:
         for backend in backends:
@@ -215,6 +221,7 @@ def run(backends=("ref",), seqs=(128,), steps=10, batch=16, vocab=2048,
         "remat": os.environ.get("REPRO_BPTT_REMAT", "1") != "0",
         "results": results,
         "ref_vs_pallas_loss_divergence": divergence,
+        "ledger": kd.LEDGER.rows(),
     }
     if telemetry_steps > 0:
         tel = _telemetry_run(

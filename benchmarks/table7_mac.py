@@ -75,6 +75,20 @@ def floatsd8_mac_cost(n_lanes: int, acc_man: int = 11) -> float:
     return decode + pp_gen + exp_logic + align + csa + acc_add + norm + pipe
 
 
+def per_timestep_macs(d: int, h: int, batch: int = 1) -> dict:
+    """MACs one LSTM layer spends per timestep (the paper's Table-7 unit of
+    work): the two gate GEMMs ``x_t @ W [D,4H]`` and ``h_{t-1} @ U [H,4H]``
+    contribute ``4H(D+H)`` MACs per sequence, and the elementwise cell
+    update (Eq. 5/6: f*c + i*g, o*tanh(c)) another ``3H``. The cost-model
+    observatory's ``macs`` fields must reproduce these numbers exactly
+    (tested in tests/test_costmodel.py) — the ledger argues in the same
+    currency as the paper."""
+    return {
+        "gemm": 4 * h * (d + h) * batch,
+        "elementwise": 3 * h * batch,
+    }
+
+
 def run(verbose: bool = True, out: str | None = None) -> dict:
     lanes = 4  # both MACs take 4 pairs/cycle (same IO bandwidth, paper V-A)
     fp32 = fp_mac_cost(man=23, exp=8, n_lanes=lanes, acc_man=23)

@@ -1,0 +1,226 @@
+#!/usr/bin/env python
+"""Perf-regression gate over the benchmark artifacts.
+
+Diffs a freshly produced benchmark JSON against the checked-in baseline
+and fails (exit 1) with the offending op/metric named — the CI teeth of
+the cost-model observatory:
+
+  * ``--train CUR``   : BENCH_train-shaped report vs ``--train-baseline``
+    (default BENCH_train.json). Machine-independent quantities are held
+    tight (residual bytes, determinism, the cost ledger's predicted
+    per-call FLOPs/bytes); wall-time quantities get the loose,
+    noise-tolerant bound.
+  * ``--http CUR``    : BENCH_http-shaped report vs ``--http-baseline``
+    (default BENCH_http.json): protocol-vs-inproc agreement must not
+    drop, HTTP overhead must not blow up.
+  * ``--ledger CUR``  : a cost-ledger artifact (``bench_kernels
+    --ledger-out`` / BENCH_train.json "ledger" key). Checks the model's
+    internal contract: on the ref backend predicted HBM bytes must match
+    the measured unique bytes touched within REPRO_BENCH_TOL_BYTES.
+
+Tolerances are env-overridable so CI can loosen them on noisy shared
+runners without a code change:
+
+  REPRO_BENCH_TOL_BYTES  relative, byte quantities + ref-exactness (0.01)
+  REPRO_BENCH_TOL_TIME   relative, wall-clock regressions       (1.0 = 2x)
+  REPRO_BENCH_TOL_RATIO  relative, dimensionless ratios         (0.5)
+
+Importable: ``check_train``/``check_http``/``check_ledger`` each return a
+list of problem strings (empty = pass), used by tests/test_costmodel.py
+to demonstrate that an injected regression fails with the op named.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _tol(name: str, default: float) -> float:
+    return float(os.environ.get(name, default))
+
+
+def tolerances() -> dict:
+    return {
+        "bytes": _tol("REPRO_BENCH_TOL_BYTES", 0.01),
+        "time": _tol("REPRO_BENCH_TOL_TIME", 1.0),
+        "ratio": _tol("REPRO_BENCH_TOL_RATIO", 0.5),
+    }
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# cost ledger: the model's own exactness contract
+# ---------------------------------------------------------------------------
+
+
+def check_ledger(rows, tol_bytes: float | None = None) -> list:
+    """Every ref-backend row must have predicted HBM bytes equal to the
+    unique ndarray bytes the dispatch actually touched, within tol — the
+    cross-check that keeps the analytical model honest."""
+    tol = tolerances()["bytes"] if tol_bytes is None else tol_bytes
+    problems = []
+    for r in rows:
+        if r.get("calls", 0) <= 0:
+            problems.append(f"ledger: op={r.get('op')} has calls={r.get('calls')}")
+            continue
+        if r.get("flops", 0) < 0 or r.get("hbm_bytes", 0) < 0:
+            problems.append(f"ledger: op={r['op']} negative predicted cost")
+        err = r.get("bytes_rel_err")
+        if r.get("backend") == "ref" and err is not None and abs(err) > tol:
+            problems.append(
+                f"ledger: op={r['op']} backend=ref predicted "
+                f"{r['hbm_bytes']} HBM bytes vs {r['touched_bytes']} "
+                f"measured touched bytes ({err:+.2%} > ±{tol:.2%})"
+            )
+    return problems
+
+
+def _per_call(row: dict, key: str) -> float:
+    return row[key] / max(row.get("calls", 1), 1)
+
+
+def _ledger_drift(cur_rows, base_rows, tol_ratio: float) -> list:
+    """Predicted per-call cost is machine-independent: a drift between the
+    baseline and current ledger means the cost model or the traced path
+    changed — name the op and the predicted-vs-baseline delta."""
+    problems = []
+    base = {(r["op"], r["backend"]): r for r in base_rows}
+    cur = {(r["op"], r["backend"]): r for r in cur_rows}
+    for key, b in base.items():
+        c = cur.get(key)
+        if c is None:
+            problems.append(
+                f"ledger: op={key[0]} backend={key[1]} present in baseline "
+                "but missing from the current run"
+            )
+            continue
+        for metric in ("flops", "hbm_bytes"):
+            pb, pc = _per_call(b, metric), _per_call(c, metric)
+            if pb > 0 and abs(pc - pb) / pb > tol_ratio:
+                problems.append(
+                    f"ledger: op={key[0]} backend={key[1]} per-call "
+                    f"predicted {metric} drifted {pb:.3g} -> {pc:.3g} "
+                    f"({(pc - pb) / pb:+.1%} > ±{tol_ratio:.0%})"
+                )
+    return problems
+
+
+# ---------------------------------------------------------------------------
+# BENCH_train
+# ---------------------------------------------------------------------------
+
+
+def check_train(cur: dict, base: dict, tols: dict | None = None) -> list:
+    tols = tols or tolerances()
+    problems = []
+    base_by = {(r["backend"], r["seq"]): r for r in base.get("results", [])}
+    cur_by = {(r["backend"], r["seq"]): r for r in cur.get("results", [])}
+    for key, b in base_by.items():
+        c = cur_by.get(key)
+        if c is None:
+            continue  # CI may run a subset of the baseline grid
+        tag = f"train[{key[0]} seq={key[1]}]"
+        if b.get("deterministic") and not c.get("deterministic"):
+            problems.append(f"{tag}: fused loss curve no longer deterministic")
+        for variant in ("fused", "baseline"):
+            bw, cw = b[variant]["warm_step_s"], c[variant]["warm_step_s"]
+            if cw > bw * (1 + tols["time"]):
+                problems.append(
+                    f"{tag}: {variant} warm_step_s {bw:.4f} -> {cw:.4f} "
+                    f"({cw / bw:.2f}x > {1 + tols['time']:.2f}x budget)"
+                )
+            bb, cb = b[variant]["residual_bytes"], c[variant]["residual_bytes"]
+            # machine-independent: residual bytes may only grow within the
+            # byte tolerance (shrinking is an improvement, not a failure)
+            if cb > bb * (1 + tols["bytes"]):
+                problems.append(
+                    f"{tag}: {variant} residual_bytes {bb} -> {cb} "
+                    f"({(cb - bb) / bb:+.2%} > +{tols['bytes']:.2%})"
+                )
+        if c.get("speedup", 0) < b.get("speedup", 0) * (1 - tols["ratio"]):
+            problems.append(
+                f"{tag}: fused-vs-baseline speedup {b['speedup']:.3f} -> "
+                f"{c['speedup']:.3f} (lost more than {tols['ratio']:.0%})"
+            )
+    if cur.get("ledger"):
+        problems += check_ledger(cur["ledger"], tols["bytes"])
+        if base.get("ledger"):
+            problems += _ledger_drift(cur["ledger"], base["ledger"],
+                                      tols["ratio"])
+    return problems
+
+
+# ---------------------------------------------------------------------------
+# BENCH_http
+# ---------------------------------------------------------------------------
+
+
+def check_http(cur: dict, base: dict, tols: dict | None = None) -> list:
+    tols = tols or tolerances()
+    problems = []
+    ba = base.get("agreement", {})
+    ca = cur.get("agreement", {})
+    for k, bv in ba.items():
+        cv = ca.get(k)
+        if cv is None:
+            continue  # current run exercised a workload subset
+        if cv < bv:  # agreement is 0..1 and deterministic: never drops
+            problems.append(f"http: agreement.{k} dropped {bv} -> {cv}")
+    bo = base.get("http_overhead", {})
+    co = cur.get("http_overhead", {})
+    for k, bv in bo.items():
+        cv = co.get(k)
+        if cv is None:
+            continue
+        # wall-clock overhead: loose relative bound + 1ms absolute slack
+        # (sub-ms baselines would otherwise fail on scheduler jitter)
+        if cv > bv * (1 + tols["time"]) + 1.0:
+            problems.append(
+                f"http: http_overhead.{k} {bv:.2f}ms -> {cv:.2f}ms "
+                f"(> {1 + tols['time']:.2f}x + 1ms budget)"
+            )
+    return problems
+
+
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--train", metavar="CUR_JSON")
+    ap.add_argument("--train-baseline", default="BENCH_train.json")
+    ap.add_argument("--http", metavar="CUR_JSON")
+    ap.add_argument("--http-baseline", default="BENCH_http.json")
+    ap.add_argument("--ledger", metavar="LEDGER_JSON")
+    a = ap.parse_args(argv)
+    if not (a.train or a.http or a.ledger):
+        ap.error("nothing to check: pass --train, --http, and/or --ledger")
+
+    problems = []
+    if a.train:
+        problems += check_train(_load(a.train), _load(a.train_baseline))
+    if a.http:
+        problems += check_http(_load(a.http), _load(a.http_baseline))
+    if a.ledger:
+        data = _load(a.ledger)
+        rows = data if isinstance(data, list) else data.get(
+            "rows", data.get("ledger", [])
+        )
+        problems += check_ledger(rows)
+
+    if problems:
+        for p in problems:
+            print(f"check_bench: FAIL {p}", file=sys.stderr)
+        return 1
+    print("check_bench: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -34,10 +34,15 @@ MD_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SKIP_CHARS = set("*<>{}$")
 
 # cited but intentionally absent: ROADMAP "ground" references point into
-# the external /root/related/ reference checkout, not this repo
+# the external /root/related/ reference checkout, not this repo, and the
+# *_ci.json benchmark reports exist only as CI run artifacts by design
+# (the checked-in baselines they are diffed against have no _ci suffix)
 ALLOWLIST: set = {
     "torch/distributed/_tensor/placement_types.py",
     "maedoc__loopy/test/test_statistics.py",
+    "BENCH_train_ci.json",
+    "BENCH_http_ci.json",
+    "BENCH_ledger_ci.json",
 }
 
 # not about THIS repo's files: the per-PR task spec and the external-repo

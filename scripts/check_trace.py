@@ -16,6 +16,10 @@ export fails in CI instead of failing silently in the viewer:
   * request-lifecycle instants (engine.cancel / engine.preempt /
     engine.resume / router.cancel) are ``i``-phase and carry the rid in
     their args — the attribution the cancellation runbook greps for
+  * ``C`` (counter) events carry numeric args, and ``cost.*`` counter
+    tracks — the cost-model observatory's cumulative FLOP/byte ledgers —
+    are monotone non-decreasing per (track, series); a trace that ran
+    engine steps must carry the matmul + lstm_cell cost tracks
 
 Usage:
     scripts/check_trace.py trace.json
@@ -53,6 +57,8 @@ def validate_trace(obj) -> list:
 
     last_ts = None
     stacks: dict = {}  # (pid, tid) -> [(name, idx), ...] open B spans
+    counters: dict = {}  # (name, series key) -> last value (monotonicity)
+    span_names: set = set()  # names seen on B/X events
     for i, ev in enumerate(events):
         if not isinstance(ev, dict):
             problems.append(f"event {i}: not an object")
@@ -94,6 +100,30 @@ def validate_trace(obj) -> list:
             dur = ev.get("dur")
             if not isinstance(dur, (int, float)) or dur < 0:
                 problems.append(f"event {i}: X without non-negative dur")
+        elif ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                problems.append(
+                    f"event {i}: C {ev['name']!r} needs a non-empty args dict"
+                )
+            else:
+                for k, v in args.items():
+                    if not isinstance(v, (int, float)):
+                        problems.append(
+                            f"event {i}: C {ev['name']!r} series {k!r} "
+                            f"non-numeric value {v!r}"
+                        )
+                    elif ev["name"].startswith("cost."):
+                        # cumulative ledger totals: never decrease
+                        prev = counters.get((ev["name"], k))
+                        if prev is not None and v < prev:
+                            problems.append(
+                                f"event {i}: cost counter {ev['name']!r} "
+                                f"series {k!r} decreased ({prev} -> {v})"
+                            )
+                        counters[(ev["name"], k)] = v
+        if ph in ("B", "X"):
+            span_names.add(ev["name"])
         if ev["name"] in RID_INSTANTS:
             if ph != "i":
                 problems.append(
@@ -110,6 +140,17 @@ def validate_trace(obj) -> list:
             problems.append(
                 f"unterminated B {name!r} (event {j}) on tid {key}"
             )
+    # a trace that ran device steps must carry the hot-path cost tracks —
+    # if the ledger wiring regresses, the trace loses its predicted-cost
+    # attribution silently otherwise
+    if "engine.step" in span_names:
+        tracks = {name for (name, _k) in counters}
+        for required in ("cost.floatsd_matmul", "cost.lstm_cell"):
+            if required not in tracks:
+                problems.append(
+                    f"trace has engine.step spans but no {required!r} "
+                    "counter track (cost-ledger emission missing)"
+                )
     return problems
 
 

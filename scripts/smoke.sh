@@ -41,6 +41,12 @@ echo "$METRICS" | grep -q '^repro_dispatch_decisions_total{' \
     || { echo "http smoke: repro_dispatch_decisions_total missing from /metrics"; exit 1; }
 echo "$METRICS" | grep -q '^repro_trace_enabled 1$' \
     || { echo "http smoke: tracer not enabled on the serve path"; exit 1; }
+# cumulative latency histograms (Prometheus histogram exposition)
+echo "$METRICS" | grep -q '^repro_ttft_ms_bucket{' \
+    || { echo "http smoke: repro_ttft_ms_bucket missing from /metrics"; exit 1; }
+# the cost-model observatory's predicted-cost rows per (op, backend)
+echo "$METRICS" | grep -q '^repro_cost_flops_total{' \
+    || { echo "http smoke: repro_cost_* ledger metrics missing from /metrics"; exit 1; }
 # rude-client probe: disconnect mid-stream must cancel the request inside
 # the engine (scrape-diff: one abandoned cancellation, no runaway decode,
 # all lanes free again)

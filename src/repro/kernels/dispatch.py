@@ -44,7 +44,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import floatsd
+from ..obs import costmodel
 from ..obs import telemetry as obs_telemetry
+from .flash_attention import cost as fa_cost
+from .flash_attention.kernel import flash_attention_pallas
+from .flash_attention.ops import flash_attention_kernel, flash_tiles
+from .flash_attention.ref import flash_attention_ref
+from .floatsd_matmul import cost as fm_cost
 from .floatsd_matmul.bwd import (
     matmul_dw_pallas,
     matmul_dw_ref,
@@ -53,21 +59,28 @@ from .floatsd_matmul.bwd import (
 )
 from .floatsd_matmul.kernel import floatsd_matmul_pallas
 from .floatsd_matmul.ref import floatsd_matmul_ref
+from .floatsd_quantize import cost as fq_cost
 from .floatsd_quantize.kernel import quantize_pallas
+from .lstm_cell import cost as lc_cost
 from .lstm_cell.bwd import lstm_cell_bwd_pallas, lstm_cell_bwd_ref
 from .lstm_cell.kernel import lstm_cell_pallas
 from .lstm_cell.ref import lstm_cell_ref
+from .qsigmoid import cost as qs_cost
 from .qsigmoid.kernel import qsigmoid_pallas
 from .qsigmoid.ref import qsigmoid_ref
+from .rwkv_wkv import cost as wkv_cost
+from .rwkv_wkv.kernel import wkv_pallas
+from .rwkv_wkv.ops import wkv as wkv_op
+from .rwkv_wkv.ref import wkv_ref
 
 __all__ = [
     "BACKENDS", "PAD_WASTE_MAX", "PackedTensor", "Decision", "DispatchStats",
-    "STATS", "record", "backend_policy", "use_backend", "interpret_mode",
-    "matmul", "lstm_cell", "quantize", "qsigmoid", "packed_einsum",
-    "hoist_packed", "matmul_tiles", "lstm_tiles", "row_tile",
-    "matmul_dx", "matmul_dw", "lstm_cell_grad", "train_matmul",
+    "STATS", "LEDGER", "record", "backend_policy", "use_backend",
+    "interpret_mode", "matmul", "lstm_cell", "quantize", "qsigmoid",
+    "packed_einsum", "hoist_packed", "matmul_tiles", "lstm_tiles",
+    "row_tile", "matmul_dx", "matmul_dw", "lstm_cell_grad", "train_matmul",
     "lstm_cell_train", "pack_train", "hoist_train", "inference_only",
-    "OpSpec", "REGISTRY",
+    "rwkv_wkv", "flash_attention", "OpSpec", "REGISTRY",
 ]
 
 BACKENDS = ("ref", "pallas", "auto")
@@ -108,10 +121,26 @@ class Decision(NamedTuple):
     interpret: bool
     padded: bool
     reason: str
+    # predicted cost of THIS call (costmodel.Cost) — attached by the
+    # dispatched entry point once the resolved backend/tiling is known
+    cost: Any = None
 
 
 class DispatchStats:
-    """Per-(op, backend) resolution counters + the last Decision per op.
+    """Per-(op, backend) resolution counters, the last Decision per op,
+    and the cost-ledger accumulators.
+
+    Three sinks beyond the decision counters feed ``LEDGER``:
+
+      * ``costs`` — predicted :class:`~repro.obs.costmodel.Cost` totals,
+        accumulated from each recorded Decision (trace time);
+      * ``touched`` — unique bytes of the ndarrays the dispatch actually
+        handed to the backend plus its outputs, computed from array
+        metadata (``size * itemsize`` — works on tracers). On ref this is
+        the measurement the predicted bytes must match exactly;
+      * ``wall`` — measured (timed_calls, seconds) per (op, backend), fed
+        by ``bench_kernels.py --ledger`` via :meth:`add_time` — per-op
+        wall attribution is only honest at microbenchmark granularity.
 
     Lock-guarded: resolutions happen at trace time on whatever thread is
     tracing (the serving pump worker, a test thread), while the /metrics
@@ -121,12 +150,34 @@ class DispatchStats:
     def __init__(self):
         self.counts: collections.Counter = collections.Counter()
         self.last: dict[str, Decision] = {}
+        self.costs: dict[tuple[str, str], costmodel.Cost] = {}
+        self.touched: collections.Counter = collections.Counter()
+        self.wall: dict[tuple[str, str], list] = {}
         self._lock = threading.Lock()
 
     def record(self, d: Decision) -> None:
         with self._lock:
-            self.counts[(d.op, d.backend)] += 1
+            key = (d.op, d.backend)
+            self.counts[key] += 1
             self.last[d.op] = d
+            if d.cost is not None:
+                self.costs[key] = costmodel.merge_costs(
+                    self.costs.get(key, costmodel.ZERO_COST), d.cost
+                )
+
+    def add_touched(self, op: str, backend: str, nbytes: int) -> None:
+        with self._lock:
+            self.touched[(op, backend)] += int(nbytes)
+
+    def add_time(self, op: str, backend: str, seconds: float,
+                 calls: int = 1) -> None:
+        """Attribute measured wall time to (op, backend) — the ledger's
+        measured column. Callers time *executions*; the predicted side
+        counts *traces*, so the ledger normalizes both per call."""
+        with self._lock:
+            entry = self.wall.setdefault((op, backend), [0, 0.0])
+            entry[0] += int(calls)
+            entry[1] += float(seconds)
 
     def count(self, op: str | None = None, backend: str | None = None) -> int:
         with self._lock:
@@ -139,6 +190,9 @@ class DispatchStats:
         with self._lock:
             self.counts.clear()
             self.last.clear()
+            self.costs.clear()
+            self.touched.clear()
+            self.wall.clear()
 
     def snapshot(self) -> dict:
         """{(op, backend): resolutions} — what /metrics exports as
@@ -146,15 +200,54 @@ class DispatchStats:
         with self._lock:
             return dict(self.counts)
 
+    def cost_snapshot(self) -> dict:
+        """{(op, backend): {cost, calls, touched_bytes, timed_calls,
+        wall_s}} — the CostLedger's raw join input."""
+        with self._lock:
+            keys = (
+                set(self.counts) | set(self.costs) | set(self.touched)
+                | set(self.wall)
+            )
+            return {
+                key: {
+                    "cost": self.costs.get(key, costmodel.ZERO_COST),
+                    "calls": self.counts.get(key, 0),
+                    "touched_bytes": self.touched.get(key, 0),
+                    "timed_calls": self.wall.get(key, (0, 0.0))[0],
+                    "wall_s": self.wall.get(key, (0, 0.0))[1],
+                }
+                for key in keys
+            }
+
 
 STATS = DispatchStats()
 
+#: Predicted-vs-measured cost ledger over STATS — the observatory's
+#: joined view (trace counter tracks, /metrics export, --ledger artifacts).
+LEDGER = costmodel.CostLedger(STATS)
+
 
 def record(op: str, backend: str, *, interpret: bool = False,
-           padded: bool = False, reason: str = "") -> Decision:
-    d = Decision(op, backend, interpret, padded, reason)
+           padded: bool = False, reason: str = "",
+           cost: costmodel.Cost | None = None) -> Decision:
+    d = Decision(op, backend, interpret, padded, reason, cost)
     STATS.record(d)
     return d
+
+
+def _nbytes(*arrays) -> int:
+    """Sum of ``size * itemsize`` over arrays/tracers/scalars — the
+    unique-bytes-touched measurement the ref cost model must reproduce."""
+    total = 0
+    for a in arrays:
+        if a is None:
+            continue
+        dt = getattr(a, "dtype", None)
+        if dt is None:
+            a = np.asarray(a)
+            dt = a.dtype
+        total += int(getattr(a, "size", 1)) * jnp.dtype(dt).itemsize
+    return total
 
 
 _OVERRIDE: list[str] = []  # use_backend() stack
@@ -308,9 +401,16 @@ def matmul(x, codes, bias, *, out_dtype=jnp.float32, precise: bool = True,
     x2 = x.reshape(-1, k)
     m = x2.shape[0]
     native, waste, (mp, kp, np_) = _matmul_geometry(m, k, n)
-    dec = _choose("floatsd_matmul", native, waste, backend)
+    dec = _decide("floatsd_matmul", native, waste, backend)
+    x_bytes = jnp.dtype(x.dtype).itemsize
+    o_bytes = jnp.dtype(out_dtype).itemsize
     if dec.backend == "ref":
         y = floatsd_matmul_ref(x2, codes, bias, out_dtype)
+        cost = fm_cost.matmul_fwd_cost(
+            m, k, n, backend="ref", x_bytes=x_bytes, out_bytes=o_bytes,
+        )
+        touched = _nbytes(x2, codes, bias, y)
+        out = y
     else:
         xx, cc = x2, codes
         if dec.padded:
@@ -322,9 +422,16 @@ def matmul(x, codes, bias, *, out_dtype=jnp.float32, precise: bool = True,
             compute_dtype=compute_dtype,
             interpret=dec.interpret,
         )
-        if dec.padded:
-            y = y[:m, :n]
-    return y.reshape(*lead, n)
+        cost = fm_cost.matmul_fwd_cost(
+            m, k, n, backend="pallas", x_bytes=x_bytes, out_bytes=o_bytes,
+            compute_bytes=jnp.dtype(compute_dtype).itemsize,
+            padded=(mp, kp, np_), tiles=(bm, bn, bk),
+        )
+        touched = _nbytes(xx, cc, bias, y)
+        out = y[:m, :n] if dec.padded else y
+    STATS.record(dec._replace(cost=cost))
+    STATS.add_touched("floatsd_matmul", dec.backend, touched)
+    return out.reshape(*lead, n)
 
 
 def lstm_cell(z, c_prev, *, quantized: bool = True, c_dtype=jnp.float16,
@@ -335,9 +442,22 @@ def lstm_cell(z, c_prev, *, quantized: bool = True, c_dtype=jnp.float16,
     bp, hp = _ceil_to(max(b, 1), 8), _ceil_to(max(h, 1), 128)
     native = (bp, hp) == (b, h)
     waste = (bp * hp) / max(b * h, 1)
-    dec = _choose("lstm_cell", native, waste, backend)
+    dec = _decide("lstm_cell", native, waste, backend)
+    dtypes = dict(
+        z_bytes=jnp.dtype(z.dtype).itemsize,
+        c_in_bytes=jnp.dtype(c_prev.dtype).itemsize,
+    )
     if dec.backend == "ref":
-        return lstm_cell_ref(z, c_prev, quantized, c_dtype=c_dtype)
+        h_t, c_t = lstm_cell_ref(z, c_prev, quantized, c_dtype=c_dtype)
+        cost = lc_cost.lstm_cell_cost(
+            b, h, backend="ref",
+            h_out_bytes=jnp.dtype(h_t.dtype).itemsize,
+            c_out_bytes=jnp.dtype(c_t.dtype).itemsize, **dtypes,
+        )
+        touched = _nbytes(z, c_prev, h_t, c_t)
+        STATS.record(dec._replace(cost=cost))
+        STATS.add_touched("lstm_cell", "ref", touched)
+        return h_t, c_t
     zz, cc = z, c_prev
     if dec.padded:
         zz = jnp.pad(
@@ -349,6 +469,14 @@ def lstm_cell(z, c_prev, *, quantized: bool = True, c_dtype=jnp.float16,
         zz, cc, bb=bb, bh=bh, quantized=quantized, c_dtype=c_dtype,
         interpret=dec.interpret,
     )
+    cost = lc_cost.lstm_cell_cost(
+        b, h, backend="pallas",
+        h_out_bytes=jnp.dtype(h_t.dtype).itemsize,
+        c_out_bytes=jnp.dtype(c_t.dtype).itemsize,
+        padded=(bp, hp), tiles=(bb, bh), **dtypes,
+    )
+    STATS.record(dec._replace(cost=cost))
+    STATS.add_touched("lstm_cell", "pallas", _nbytes(zz, cc, h_t, c_t))
     if dec.padded:
         h_t, c_t = h_t[:b, :h], c_t[:b, :h]
     return h_t, c_t
@@ -364,17 +492,28 @@ def quantize(x, bias=None, *, backend: str | None = None):
     np_ = _ceil_to(max(n, 1), 8 * 256)
     native = n > 0 and n % (8 * 256) == 0
     waste = np_ / max(n, 1)
-    dec = _choose("floatsd_quantize", native, waste, backend)
+    dec = _decide("floatsd_quantize", native, waste, backend)
+    x_bytes = jnp.dtype(x.dtype).itemsize
     if dec.backend == "ref":
         codes, _ = floatsd.encode(x, bias)
+        cost = fq_cost.quantize_cost(n, backend="ref", x_bytes=x_bytes)
+        STATS.record(dec._replace(cost=cost))
+        STATS.add_touched("floatsd_quantize", "ref", _nbytes(x, bias, codes))
         return codes, bias
     flat = x.reshape(-1)
     if dec.padded:
         flat = jnp.pad(flat, (0, np_ - n))
     x2 = flat.reshape(-1, 256)
+    tile_rows = row_tile(x2.shape[0])
     codes2 = quantize_pallas(
-        x2, bias, bm=row_tile(x2.shape[0]), bn=256, interpret=dec.interpret
+        x2, bias, bm=tile_rows, bn=256, interpret=dec.interpret
     )
+    cost = fq_cost.quantize_cost(
+        n, backend="pallas", x_bytes=x_bytes, padded_n=np_,
+        tile_rows=tile_rows,
+    )
+    STATS.record(dec._replace(cost=cost))
+    STATS.add_touched("floatsd_quantize", "pallas", _nbytes(x2, bias, codes2))
     return codes2.reshape(-1)[:n].reshape(x.shape), bias
 
 
@@ -384,14 +523,30 @@ def qsigmoid(x, *, backend: str | None = None):
     np_ = _ceil_to(max(n, 1), 8 * 256)
     native = n > 0 and n % (8 * 256) == 0
     waste = np_ / max(n, 1)
-    dec = _choose("qsigmoid", native, waste, backend)
+    dec = _decide("qsigmoid", native, waste, backend)
+    x_bytes = jnp.dtype(x.dtype).itemsize
     if dec.backend == "ref":
-        return qsigmoid_ref(x)
+        y = qsigmoid_ref(x)
+        cost = qs_cost.qsigmoid_cost(
+            n, backend="ref", x_bytes=x_bytes,
+            y_bytes=jnp.dtype(y.dtype).itemsize,
+        )
+        STATS.record(dec._replace(cost=cost))
+        STATS.add_touched("qsigmoid", "ref", _nbytes(x, y))
+        return y
     flat = x.reshape(-1)
     if dec.padded:
         flat = jnp.pad(flat, (0, np_ - n))
     x2 = flat.reshape(-1, 256)
-    y2 = qsigmoid_pallas(x2, bm=row_tile(x2.shape[0]), bn=256, interpret=dec.interpret)
+    tile_rows = row_tile(x2.shape[0])
+    y2 = qsigmoid_pallas(x2, bm=tile_rows, bn=256, interpret=dec.interpret)
+    cost = qs_cost.qsigmoid_cost(
+        n, backend="pallas", x_bytes=x_bytes,
+        y_bytes=jnp.dtype(y2.dtype).itemsize, padded_n=np_,
+        tile_rows=tile_rows,
+    )
+    STATS.record(dec._replace(cost=cost))
+    STATS.add_touched("qsigmoid", "pallas", _nbytes(x2, y2))
     return y2.reshape(-1)[:n].reshape(x.shape)
 
 
@@ -412,9 +567,16 @@ def matmul_dx(g, codes, bias, *, backend: str | None = None):
     m = g2.shape[0]
     # output [m, k], contraction over n
     native, waste, (mp, np_, kp) = _matmul_geometry(m, n, k)
-    dec = _choose("floatsd_matmul_dx", native, waste, backend)
+    dec = _decide("floatsd_matmul_dx", native, waste, backend)
+    g_bytes = jnp.dtype(g.dtype).itemsize
     if dec.backend == "ref":
         dx = matmul_dx_ref(g2, codes, bias)
+        cost = fm_cost.matmul_dx_cost(
+            m, n, k, backend="ref", g_bytes=g_bytes,
+            out_bytes=jnp.dtype(dx.dtype).itemsize,
+        )
+        touched = _nbytes(g2, codes, bias, dx)
+        out = dx
     else:
         gg, cc = g2, codes
         if dec.padded:
@@ -423,9 +585,16 @@ def matmul_dx(g, codes, bias, *, backend: str | None = None):
         bm, bn, bk = matmul_tiles(mp, kp, np_)
         dx = matmul_dx_pallas(gg, cc, bias, bm=bm, bn=bn, bk=bk,
                               interpret=dec.interpret)
-        if dec.padded:
-            dx = dx[:m, :k]
-    return dx.reshape(*lead, k)
+        cost = fm_cost.matmul_dx_cost(
+            m, n, k, backend="pallas", g_bytes=g_bytes,
+            out_bytes=jnp.dtype(dx.dtype).itemsize,
+            padded=(mp, np_, kp), tiles=(bm, bn, bk),
+        )
+        touched = _nbytes(gg, cc, bias, dx)
+        out = dx[:m, :k] if dec.padded else dx
+    STATS.record(dec._replace(cost=cost))
+    STATS.add_touched("floatsd_matmul_dx", dec.backend, touched)
+    return out.reshape(*lead, k)
 
 
 def _dw_flush_telemetry(dw, quant: bool):
@@ -461,9 +630,20 @@ def matmul_dw(x, g, *, quant: bool = True, backend: str | None = None):
     assert g2.shape[0] == m, (x.shape, g.shape)
     # output [k, n], contraction over m (rows pad to 8, lanes to 128)
     native, waste, (kp, mp, np_) = _matmul_geometry(k, m, n)
-    dec = _choose("floatsd_matmul_dw", native, waste, backend)
+    dec = _decide("floatsd_matmul_dw", native, waste, backend)
+    xg_bytes = dict(
+        x_bytes=jnp.dtype(x.dtype).itemsize,
+        g_bytes=jnp.dtype(g.dtype).itemsize,
+    )
     if dec.backend == "ref":
-        return _dw_flush_telemetry(matmul_dw_ref(x2, g2, quant=quant), quant)
+        dw = matmul_dw_ref(x2, g2, quant=quant)
+        cost = fm_cost.matmul_dw_cost(
+            k, m, n, backend="ref", quant=quant,
+            out_bytes=jnp.dtype(dw.dtype).itemsize, **xg_bytes,
+        )
+        STATS.record(dec._replace(cost=cost))
+        STATS.add_touched("floatsd_matmul_dw", "ref", _nbytes(x2, g2, dw))
+        return _dw_flush_telemetry(dw, quant)
     xx, gg = x2, g2
     if dec.padded:
         xx = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
@@ -471,6 +651,13 @@ def matmul_dw(x, g, *, quant: bool = True, backend: str | None = None):
     bm, bn, bk = matmul_tiles(kp, np_, mp)
     dw = matmul_dw_pallas(xx, gg, bm=bm, bn=bn, bk=bk, quant=quant,
                           interpret=dec.interpret)
+    cost = fm_cost.matmul_dw_cost(
+        k, m, n, backend="pallas", quant=quant,
+        out_bytes=jnp.dtype(dw.dtype).itemsize,
+        padded=(kp, mp, np_), tiles=(bm, bn, bk), **xg_bytes,
+    )
+    STATS.record(dec._replace(cost=cost))
+    STATS.add_touched("floatsd_matmul_dw", "pallas", _nbytes(xx, gg, dw))
     if dec.padded:
         dw = dw[:k, :n]
     return _dw_flush_telemetry(dw, quant)
@@ -487,9 +674,25 @@ def lstm_cell_grad(z, c_prev, dh, dc, *, quantized: bool = True,
     bp, hp = _ceil_to(max(b, 1), 8), _ceil_to(max(h, 1), 128)
     native = (bp, hp) == (b, h)
     waste = (bp * hp) / max(b * h, 1)
-    dec = _choose("lstm_cell_grad", native, waste, backend)
+    dec = _decide("lstm_cell_grad", native, waste, backend)
+    in_bytes = dict(
+        z_bytes=jnp.dtype(z.dtype).itemsize,
+        c_in_bytes=jnp.dtype(c_prev.dtype).itemsize,
+        dh_bytes=jnp.dtype(dh.dtype).itemsize,
+        dc_bytes=jnp.dtype(dc.dtype).itemsize,
+    )
     if dec.backend == "ref":
-        return lstm_cell_bwd_ref(z, c_prev, dh, dc, quantized, c_dtype=c_dtype)
+        dz, dcp = lstm_cell_bwd_ref(z, c_prev, dh, dc, quantized,
+                                    c_dtype=c_dtype)
+        cost = lc_cost.lstm_cell_grad_cost(
+            b, h, backend="ref",
+            dz_bytes=jnp.dtype(dz.dtype).itemsize,
+            dcp_bytes=jnp.dtype(dcp.dtype).itemsize, **in_bytes,
+        )
+        STATS.record(dec._replace(cost=cost))
+        STATS.add_touched("lstm_cell_grad", "ref",
+                          _nbytes(z, c_prev, dh, dc, dz, dcp))
+        return dz, dcp
     zz, cc, dhh, dcc = z, c_prev, dh, dc
     if dec.padded:
         zz = jnp.pad(
@@ -503,10 +706,95 @@ def lstm_cell_grad(z, c_prev, dh, dc, *, quantized: bool = True,
         zz, cc, dhh, dcc, bb=bb, bh=bh, quantized=quantized, c_dtype=c_dtype,
         interpret=dec.interpret,
     )
+    cost = lc_cost.lstm_cell_grad_cost(
+        b, h, backend="pallas",
+        dz_bytes=jnp.dtype(dz.dtype).itemsize,
+        dcp_bytes=jnp.dtype(dcp.dtype).itemsize,
+        padded=(bp, hp), tiles=(bb, bh), **in_bytes,
+    )
+    STATS.record(dec._replace(cost=cost))
+    STATS.add_touched("lstm_cell_grad", "pallas",
+                      _nbytes(zz, cc, dhh, dcc, dz, dcp))
     if dec.padded:
         dz = dz.reshape(bp, 4, hp)[:b, :, :h].reshape(b, 4 * h)
         dcp = dcp[:b, :h]
     return dz, dcp
+
+
+# ---------------------------------------------------------------------------
+# sequence-mixing ops (model-zoo hot paths): rwkv wkv + flash attention.
+# These kernels have no padded path — indivisible shapes fall back to the
+# oracle (recorded, never silent), matching their ops.py wrappers.
+# ---------------------------------------------------------------------------
+
+
+def _decide_fallback(op: str, native: bool, why: str,
+                     backend: str | None) -> Decision:
+    """Resolution for ops without a padding path: pallas only when the
+    tiling divides natively, ref otherwise — with the fallback reason
+    recorded so a shape regression shows up in STATS, not in silence."""
+    pol = backend_policy(backend)
+    interp = interpret_mode()
+    if pol == "ref":
+        return Decision(op, "ref", False, False, "policy:ref")
+    if pol == "pallas":
+        if native:
+            return Decision(op, "pallas", interp, False, "policy:pallas")
+        return Decision(op, "ref", False, False,
+                        f"policy:pallas, but {why} -> ref oracle (no padded path)")
+    if interp:
+        return Decision(op, "ref", False, False,
+                        "auto:off-tpu (interpret is validation-only)")
+    if native:
+        return Decision(op, "pallas", False, False, "auto:tpu, native tiles")
+    return Decision(op, "ref", False, False,
+                    f"auto:{why} -> ref oracle (no padded path)")
+
+
+def rwkv_wkv(r, k, v, w, u, *, chunk: int = 16, backend: str | None = None):
+    """Chunked RWKV-6 wkv, backend-resolved: r/k/w [BH, S, K], v [BH, S, V],
+    u [BH, K] -> [BH, S, V]. Pallas keeps the [K, V] state in VMEM across
+    chunk steps; indivisible S falls back to the per-token oracle."""
+    bh, s, dk = r.shape
+    dv = v.shape[-1]
+    native = s > 0 and s % chunk == 0
+    dec = _decide_fallback("rwkv_wkv", native, f"S={s} % chunk={chunk}", backend)
+    cost = wkv_cost.wkv_cost(
+        bh, s, dk, dv, backend=dec.backend, chunk=chunk,
+        elem_bytes=jnp.dtype(r.dtype).itemsize,
+    )
+    y = wkv_op(r, k, v, w, u, chunk=chunk,
+               use_kernel=dec.backend == "pallas", interpret=dec.interpret)
+    STATS.record(dec._replace(cost=cost))
+    STATS.add_touched("rwkv_wkv", dec.backend, _nbytes(r, k, v, w, u, y))
+    return y
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    backend: str | None = None):
+    """Flash attention forward, backend-resolved: q [BH, Sq, D],
+    k/v [BH, Skv, D] -> [BH, Sq, D]. Pallas streams KV tiles against
+    VMEM-resident (m, l, acc) state; misaligned dims fall back to the
+    materialized-scores oracle."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    native = sq > 0 and sq % 8 == 0 and skv % 128 == 0 and d % 8 == 0
+    dec = _decide_fallback(
+        "flash_attention", native, f"Sq={sq}/Skv={skv}/D={d} misaligned",
+        backend,
+    )
+    bq, bk = flash_tiles(sq, skv) if native else (None, None)
+    cost = fa_cost.flash_attention_cost(
+        bh, sq, skv, d, backend=dec.backend, causal=causal, window=window,
+        elem_bytes=jnp.dtype(q.dtype).itemsize, bq=bq, bk=bk,
+    )
+    o = flash_attention_kernel(
+        q, k, v, causal=causal, window=window,
+        use_kernel=dec.backend == "pallas", interpret=dec.interpret,
+    )
+    STATS.record(dec._replace(cost=cost))
+    STATS.add_touched("flash_attention", dec.backend, _nbytes(q, k, v, o))
+    return o
 
 
 # ---------------------------------------------------------------------------
@@ -594,7 +882,18 @@ def _make_train_matmul_dense(backend: str | None):
 
     def bwd(res, g):
         x, wq = res
-        record("floatsd_matmul_dx", "ref", reason="train:hoisted-dense")
+        m = g.size // g.shape[-1]
+        k2, n2 = wq.shape
+        record(
+            "floatsd_matmul_dx", "ref", reason="train:hoisted-dense",
+            cost=fm_cost.matmul_like_cost(
+                m, n2, k2, backend="ref", a_bytes=4,
+                b_bytes=jnp.dtype(wq.dtype).itemsize, bias_bytes=0,
+                decode=False, o_bytes=jnp.dtype(x.dtype).itemsize,
+            ),
+        )
+        STATS.add_touched("floatsd_matmul_dx", "ref",
+                          _nbytes(g, wq) + m * k2 * jnp.dtype(x.dtype).itemsize)
         dx = jnp.dot(g, wq.T, preferred_element_type=jnp.float32).astype(x.dtype)
         dw = matmul_dw(x, g, backend=backend).astype(wq.dtype)
         return dx, dw
@@ -615,7 +914,18 @@ def train_matmul(x, w, wq, *, backend: str | None = None):
         return _make_train_matmul_packed(pol, jnp.dtype(w.dtype).name)(
             x, w, wq.codes, wq.bias
         )
-    record("floatsd_matmul", "ref", reason="train:hoisted-dense")
+    k2, n2 = wq.shape
+    m = x.size // max(k2, 1)
+    record(
+        "floatsd_matmul", "ref", reason="train:hoisted-dense",
+        cost=fm_cost.matmul_like_cost(
+            m, k2, n2, backend="ref",
+            a_bytes=jnp.dtype(x.dtype).itemsize,
+            b_bytes=jnp.dtype(wq.dtype).itemsize, bias_bytes=0,
+            decode=False, o_bytes=4,
+        ),
+    )
+    STATS.add_touched("floatsd_matmul", "ref", _nbytes(x, wq) + m * n2 * 4)
     return _make_train_matmul_dense(pol)(x, wq)
 
 
@@ -714,11 +1024,23 @@ def packed_einsum(eq: str, x, packed: PackedTensor, *, out_dtype=jnp.float32,
         raise NotImplementedError(f"packed_einsum does not support {eq!r}")
     dec_backend = backend_policy(backend)
     if dec_backend == "ref" or (dec_backend == "auto" and interpret_mode()):
-        record("floatsd_matmul", "ref", reason=f"policy:{dec_backend} (packed einsum)")
+        c = x.shape[-1]
+        n_free = packed.codes.shape[0 if transpose else 1]
+        record(
+            "floatsd_matmul", "ref",
+            reason=f"policy:{dec_backend} (packed einsum)",
+            cost=fm_cost.matmul_fwd_cost(
+                x.size // max(c, 1), c, n_free, backend="ref",
+                x_bytes=jnp.dtype(x.dtype).itemsize,
+                out_bytes=jnp.dtype(out_dtype).itemsize,
+            ),
+        )
         w = floatsd.decode(packed.codes, packed.bias, dtype=cast_dtype or jnp.float32)
         y = jnp.einsum(
             eq, x, w, preferred_element_type=jnp.float32
         ).astype(out_dtype)
+        STATS.add_touched("floatsd_matmul", "ref",
+                          _nbytes(x, packed.codes, packed.bias, y))
         return inference_only(y)
     codes = packed.codes.T if transpose else packed.codes
     # a non-f32 compute policy (e.g. floatsd8_tpu's bf16) keeps its issue
@@ -771,33 +1093,96 @@ def hoist_packed(w, *, m: int | None = None, dtype=None,
 
 @dataclasses.dataclass(frozen=True)
 class OpSpec:
-    """One dispatched op: its oracle, its Pallas kernel, and the resolved
-    public entry point (what the hot paths call)."""
+    """One dispatched op: its oracle, its Pallas kernel, the resolved
+    public entry point (what the hot paths call), and its declarative
+    cost model (the CostSpec contract — see kernels/README.md)."""
 
     name: str
     ref: Callable
     pallas: Callable
     dispatch: Callable
+    cost: costmodel.CostSpec | None = None
 
 
 REGISTRY: dict[str, OpSpec] = {}
 
 
-def register(name: str, ref: Callable, pallas: Callable, dispatch: Callable) -> None:
-    REGISTRY[name] = OpSpec(name, ref, pallas, dispatch)
+def register(name: str, ref: Callable, pallas: Callable, dispatch: Callable,
+             cost: costmodel.CostSpec | None = None) -> None:
+    REGISTRY[name] = OpSpec(name, ref, pallas, dispatch, cost)
 
 
-register("floatsd_matmul", floatsd_matmul_ref, floatsd_matmul_pallas, matmul)
-register("lstm_cell", lstm_cell_ref, lstm_cell_pallas, lstm_cell)
+register(
+    "floatsd_matmul", floatsd_matmul_ref, floatsd_matmul_pallas, matmul,
+    cost=costmodel.CostSpec(
+        "floatsd_matmul", fm_cost.matmul_fwd_cost,
+        "decode-in-VMEM GEMM: codes 1 byte/weight; pallas refetches x per "
+        "N-block and codes per M-block",
+    ),
+)
+register(
+    "lstm_cell", lstm_cell_ref, lstm_cell_pallas, lstm_cell,
+    cost=costmodel.CostSpec(
+        "lstm_cell", lc_cost.lstm_cell_cost,
+        "elementwise single-pass; 3 MACs/elem (Table-7 Eq.5-6 lanes), "
+        "c state in c_dtype (f16 blob)",
+    ),
+)
 register(
     "floatsd_quantize",
     lambda x, bias=None: floatsd.encode(x, bias),
     quantize_pallas,
     quantize,
+    cost=costmodel.CostSpec(
+        "floatsd_quantize", fq_cost.quantize_cost,
+        "elementwise encode f32 -> 1-byte codes, single pass",
+    ),
 )
-register("qsigmoid", qsigmoid_ref, qsigmoid_pallas, qsigmoid)
+register(
+    "qsigmoid", qsigmoid_ref, qsigmoid_pallas, qsigmoid,
+    cost=costmodel.CostSpec(
+        "qsigmoid", qs_cost.qsigmoid_cost,
+        "elementwise two-region LUT sigmoid, single pass",
+    ),
+)
 # backward op pairs: the training path's VJPs resolve through these, so the
 # whole BPTT step — not just inference — runs on registered kernels
-register("floatsd_matmul_dx", matmul_dx_ref, matmul_dx_pallas, matmul_dx)
-register("floatsd_matmul_dw", matmul_dw_ref, matmul_dw_pallas, matmul_dw)
-register("lstm_cell_grad", lstm_cell_bwd_ref, lstm_cell_bwd_pallas, lstm_cell_grad)
+register(
+    "floatsd_matmul_dx", matmul_dx_ref, matmul_dx_pallas, matmul_dx,
+    cost=costmodel.CostSpec(
+        "floatsd_matmul_dx", fm_cost.matmul_dx_cost,
+        "forward kernel on transposed codes; f32 compute",
+    ),
+)
+register(
+    "floatsd_matmul_dw", matmul_dw_ref, matmul_dw_pallas, matmul_dw,
+    cost=costmodel.CostSpec(
+        "floatsd_matmul_dw", fm_cost.matmul_dw_cost,
+        "dense f32 GEMM, M innermost, FP8-e5m2 quantizer at the flush",
+    ),
+)
+register(
+    "lstm_cell_grad", lstm_cell_bwd_ref, lstm_cell_bwd_pallas, lstm_cell_grad,
+    cost=costmodel.CostSpec(
+        "lstm_cell_grad", lc_cost.lstm_cell_grad_cost,
+        "recompute-gates backward; residuals are (z, c_prev) only",
+    ),
+)
+# sequence mixers from the model zoo: dispatched + costed like the LSTM
+# ops, but with oracle fallback (no padding path) on indivisible shapes
+register(
+    "rwkv_wkv", wkv_ref, wkv_pallas, rwkv_wkv,
+    cost=costmodel.CostSpec(
+        "rwkv_wkv", wkv_cost.wkv_cost,
+        "chunked scan, [K, V] f32 state resident in VMEM; single-pass HBM",
+    ),
+)
+register(
+    "flash_attention", flash_attention_ref, flash_attention_pallas,
+    flash_attention,
+    cost=costmodel.CostSpec(
+        "flash_attention", fa_cost.flash_attention_cost,
+        "online softmax; KV refetched per Q-block; masked-out pairs "
+        "charged to pad_waste_flops (kernel visits every tile)",
+    ),
+)

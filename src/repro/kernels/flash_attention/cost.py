@@ -1,0 +1,67 @@
+"""CostSpec for the flash-attention forward kernel.
+
+Shapes: q [BH, Sq, D], k/v [BH, Skv, D] -> o [BH, Sq, D].
+
+``attend_pairs`` counts the (query, key) pairs the mask actually admits —
+the algorithmic minimum the **ref** model charges. The **pallas** kernel
+visits every KV tile and masks with a ``where`` (no tile skipping), so it
+is charged the full Sq x Skv rectangle, with the masked-out share
+attributed to ``pad_waste_flops`` — on a long causal sequence that track
+reads ~50% waste, which is the tile-skipping optimization the ledger
+exists to motivate.
+
+Traffic (grid ``(BH, Sq/bq, Skv/bk)``, KV innermost): q and o move once;
+k and v are re-fetched once per q-block (``Sq/bq`` visits). Score and
+probability tiles never leave VMEM.
+"""
+from __future__ import annotations
+
+from ...obs.costmodel import Cost
+
+__all__ = ["attend_pairs", "flash_attention_cost"]
+
+SOFTMAX_FLOPS_PER_PAIR = 6  # max, sub, exp, sum-add, rescale mul, mask
+
+
+def attend_pairs(sq: int, skv: int, causal: bool, window: int | None) -> int:
+    """Exact count of (q, k) pairs the mask admits, matching the kernel's
+    absolute-position masking: ``k <= q`` when causal, ``q - k < window``."""
+    total = 0
+    for q in range(sq):
+        hi = min(skv - 1, q) if causal else skv - 1
+        lo = max(0, q - window + 1) if window is not None else 0
+        total += max(hi - lo + 1, 0)
+    return total
+
+
+def flash_attention_cost(bh: int, sq: int, skv: int, d: int, *, backend: str,
+                         causal: bool = True, window: int | None = None,
+                         elem_bytes: int = 4,
+                         bq: int | None = None, bk: int | None = None) -> Cost:
+    pairs = attend_pairs(sq, skv, causal, window)
+    write = bh * sq * d * elem_bytes
+    if backend == "ref":
+        macs = 2 * bh * pairs * d  # QK^T + PV
+        return Cost(
+            flops=2 * macs + bh * (SOFTMAX_FLOPS_PER_PAIR * pairs + 2 * sq * d),
+            macs=macs,
+            hbm_read_bytes=bh * (sq + 2 * skv) * d * elem_bytes,
+            hbm_write_bytes=write,
+        )
+    assert bq is not None and bk is not None
+    full = sq * skv
+    macs = 2 * bh * full * d
+    return Cost(
+        flops=2 * macs + bh * (SOFTMAX_FLOPS_PER_PAIR * full + 2 * sq * d),
+        macs=macs,
+        hbm_read_bytes=bh * (sq * d + 2 * (sq // bq) * skv * d) * elem_bytes,
+        hbm_write_bytes=write,
+        vmem_bytes=(
+            (bq + 2 * bk) * d * elem_bytes  # q + k + v tiles
+            + bq * bk * 4  # score/probability tile
+            + bq * (d + 2) * 4  # (acc, m, l) scratch
+            + bq * d * elem_bytes  # output tile
+        ),
+        # masked-out pairs the kernel computes anyway (no tile skipping)
+        pad_waste_flops=(4 * d + SOFTMAX_FLOPS_PER_PAIR) * bh * (full - pairs),
+    )

@@ -9,7 +9,21 @@ import jax.numpy as jnp
 from .kernel import flash_attention_pallas
 from .ref import flash_attention_ref
 
-__all__ = ["flash_attention_kernel"]
+__all__ = ["flash_attention_kernel", "flash_tiles"]
+
+
+def flash_tiles(sq: int, skv: int) -> tuple[int, int]:
+    """(bq, bk) the kernel path will use: largest power-of-two blocks
+    dividing the sequence dims, capped at (256, 512). Shared with the
+    dispatch layer's cost model so predicted VMEM/traffic can never
+    diverge from the launched grid."""
+    bq = 8
+    while sq % (bq * 2) == 0 and bq < 256:
+        bq *= 2
+    bk = 128
+    while skv % (bk * 2) == 0 and bk < 512:
+        bk *= 2
+    return bq, bk
 
 
 @functools.partial(
@@ -26,12 +40,7 @@ def flash_attention_kernel(
     skv = k.shape[1]
     if not use_kernel or sq % 8 or skv % 128 or d % 8:
         return flash_attention_ref(q, k, v, causal, window)
-    bq = 8
-    while sq % (bq * 2) == 0 and bq < 256:
-        bq *= 2
-    bk = 128
-    while skv % (bk * 2) == 0 and bk < 512:
-        bk *= 2
+    bq, bk = flash_tiles(sq, skv)
     return flash_attention_pallas(
         q, k, v, bq=bq, bk=bk, causal=causal, window=window, interpret=interpret
     )

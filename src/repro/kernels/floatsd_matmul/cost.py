@@ -1,0 +1,136 @@
+"""CostSpec for the FloatSD8 matmul family (fwd / dx / dw).
+
+One generic matmul-shaped model covers all three ops; they differ only in
+which operand is the 1-byte packed codes, the contraction axis, and the
+extra per-output work (the dw kernel's in-flush FP8 quantizer).
+
+Traffic model (see the kernel docstrings for the grids):
+
+  * **ref** — each operand read exactly once, the output written once:
+    ``m*c*a_bytes + c*n*b_bytes + bias`` read, ``m*n*o_bytes`` written.
+    The oracle's decode intermediate is XLA-fusible and excluded (the
+    CostSpec contract), so ref predictions equal the ndarray ``nbytes``
+    the dispatch actually touches — tolerance 0, tested.
+  * **pallas** — output-stationary grid ``(M/bm, N/bn, C/bk)`` with the
+    contraction innermost: the A tile is re-fetched once per N-block
+    (``N/bn`` visits over the full A), the B tile once per M-block
+    (``M/bm`` visits), the output written once. Padded dims are charged
+    in full; the unique-byte and FLOP deltas vs the exact shape land in
+    ``pad_waste_*``.
+  * **VMEM** per grid step: A tile + B tile (+ the decoded-code tile in
+    ``compute_dtype`` when the kernel decodes in VMEM) + the f32
+    accumulator + the output tile.
+
+FLOP constants: 2 FLOPs/MAC; ``DECODE_FLOPS_PER_CODE`` covers the
+FloatSD8 code -> value unpack (mantissa LUT gather + exponent shift);
+``FP8_QUANT_FLOPS_PER_OUT`` the dw flush's clamp+round.
+"""
+from __future__ import annotations
+
+from ...obs.costmodel import Cost
+
+__all__ = [
+    "matmul_like_cost", "matmul_fwd_cost", "matmul_dx_cost",
+    "matmul_dw_cost", "DECODE_FLOPS_PER_CODE", "FP8_QUANT_FLOPS_PER_OUT",
+]
+
+DECODE_FLOPS_PER_CODE = 4  # mask+gather mantissa, shift by (e - bias), scale
+FP8_QUANT_FLOPS_PER_OUT = 3  # clamp to +-57344, round-to-nearest-even cast
+
+
+def matmul_like_cost(
+    m: int, c: int, n: int, *, backend: str,
+    a_bytes: int = 4, b_bytes: int = 1, o_bytes: int = 4,
+    bias_bytes: int = 4, compute_bytes: int = 4, decode: bool = True,
+    quant_flops_per_out: int = 0,
+    padded: tuple[int, int, int] | None = None,
+    tiles: tuple[int, int, int] | None = None,
+) -> Cost:
+    """[m, c] x [c, n] -> [m, n]; ``c`` is the contraction axis.
+
+    ``padded``/``tiles`` are required on the pallas backend:
+    ``padded = (mp, cp, np)`` and ``tiles = (bm, bn, bk)`` with ``bm | mp``,
+    ``bn | np``, ``bk | cp`` — exactly what ``dispatch.matmul_tiles``
+    resolved for the (padded) call."""
+    macs_exact = m * c * n
+    if backend == "ref":
+        flops = 2 * macs_exact + quant_flops_per_out * m * n
+        if decode:
+            flops += DECODE_FLOPS_PER_CODE * c * n
+        return Cost(
+            flops=flops,
+            macs=macs_exact,
+            hbm_read_bytes=m * c * a_bytes + c * n * b_bytes + bias_bytes,
+            hbm_write_bytes=m * n * o_bytes,
+        )
+    assert padded is not None and tiles is not None, (
+        "pallas matmul cost needs the padded dims and tile config"
+    )
+    mp, cp, np_ = padded
+    bm, bn, bk = tiles
+    macs = mp * cp * np_
+    b_fetches = (mp // bm) * cp * np_  # B re-fetched once per M-block
+    flops = 2 * macs + quant_flops_per_out * mp * np_
+    if decode:
+        flops += DECODE_FLOPS_PER_CODE * b_fetches  # decode happens per fetch
+    read = (np_ // bn) * mp * cp * a_bytes + b_fetches * b_bytes + bias_bytes
+    write = mp * np_ * o_bytes
+    vmem = (
+        bm * bk * a_bytes
+        + bk * bn * b_bytes
+        + (bk * bn * compute_bytes if decode else 0)
+        + bm * bn * 4  # f32 accumulator scratch
+        + bm * bn * o_bytes
+    )
+    return Cost(
+        flops=flops,
+        macs=macs,
+        hbm_read_bytes=read,
+        hbm_write_bytes=write,
+        vmem_bytes=vmem,
+        pad_waste_flops=2 * (macs - macs_exact),
+        pad_waste_bytes=(
+            (mp * cp - m * c) * a_bytes
+            + (cp * np_ - c * n) * b_bytes
+            + (mp * np_ - m * n) * o_bytes
+        ),
+    )
+
+
+def matmul_fwd_cost(m: int, k: int, n: int, *, backend: str,
+                    x_bytes: int = 4, out_bytes: int = 4,
+                    compute_bytes: int = 4, codes_bytes: int = 1,
+                    padded=None, tiles=None) -> Cost:
+    """x [m, k] @ decode(codes [k, n]) -> [m, n]."""
+    return matmul_like_cost(
+        m, k, n, backend=backend, a_bytes=x_bytes, b_bytes=codes_bytes,
+        o_bytes=out_bytes, compute_bytes=compute_bytes, decode=True,
+        padded=padded, tiles=tiles,
+    )
+
+
+def matmul_dx_cost(m: int, n: int, k: int, *, backend: str,
+                   g_bytes: int = 4, out_bytes: int = 4,
+                   padded=None, tiles=None) -> Cost:
+    """g [m, n] @ decode(codes [k, n])^T -> dx [m, k]; contraction over n.
+    The pallas path reuses the forward kernel on the transposed codes, so
+    the model is the forward model with (c, n) = (n, k)."""
+    return matmul_like_cost(
+        m, n, k, backend=backend, a_bytes=g_bytes, b_bytes=1,
+        o_bytes=out_bytes, compute_bytes=4, decode=True,
+        padded=padded, tiles=tiles,
+    )
+
+
+def matmul_dw_cost(k: int, m: int, n: int, *, backend: str,
+                   x_bytes: int = 4, g_bytes: int = 4, out_bytes: int = 4,
+                   quant: bool = True, padded=None, tiles=None) -> Cost:
+    """x [m, k]^T @ g [m, n] -> dw [k, n]; contraction over m (the grid is
+    ``(k/bm, n/bn, m/bk)`` — M innermost). Both operands are dense f32;
+    ``quant`` adds the in-flush FP8 quantizer's per-output work."""
+    return matmul_like_cost(
+        k, m, n, backend=backend, a_bytes=x_bytes, b_bytes=g_bytes,
+        o_bytes=out_bytes, bias_bytes=0, decode=False,
+        quant_flops_per_out=FP8_QUANT_FLOPS_PER_OUT if quant else 0,
+        padded=padded, tiles=tiles,
+    )

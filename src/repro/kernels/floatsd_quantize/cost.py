@@ -1,0 +1,36 @@
+"""CostSpec for the FloatSD8 encoder: f32 -> 1-byte codes.
+
+Elementwise over the flattened tensor; the pallas path reshapes to
+[rows, 256] padded to ``8*256`` multiples. Per element the encoder does a
+binary search over the 31-entry mantissa grid (~5 compares), exponent
+extraction, and the bias shift — ``QUANT_FLOPS_PER_ELEM`` is that model
+constant. Output is 1 byte/weight: this op is where the paper's 4x
+resident-byte shrink enters the ledger.
+"""
+from __future__ import annotations
+
+from ...obs.costmodel import Cost
+
+__all__ = ["quantize_cost", "QUANT_FLOPS_PER_ELEM"]
+
+QUANT_FLOPS_PER_ELEM = 12  # ~5-compare search over 31 mantissas + exp/bias
+
+
+def quantize_cost(n: int, *, backend: str, x_bytes: int = 4,
+                  bias_bytes: int = 4, padded_n: int | None = None,
+                  tile_rows: int | None = None) -> Cost:
+    if backend == "ref":
+        return Cost(
+            flops=QUANT_FLOPS_PER_ELEM * n,
+            hbm_read_bytes=n * x_bytes + bias_bytes,
+            hbm_write_bytes=n * 1,
+        )
+    assert padded_n is not None and tile_rows is not None
+    return Cost(
+        flops=QUANT_FLOPS_PER_ELEM * padded_n,
+        hbm_read_bytes=padded_n * x_bytes + bias_bytes,
+        hbm_write_bytes=padded_n * 1,
+        vmem_bytes=tile_rows * 256 * (x_bytes + 1) + bias_bytes,
+        pad_waste_flops=QUANT_FLOPS_PER_ELEM * (padded_n - n),
+        pad_waste_bytes=(padded_n - n) * (x_bytes + 1),
+    )

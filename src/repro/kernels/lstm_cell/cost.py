@@ -1,0 +1,99 @@
+"""CostSpec for the fused LSTM cell (fwd + recompute-gates grad).
+
+Elementwise over [B, H]; single-pass traffic on both backends (grid
+``(B/bb, H/bh)``, every operand block visited exactly once).
+
+MAC counts are the paper's Table-7 elementwise lanes: Eq. (5)
+``c = f*c_prev + i*g`` is 2 MACs/element and Eq. (6) ``h = o*tanh(c)``
+1 more — ``CELL_MACS_PER_ELEM = 3``. The FLOP constants cover the
+non-MAC work: 3 quantized sigmoids (the paper's 42-boundary two-region
+LUT: 42 compares + 1 select each) and 2 tanh evaluations (~8 ops of
+polynomial/rational approximation each).
+
+The backward recomputes the gates from the (z, c_prev) residuals (the
+forward constant again) and then runs the product-rule chain: 6 more
+MACs/element (d-gate products, dc recurrence) and ~30 ops of sigmoid'/
+tanh' arithmetic.
+"""
+from __future__ import annotations
+
+from ...obs.costmodel import Cost
+
+__all__ = [
+    "lstm_cell_cost", "lstm_cell_grad_cost",
+    "CELL_MACS_PER_ELEM", "CELL_FLOPS_PER_ELEM",
+    "GRAD_MACS_PER_ELEM", "GRAD_FLOPS_PER_ELEM",
+]
+
+QSIG_FLOPS = 43  # 42 region-boundary compares + 1 select (two-region LUT)
+TANH_FLOPS = 8
+
+CELL_MACS_PER_ELEM = 3  # Eq.5: f*c + i*g (2), Eq.6: o*tanh(c) (1)
+CELL_FLOPS_PER_ELEM = 3 * QSIG_FLOPS + 2 * TANH_FLOPS + 2 * CELL_MACS_PER_ELEM
+
+GRAD_MACS_PER_ELEM = CELL_MACS_PER_ELEM + 6  # recompute + product-rule chain
+GRAD_FLOPS_PER_ELEM = CELL_FLOPS_PER_ELEM + 2 * 6 + 30  # + sigmoid'/tanh'
+
+
+def _cell_cost(b: int, h: int, *, read_per_elem_h: int, write_per_elem_h: int,
+               z_bytes: int, macs_per_elem: int, flops_per_elem: int,
+               backend: str, padded=None, tiles=None) -> Cost:
+    """Shared shape: z [b, 4h] plus ``read_per_elem_h`` bytes of [b, h]
+    reads and ``write_per_elem_h`` bytes of per-element writes (dz counts
+    under z_bytes-shaped writes handled by the callers)."""
+    def passes(bb: int, hh: int) -> tuple[int, int]:
+        elems = bb * hh
+        return (
+            elems * 4 * z_bytes + elems * read_per_elem_h,
+            elems * write_per_elem_h,
+        )
+
+    r_exact, w_exact = passes(b, h)
+    if backend == "ref":
+        return Cost(
+            flops=flops_per_elem * b * h,
+            macs=macs_per_elem * b * h,
+            hbm_read_bytes=r_exact,
+            hbm_write_bytes=w_exact,
+        )
+    assert padded is not None and tiles is not None
+    bp, hp = padded
+    bb, bh = tiles
+    r_pad, w_pad = passes(bp, hp)
+    r_tile, w_tile = passes(bb, bh)
+    return Cost(
+        flops=flops_per_elem * bp * hp,
+        macs=macs_per_elem * bp * hp,
+        hbm_read_bytes=r_pad,
+        hbm_write_bytes=w_pad,
+        # input tiles + output tiles + the 4 regrouped f32 gate tiles
+        vmem_bytes=r_tile + w_tile + 4 * bb * bh * 4,
+        pad_waste_flops=flops_per_elem * (bp * hp - b * h),
+        pad_waste_bytes=(r_pad - r_exact) + (w_pad - w_exact),
+    )
+
+
+def lstm_cell_cost(b: int, h: int, *, backend: str, z_bytes: int = 4,
+                   c_in_bytes: int = 2, h_out_bytes: int = 4,
+                   c_out_bytes: int = 2, padded=None, tiles=None) -> Cost:
+    """z [b, 4h], c_prev [b, h] -> h [b, h], c [b, h] (c in ``c_dtype``,
+    f16 by default — the serving state blob)."""
+    return _cell_cost(
+        b, h, read_per_elem_h=c_in_bytes,
+        write_per_elem_h=h_out_bytes + c_out_bytes, z_bytes=z_bytes,
+        macs_per_elem=CELL_MACS_PER_ELEM, flops_per_elem=CELL_FLOPS_PER_ELEM,
+        backend=backend, padded=padded, tiles=tiles,
+    )
+
+
+def lstm_cell_grad_cost(b: int, h: int, *, backend: str, z_bytes: int = 4,
+                        c_in_bytes: int = 2, dh_bytes: int = 4,
+                        dc_bytes: int = 4, dz_bytes: int = 4,
+                        dcp_bytes: int = 4, padded=None, tiles=None) -> Cost:
+    """(z, c_prev, dh, dc) -> (dz [b, 4h], dc_prev [b, h])."""
+    return _cell_cost(
+        b, h, read_per_elem_h=c_in_bytes + dh_bytes + dc_bytes,
+        write_per_elem_h=4 * dz_bytes + dcp_bytes, z_bytes=z_bytes,
+        macs_per_elem=GRAD_MACS_PER_ELEM, flops_per_elem=GRAD_FLOPS_PER_ELEM,
+        backend=backend, padded=padded, tiles=tiles,
+    )

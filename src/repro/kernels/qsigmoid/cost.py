@@ -1,0 +1,33 @@
+"""CostSpec for the two-region quantized sigmoid.
+
+Elementwise over the flattened tensor ([rows, 256] padded to ``8*256``
+multiples on pallas). Per element: the paper's 42-boundary two-region
+LUT — 42 compares + 1 select (``QSIG_FLOPS_PER_ELEM``).
+"""
+from __future__ import annotations
+
+from ...obs.costmodel import Cost
+
+__all__ = ["qsigmoid_cost", "QSIG_FLOPS_PER_ELEM"]
+
+QSIG_FLOPS_PER_ELEM = 43  # 42 region-boundary compares + 1 select
+
+
+def qsigmoid_cost(n: int, *, backend: str, x_bytes: int = 4,
+                  y_bytes: int = 4, padded_n: int | None = None,
+                  tile_rows: int | None = None) -> Cost:
+    if backend == "ref":
+        return Cost(
+            flops=QSIG_FLOPS_PER_ELEM * n,
+            hbm_read_bytes=n * x_bytes,
+            hbm_write_bytes=n * y_bytes,
+        )
+    assert padded_n is not None and tile_rows is not None
+    return Cost(
+        flops=QSIG_FLOPS_PER_ELEM * padded_n,
+        hbm_read_bytes=padded_n * x_bytes,
+        hbm_write_bytes=padded_n * y_bytes,
+        vmem_bytes=tile_rows * 256 * (x_bytes + y_bytes),
+        pad_waste_flops=QSIG_FLOPS_PER_ELEM * (padded_n - n),
+        pad_waste_bytes=(padded_n - n) * (x_bytes + y_bytes),
+    )

@@ -1,0 +1,57 @@
+"""CostSpec for the chunked RWKV-6 wkv kernel.
+
+Shapes: r/k/w [BH, S, K], v [BH, S, V], u [BH, K] -> y [BH, S, V].
+
+  * **ref** (per-token scan): each step builds the k v^T outer product
+    (K*V MACs), contracts r against the state (K*V MACs), and applies the
+    diagonal decay + bonus (~4 more ops per state element). Traffic is
+    single-pass over every operand.
+  * **pallas** (chunk L resident in VMEM, grid ``(BH, S/L)``): the
+    inter-chunk term and the state update are two L x K x V contractions
+    per chunk, plus the intra-chunk attention tile — L*L*K for the decay-
+    weighted A matrix and L*L*V for A @ v. Traffic is the same single
+    pass (every block visited once; the [K, V] state never leaves VMEM —
+    that is the kernel's point), but the working set now includes the
+    f32 state scratch and the [L, L, K] decay intermediate.
+"""
+from __future__ import annotations
+
+from ...obs.costmodel import Cost
+
+__all__ = ["wkv_cost"]
+
+
+def wkv_cost(bh: int, s: int, dk: int, dv: int, *, backend: str,
+             chunk: int = 16, elem_bytes: int = 4) -> Cost:
+    io = Cost(
+        hbm_read_bytes=(bh * s * (3 * dk + dv) + bh * dk) * elem_bytes,
+        hbm_write_bytes=bh * s * dv * elem_bytes,
+    )
+    if backend == "ref":
+        macs = 2 * bh * s * dk * dv
+        return Cost(
+            flops=2 * macs + 4 * bh * s * dk * dv + 2 * bh * s * dk,
+            macs=macs,
+            hbm_read_bytes=io.hbm_read_bytes,
+            hbm_write_bytes=io.hbm_write_bytes,
+        )
+    nchunks = s // chunk
+    macs = bh * nchunks * (
+        2 * chunk * dk * dv  # inter-chunk y and the state update
+        + chunk * chunk * (dk + dv)  # intra tile: A build + A @ v
+    )
+    # exp/cumsum decay arithmetic: the [L, L, K] ldiff tile + per-row terms
+    exp_flops = bh * nchunks * (3 * chunk * chunk * dk + 6 * chunk * dk)
+    return Cost(
+        flops=2 * macs + exp_flops,
+        macs=macs,
+        hbm_read_bytes=io.hbm_read_bytes,
+        hbm_write_bytes=io.hbm_write_bytes,
+        vmem_bytes=(
+            chunk * (3 * dk + dv) * elem_bytes  # r/k/w + v chunk tiles
+            + dk * elem_bytes  # u
+            + dk * dv * 4  # f32 state scratch
+            + chunk * chunk * dk * 4  # ldiff/A intermediate
+            + chunk * dv * (4 + elem_bytes)  # y accumulator + out tile
+        ),
+    )

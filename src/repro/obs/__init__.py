@@ -8,11 +8,15 @@ Two halves, split by dependency weight:
   * ``obs.telemetry`` (imports jax): FP8/FloatSD quantization-health stats
     computed inside the train step, the host-side kernel-event sink, and
     the ``TrainTelemetry`` JSONL logger.
+  * ``obs.costmodel`` (stdlib-only): the analytical kernel cost model —
+    ``Cost``/``CostSpec``/``CostLedger`` — joined per (op, backend) with
+    the measured side in ``kernels.dispatch.LEDGER``.
 
 Import the submodules directly on hot paths (``from repro.obs import
 trace``); this package root re-exports the common names for convenience
 and therefore pulls jax.
 """
+from .costmodel import Cost, CostLedger, CostSpec  # noqa: F401
 from .trace import TRACER, Tracer  # noqa: F401
 from .telemetry import (  # noqa: F401
     KERNEL_STATS,
@@ -27,6 +31,9 @@ from .telemetry import (  # noqa: F401
 __all__ = [
     "TRACER",
     "Tracer",
+    "Cost",
+    "CostSpec",
+    "CostLedger",
     "KERNEL_STATS",
     "KernelStats",
     "TelemetryLogger",

@@ -1,0 +1,233 @@
+"""Analytical kernel cost model: the op/byte ledger behind the observatory.
+
+Every registered kernel package contributes a :class:`CostSpec` — a
+closed-form model of FLOPs, HBM bytes read/written, and VMEM working set as
+functions of the call shape, tile config, and compute dtype — registered
+alongside its ops in ``kernels/dispatch.py``. Each dispatch ``Decision``
+then carries a :class:`Cost`, and :class:`CostLedger` joins the predicted
+side (accumulated at trace time in ``dispatch.STATS``) with the measured
+side (wall-time fed by the benchmarks, unique bytes touched computed from
+the actual arrays) into one table per ``(op, backend)``.
+
+Model conventions (the "CostSpec contract", see kernels/README.md):
+
+  * **HBM bytes count operands and results only** — packed FloatSD8 codes
+    are 1 byte/weight, FP8 state blobs 1 byte/element, and XLA-fusible
+    intermediates (the ref oracle's decode, score matrices) are excluded.
+    On the **ref backend the model is exact**: predicted read+write equals
+    the ``nbytes`` of the ndarrays the dispatch actually handed to the
+    oracle plus its outputs (asserted by the parity grid and a hypothesis
+    property test, tolerance 0).
+  * **Pallas traffic includes grid revisits**: a tile re-fetched once per
+    grid step that revisits it is charged each time (e.g. the matmul
+    kernel's x tile is fetched once per N-block). Padded dims are charged
+    in full, with the delta vs the exact shape attributed to
+    ``pad_waste_*`` explicitly.
+  * **FLOPs are model constants, not measurements**: 2 FLOPs per MAC plus
+    documented per-element constants for LUT/transcendental work. ``macs``
+    is kept as its own field because the paper's Table 7 argues in MACs —
+    ``benchmarks/table7_mac.py`` and this module must agree (tested).
+  * **VMEM working set** is the peak resident bytes per grid step: input
+    tiles + output tile + scratch accumulators + the largest intermediate
+    the kernel materializes. Zero on ref (XLA owns the working set).
+
+Stdlib + dataclasses only: ``kernels/dispatch.py`` imports this module at
+import time, but the serving scrape path also reads ledgers host-side, so
+it must stay jax-free (same rule as ``obs/trace.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+from typing import Any, Callable, Optional
+
+__all__ = ["Cost", "CostSpec", "CostLedger", "merge_costs", "ZERO_COST"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Cost:
+    """Predicted cost of one op call (or a sum of calls; ``vmem_bytes``
+    merges as a max — it is a per-call peak, not a flow)."""
+
+    flops: int = 0  # total floating-point ops (2 per MAC + model constants)
+    macs: int = 0  # multiply-accumulates (the paper's Table-7 unit)
+    hbm_read_bytes: int = 0  # operand traffic incl. grid revisits
+    hbm_write_bytes: int = 0  # result traffic
+    vmem_bytes: int = 0  # peak per-grid-step working set (0 on ref)
+    pad_waste_flops: int = 0  # flops spent on tile-alignment padding
+    pad_waste_bytes: int = 0  # unique padded bytes beyond the exact shape
+
+    @property
+    def hbm_bytes(self) -> int:
+        return self.hbm_read_bytes + self.hbm_write_bytes
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        """FLOPs per HBM byte — the roofline x-coordinate."""
+        return self.flops / self.hbm_bytes if self.hbm_bytes else 0.0
+
+    def __add__(self, other: "Cost") -> "Cost":
+        return merge_costs(self, other)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hbm_bytes"] = self.hbm_bytes
+        d["arithmetic_intensity"] = self.arithmetic_intensity
+        return d
+
+
+ZERO_COST = Cost()
+
+
+def merge_costs(a: Cost, b: Cost) -> Cost:
+    """Accumulate two costs: flows sum, the VMEM peak takes the max."""
+    return Cost(
+        flops=a.flops + b.flops,
+        macs=a.macs + b.macs,
+        hbm_read_bytes=a.hbm_read_bytes + b.hbm_read_bytes,
+        hbm_write_bytes=a.hbm_write_bytes + b.hbm_write_bytes,
+        vmem_bytes=max(a.vmem_bytes, b.vmem_bytes),
+        pad_waste_flops=a.pad_waste_flops + b.pad_waste_flops,
+        pad_waste_bytes=a.pad_waste_bytes + b.pad_waste_bytes,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class CostSpec:
+    """The declarative cost model one kernel package registers.
+
+    ``fn`` is the package's cost function (``<package>/cost.py``); its
+    signature is op-specific — shape dims plus ``backend=`` and whatever
+    tile/dtype knobs the dispatch resolved — and it must return a
+    :class:`Cost`. ``notes`` documents the model's assumptions (revisit
+    factors, per-element FLOP constants) for the ledger reader."""
+
+    op: str
+    fn: Callable[..., Cost]
+    notes: str = ""
+
+
+class CostLedger:
+    """Joins predicted (dispatch-time) and measured (bench-time) cost per
+    ``(op, backend)``.
+
+    The predicted side accumulates in the stats sink as ops are traced;
+    the measured side is optional — per-op wall-time is only honest at
+    microbenchmark granularity, so ``bench_kernels.py --ledger`` feeds it
+    via ``STATS.add_time`` while serving/training ledgers carry the
+    predicted columns and the unique-bytes cross-check only."""
+
+    def __init__(self, stats: Any):
+        self._stats = stats  # duck-typed: DispatchStats-shaped
+        self._lock = threading.Lock()
+
+    # -- joined rows ------------------------------------------------------
+    def rows(self) -> list[dict]:
+        """One dict per (op, backend), sorted, with predicted totals,
+        touched-byte cross-check, and measured wall-time when present."""
+        snap = self._stats.cost_snapshot()
+        out = []
+        for (op, backend) in sorted(snap.keys()):
+            entry = snap[(op, backend)]
+            cost: Cost = entry["cost"]
+            calls = entry["calls"]
+            touched = entry["touched_bytes"]
+            timed_calls, wall_s = entry["timed_calls"], entry["wall_s"]
+            row = {
+                "op": op,
+                "backend": backend,
+                "calls": calls,
+                **cost.to_dict(),
+                "touched_bytes": touched,
+            }
+            # predicted-vs-touched delta is only meaningful on ref, where
+            # the model counts each operand exactly once (no revisits)
+            if backend == "ref" and touched:
+                row["bytes_rel_err"] = (cost.hbm_bytes - touched) / touched
+            else:
+                row["bytes_rel_err"] = None
+            row["timed_calls"] = timed_calls
+            row["wall_s"] = wall_s
+            if timed_calls and wall_s > 0 and calls:
+                per_call = cost.flops / calls
+                row["measured_flops_per_s"] = per_call * timed_calls / wall_s
+                per_call_b = cost.hbm_bytes / calls
+                row["measured_bytes_per_s"] = per_call_b * timed_calls / wall_s
+            else:
+                row["measured_flops_per_s"] = None
+                row["measured_bytes_per_s"] = None
+            out.append(row)
+        return out
+
+    # -- trace counter tracks ---------------------------------------------
+    def emit_counters(self, tracer=None) -> int:
+        """Emit one ``cost.<op>`` counter sample per op (summed across
+        backends) onto the trace — monotone totals, so Perfetto renders
+        cumulative FLOP/byte tracks next to the span rows. Returns the
+        number of tracks emitted."""
+        if tracer is None:
+            from .trace import TRACER as tracer  # lazy: avoid import cycles
+        if not tracer.enabled:
+            return 0
+        per_op: dict[str, dict] = {}
+        for row in self.rows():
+            agg = per_op.setdefault(
+                row["op"], {"flops": 0, "hbm_bytes": 0, "calls": 0}
+            )
+            agg["flops"] += row["flops"]
+            agg["hbm_bytes"] += row["hbm_bytes"]
+            agg["calls"] += row["calls"]
+        for op, agg in sorted(per_op.items()):
+            tracer.counter(f"cost.{op}", "cost", **agg)
+        return len(per_op)
+
+    # -- human / machine output -------------------------------------------
+    def table(self) -> str:
+        """Aligned text table (the ``--ledger`` console artifact)."""
+        rows = self.rows()
+        if not rows:
+            return "(cost ledger empty: no dispatch decisions recorded)"
+        headers = [
+            "op", "backend", "calls", "GFLOP", "MB read", "MB write",
+            "AI", "waste%", "VMEM KB", "GFLOP/s", "bytes ok",
+        ]
+        body = []
+        for r in rows:
+            waste = (
+                r["pad_waste_bytes"] / r["hbm_bytes"] * 100
+                if r["hbm_bytes"] else 0.0
+            )
+            meas = r["measured_flops_per_s"]
+            if r["bytes_rel_err"] is None:
+                ok = "-"
+            else:
+                ok = f"{r['bytes_rel_err']:+.1%}" if r["bytes_rel_err"] else "exact"
+            body.append([
+                r["op"], r["backend"], str(r["calls"]),
+                f"{r['flops'] / 1e9:.3f}",
+                f"{r['hbm_read_bytes'] / 1e6:.3f}",
+                f"{r['hbm_write_bytes'] / 1e6:.3f}",
+                f"{r['arithmetic_intensity']:.2f}",
+                f"{waste:.1f}",
+                f"{r['vmem_bytes'] / 1024:.1f}",
+                f"{meas / 1e9:.2f}" if meas else "-",
+                ok,
+            ])
+        widths = [
+            max(len(h), *(len(row[i]) for row in body))
+            for i, h in enumerate(headers)
+        ]
+        fmt = "  ".join(f"{{:<{w}}}" for w in widths)
+        lines = [fmt.format(*headers), fmt.format(*("-" * w for w in widths))]
+        lines += [fmt.format(*row) for row in body]
+        return "\n".join(lines)
+
+    def to_json(self, meta: Optional[dict] = None) -> dict:
+        """The ``--ledger`` JSON artifact (and ``check_bench.py`` input)."""
+        return {"meta": meta or {}, "rows": self.rows()}
+
+    def dump(self, path: str, meta: Optional[dict] = None) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(meta), f, indent=1, sort_keys=True)
+            f.write("\n")

@@ -44,9 +44,10 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from ...kernels import dispatch as kernel_dispatch
 from ...obs.trace import TRACER
 from ..engine import ServeEngine
-from ..metrics import phase_summary, tenant_summary
+from ..metrics import LatencyHistogram, phase_summary, tenant_summary
 from ..scheduler import Request, Scheduler
 
 __all__ = ["Ticket", "Router", "AsyncRouter", "RequestRejected"]
@@ -377,6 +378,11 @@ class Router:
                 if e.has_work():
                     progressed = e.step_once() or progressed
             self._deliver()
+            if TRACER.enabled:
+                # predicted-cost counter tracks (cost.<op>) alongside the
+                # pump spans, so the trace viewer shows analytical
+                # FLOPs/bytes accumulating against wall time
+                kernel_dispatch.LEDGER.emit_counters(TRACER)
         return progressed or bool(self._queue) or bool(self._inflight)
 
     def drain(self) -> None:
@@ -448,6 +454,14 @@ class Router:
             for t, acct in sorted(self.tenants.items())
         }
         summed["phases"] = phase_summary(records)
+        # cumulative histograms sum elementwise across replicas (identical
+        # bucket bounds), staying monotonic for Prometheus `le` series
+        summed["ttft_hist_ms"] = LatencyHistogram.merge_reports(
+            r.get("ttft_hist_ms") for r in reps
+        )
+        summed["tpot_hist_ms"] = LatencyHistogram.merge_reports(
+            r.get("tpot_hist_ms") for r in reps
+        )
         return summed
 
     def scrape(self) -> dict:
@@ -465,6 +479,9 @@ class Router:
             "report": self.report(),
             "stats": self.stats(),
             "cache": cache.stats() if cache is not None else None,
+            # predicted-vs-measured kernel cost rows (process-global
+            # dispatch ledger — the kernels this router's replicas ran)
+            "cost": kernel_dispatch.LEDGER.rows(),
         }
 
 

@@ -60,6 +60,30 @@ class _Writer:
         return "\n".join(self.lines) + "\n"
 
 
+def _le(bound: float) -> str:
+    """Prometheus `le` label: integral bounds render bare ("100"), the
+    rest as repr — matching the sample-value convention above."""
+    v = float(bound)
+    return str(int(v)) if v.is_integer() else repr(v)
+
+
+def _histogram(w: _Writer, name: str, help_: str, hist: Optional[dict]) -> None:
+    """Render a LatencyHistogram.report() dict as a Prometheus histogram:
+    cumulative `_bucket{le=...}` series (last per-bucket count is the +Inf
+    overflow), plus `_sum` and `_count`."""
+    if not hist or not hist.get("buckets_ms"):
+        return
+    w.metric(name, "histogram", help_)
+    cum = 0
+    for bound, n in zip(hist["buckets_ms"], hist["counts"]):
+        cum += n
+        w.sample(name + "_bucket", cum, {"le": _le(bound)})
+    cum += hist["counts"][-1]
+    w.sample(name + "_bucket", cum, {"le": "+Inf"})
+    w.sample(name + "_sum", hist["sum_ms"])
+    w.sample(name + "_count", hist["count"])
+
+
 def render_metrics(
     report: dict,
     stats: dict,
@@ -69,6 +93,7 @@ def render_metrics(
     http_requests: int = 0,
     dispatch_counts: Optional[dict] = None,
     trace_stats: Optional[dict] = None,
+    cost_rows: Optional[list] = None,
 ) -> str:
     w = _Writer()
 
@@ -169,6 +194,67 @@ def render_metrics(
                 agg["mean_s"],
                 {"phase": phase},
             )
+
+    # -- latency histograms ----------------------------------------------
+    # cumulative across the server's lifetime (NOT the record window), so
+    # rate() and histogram_quantile() are well-defined over scrape diffs
+    _histogram(
+        w, "repro_ttft_ms",
+        "Time to first token in milliseconds (cumulative histogram over "
+        "all retired requests).",
+        report.get("ttft_hist_ms"),
+    )
+    _histogram(
+        w, "repro_tpot_ms",
+        "Time per output token in milliseconds — decode stretch divided "
+        "by inter-token gaps, requests with >= 2 generated tokens "
+        "(cumulative histogram).",
+        report.get("tpot_hist_ms"),
+    )
+
+    # -- kernel cost ledger ----------------------------------------------
+    if cost_rows:
+        cost_counters = (
+            ("repro_cost_calls_total", "calls",
+             "Dispatch decisions accumulated into the cost ledger."),
+            ("repro_cost_flops_total", "flops",
+             "Predicted FLOPs from the analytical kernel cost model "
+             "(2/MAC + documented per-element constants)."),
+            ("repro_cost_macs_total", "macs",
+             "Predicted multiply-accumulates (the paper's Table-7 unit)."),
+            ("repro_cost_hbm_read_bytes_total", "hbm_read_bytes",
+             "Predicted HBM operand traffic incl. pallas grid revisits."),
+            ("repro_cost_hbm_write_bytes_total", "hbm_write_bytes",
+             "Predicted HBM result traffic."),
+            ("repro_cost_pad_waste_bytes_total", "pad_waste_bytes",
+             "Predicted bytes spent on tile-alignment padding."),
+            ("repro_cost_touched_bytes_total", "touched_bytes",
+             "Measured unique ndarray bytes the dispatch actually handed "
+             "to the backend (the ref-exactness cross-check)."),
+        )
+        for name, key, help_ in cost_counters:
+            w.metric(name, "counter", help_)
+            for r in cost_rows:
+                w.sample(name, r[key], {"op": r["op"], "backend": r["backend"]})
+        w.metric("repro_cost_arithmetic_intensity", "gauge",
+                 "Predicted FLOPs per HBM byte (roofline x-coordinate).")
+        for r in cost_rows:
+            w.sample("repro_cost_arithmetic_intensity",
+                     r["arithmetic_intensity"],
+                     {"op": r["op"], "backend": r["backend"]})
+        w.metric("repro_cost_vmem_bytes", "gauge",
+                 "Predicted peak per-grid-step VMEM working set (0 on ref).")
+        for r in cost_rows:
+            w.sample("repro_cost_vmem_bytes", r["vmem_bytes"],
+                     {"op": r["op"], "backend": r["backend"]})
+        w.metric("repro_cost_bytes_rel_err", "gauge",
+                 "(predicted - touched) / touched HBM bytes on the ref "
+                 "backend — nonzero means the analytical model drifted "
+                 "from the arrays actually moved.")
+        for r in cost_rows:
+            if r.get("bytes_rel_err") is not None:
+                w.sample("repro_cost_bytes_rel_err", r["bytes_rel_err"],
+                         {"op": r["op"], "backend": r["backend"]})
 
     # -- kernel dispatch decisions --------------------------------------
     if dispatch_counts is not None:

@@ -496,6 +496,7 @@ class HttpServer:
             http_requests=self.http_requests,
             dispatch_counts=kernel_dispatch.STATS.snapshot(),
             trace_stats=TRACER.stats(),
+            cost_rows=scrape["cost"],
         )
         return render_response(
             200, text.encode("utf-8"), content_type=PROM_CONTENT_TYPE

@@ -35,9 +35,11 @@ import numpy as np
 __all__ = [
     "RequestRecord",
     "ServeMetrics",
+    "LatencyHistogram",
     "tenant_summary",
     "phase_summary",
     "RECORD_WINDOW",
+    "LATENCY_BUCKETS_MS",
 ]
 
 # Per-request records feed percentile summaries only, so they are kept in
@@ -47,6 +49,56 @@ __all__ = [
 # pump lock. Totals ("requests" etc.) come from plain counters, not the
 # window, so counter metrics stay monotonic after the window wraps.
 RECORD_WINDOW = 4096
+
+# Histogram bucket upper bounds (milliseconds) for TTFT and TPOT. Unlike the
+# percentile summaries above these feed *cumulative* counters — they must
+# never decrease, so they live outside the sliding record window and are
+# safe to expose as Prometheus `_bucket{le=...}` series that `rate()` and
+# `histogram_quantile()` can be run against.
+LATENCY_BUCKETS_MS = (1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0,
+                      500.0, 1000.0, 2000.0, 5000.0)
+
+
+@dataclasses.dataclass
+class LatencyHistogram:
+    """Monotonic latency histogram: per-bucket counts (last bucket is the
+    +Inf overflow), running sum and count. ``report()`` is a plain dict so
+    replica histograms can be summed elementwise by the router."""
+    bounds: tuple = LATENCY_BUCKETS_MS
+    counts: list = dataclasses.field(
+        default_factory=lambda: [0] * (len(LATENCY_BUCKETS_MS) + 1)
+    )
+    sum_ms: float = 0.0
+    count: int = 0
+
+    def observe(self, ms: float) -> None:
+        i = 0
+        while i < len(self.bounds) and ms > self.bounds[i]:
+            i += 1
+        self.counts[i] += 1
+        self.sum_ms += ms
+        self.count += 1
+
+    def report(self) -> dict:
+        return {
+            "buckets_ms": list(self.bounds),
+            "counts": list(self.counts),
+            "sum_ms": self.sum_ms,
+            "count": self.count,
+        }
+
+    @staticmethod
+    def merge_reports(reports) -> dict:
+        """Elementwise sum of ``report()`` dicts (replica aggregation).
+        Empty input yields an all-zero histogram with the default bounds."""
+        out = LatencyHistogram().report()
+        for r in reports:
+            if not r or r.get("buckets_ms") != out["buckets_ms"]:
+                continue  # bounds mismatch: skip rather than mis-sum
+            out["counts"] = [a + b for a, b in zip(out["counts"], r["counts"])]
+            out["sum_ms"] += r["sum_ms"]
+            out["count"] += r["count"]
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +183,13 @@ class ServeMetrics:
     records: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=RECORD_WINDOW)
     )
+    # cumulative latency histograms (monotonic, unlike the record window)
+    ttft_hist: LatencyHistogram = dataclasses.field(
+        default_factory=LatencyHistogram
+    )
+    tpot_hist: LatencyHistogram = dataclasses.field(
+        default_factory=LatencyHistogram
+    )
     t_start: Optional[float] = None
     t_stop: Optional[float] = None
 
@@ -182,6 +241,15 @@ class ServeMetrics:
                 cache_saved_tokens=getattr(req, "cache_saved_tokens", 0),
             )
         )
+        ttft = t1 - t0
+        self.ttft_hist.observe(max(ttft, 0.0) * 1e3)
+        new_tokens = len(req.out)
+        if new_tokens >= 2:
+            # time-per-output-token over the decode stretch: (latency -
+            # ttft) spans the new_tokens - 1 inter-token gaps
+            self.tpot_hist.observe(
+                max(now - t1, 0.0) * 1e3 / (new_tokens - 1)
+            )
 
     def on_cancel(self, req, reason: str) -> None:
         """A request left the engine without completing (client cancel,
@@ -251,6 +319,8 @@ class ServeMetrics:
             "latency_mean_s": float(lats.mean()) if lats.size else 0.0,
             "latency_p95_s": _pct(lats, 95),
             "phases": phase_summary(self.records),
+            "ttft_hist_ms": self.ttft_hist.report(),
+            "tpot_hist_ms": self.tpot_hist.report(),
         }
 
     def format(self) -> str:

@@ -1,0 +1,345 @@
+"""Cost-model observatory tests: CostSpec registry coverage, Decision cost
+attribution, the ref-backend exactness contract (predicted HBM bytes ==
+ndarray bytes actually touched, tolerance 0), pallas padding-waste/VMEM
+accounting, the Table-7 MAC tie, the CostLedger join, and the
+check_bench/check_trace CI gates (injected regressions must fail with the
+op named)."""
+import importlib.util
+import json
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import floatsd
+from repro.kernels import dispatch as kd
+from repro.kernels.floatsd_matmul import cost as fm_cost
+from repro.kernels.lstm_cell import cost as lc_cost
+from repro.obs import costmodel
+from repro.obs.trace import Tracer
+
+_ROOT = Path(__file__).parent.parent
+
+
+def _load(name: str, rel: str):
+    spec = importlib.util.spec_from_file_location(name, _ROOT / rel)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+check_bench = _load("check_bench", "scripts/check_bench.py")
+check_trace = _load("check_trace", "scripts/check_trace.py")
+table7 = _load("table7_mac", "benchmarks/table7_mac.py")
+
+
+def _w(shape, scale=1.0, seed_extra=0):
+    seed = (hash((shape, float(scale), seed_extra)) & 0x7FFFFFFF) or 1
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.standard_normal(shape) * scale).astype(np.float32))
+
+
+def _run_all_ops(backend: str) -> None:
+    """One call of every registered op under ``backend`` (ref-friendly
+    odd shapes; wkv/flash shapes chosen tile-divisible so pallas does not
+    fall back)."""
+    m, k, n = 5, 37, 19
+    x = _w((m, k), 0.5)
+    codes, bias = floatsd.encode(_w((k, n), 0.05))
+    g = _w((m, n), 0.5, seed_extra=1)
+    b, h = 3, 70
+    z = _w((b, 4 * h), 1.5)
+    c = _w((b, h), 0.8)
+    with kd.use_backend(backend):
+        kd.matmul(x, codes, bias)
+        kd.matmul_dx(g, codes, bias)
+        kd.matmul_dw(x, g)
+        kd.lstm_cell(z, c)
+        kd.lstm_cell_grad(z, c, _w((b, h), 1.0, 2), _w((b, h), 1.0, 3))
+        kd.quantize(_w((7, 33), 0.7))
+        kd.qsigmoid(_w((7, 33), 2.0))
+        rng = np.random.default_rng(11)
+        decay = jnp.asarray(
+            np.exp(-np.exp(rng.standard_normal((2, 32, 8)) * 0.3 - 2.0)),
+            jnp.float32,
+        )
+        kd.rwkv_wkv(_w((2, 32, 8)), _w((2, 32, 8), 1.0, 4),
+                    _w((2, 32, 8), 1.0, 5), decay, _w((2, 8), 0.1))
+        kd.flash_attention(_w((2, 16, 8)), _w((2, 128, 8), 1.0, 6),
+                           _w((2, 128, 8), 1.0, 7))
+
+
+# ---------------------------------------------------------------------------
+# registry coverage + decision attribution
+# ---------------------------------------------------------------------------
+
+
+def test_every_registered_op_has_a_costspec():
+    for name, spec in kd.REGISTRY.items():
+        assert isinstance(spec.cost, costmodel.CostSpec), (
+            f"op {name!r} registered without a CostSpec — every kernel "
+            "package must contribute its analytical cost model"
+        )
+        assert spec.cost.op == name
+        assert callable(spec.cost.fn)
+        assert spec.cost.notes  # the model's assumptions, documented
+
+
+def test_decisions_carry_cost():
+    kd.STATS.reset()
+    _run_all_ops("ref")
+    for op in kd.REGISTRY:
+        dec = kd.STATS.last[op]
+        assert isinstance(dec.cost, costmodel.Cost), op
+        assert dec.cost.flops > 0 and dec.cost.hbm_bytes > 0, op
+        assert dec.cost.vmem_bytes == 0, f"{op}: ref has no VMEM working set"
+
+
+# ---------------------------------------------------------------------------
+# the ref exactness contract: predicted bytes == bytes actually touched
+# ---------------------------------------------------------------------------
+
+
+def test_ref_predicted_bytes_equal_touched_bytes_exactly():
+    """On the ref backend the model counts each operand and result once —
+    it must agree with the ndarray nbytes the dispatch handed the oracle
+    to the byte (tolerance 0), for EVERY registered op."""
+    kd.STATS.reset()
+    _run_all_ops("ref")
+    rows = kd.LEDGER.rows()
+    assert {r["op"] for r in rows} == set(kd.REGISTRY)
+    for r in rows:
+        assert r["backend"] == "ref"
+        assert r["touched_bytes"] > 0, r["op"]
+        assert r["bytes_rel_err"] == 0.0, (
+            f"{r['op']}: predicted {r['hbm_bytes']} != touched "
+            f"{r['touched_bytes']} ({r['bytes_rel_err']:+.2%})"
+        )
+
+
+def test_pallas_padding_waste_and_vmem_accounted():
+    kd.STATS.reset()
+    with kd.use_backend("pallas"):
+        x = _w((7, 130), 0.5)
+        codes, bias = floatsd.encode(_w((130, 66), 0.05))
+        kd.matmul(x, codes, bias)
+    dec = kd.STATS.last["floatsd_matmul"]
+    assert dec.backend == "pallas" and dec.padded
+    cost = dec.cost
+    assert cost.vmem_bytes > 0
+    assert cost.pad_waste_bytes > 0 and cost.pad_waste_flops > 0
+    # padded traffic dominates the exact-shape ref prediction
+    ref = fm_cost.matmul_fwd_cost(7, 130, 66, backend="ref")
+    assert cost.hbm_read_bytes > ref.hbm_read_bytes
+    assert cost.macs > ref.macs
+
+
+def test_flash_attention_masked_pairs_charged_to_waste():
+    """The pallas flash kernel visits every KV tile (no tile skipping):
+    the causally masked-out pairs must land in pad_waste_flops."""
+    kd.STATS.reset()
+    with kd.use_backend("pallas"):
+        q = _w((1, 16, 8))
+        kd.flash_attention(q, _w((1, 128, 8), 1.0, 1), _w((1, 128, 8), 1.0, 2),
+                           causal=True)
+    dec = kd.STATS.last["flash_attention"]
+    assert dec.backend == "pallas"
+    assert dec.cost.pad_waste_flops > 0
+
+
+# ---------------------------------------------------------------------------
+# the Table-7 tie: ledger MACs argue in the paper's currency
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,h,batch", [(256, 256, 1), (200, 650, 16), (28, 128, 4)])
+def test_costmodel_macs_reproduce_table7_per_timestep(d, h, batch):
+    per = table7.per_timestep_macs(d, h, batch=batch)
+    # the two gate GEMMs one timestep dispatches: x_t @ W [D,4H] and
+    # h_{t-1} @ U [H,4H]
+    gemm = (
+        fm_cost.matmul_fwd_cost(batch, d, 4 * h, backend="ref").macs
+        + fm_cost.matmul_fwd_cost(batch, h, 4 * h, backend="ref").macs
+    )
+    assert gemm == per["gemm"]
+    cell = lc_cost.lstm_cell_cost(batch, h, backend="ref").macs
+    assert cell == per["elementwise"]
+
+
+def test_cost_merge_sums_flows_maxes_vmem():
+    a = costmodel.Cost(flops=10, macs=5, hbm_read_bytes=100,
+                       hbm_write_bytes=50, vmem_bytes=1000)
+    b = costmodel.Cost(flops=1, macs=1, hbm_read_bytes=1,
+                       hbm_write_bytes=1, vmem_bytes=2000, pad_waste_bytes=7)
+    m = a + b
+    assert m.flops == 11 and m.macs == 6
+    assert m.hbm_read_bytes == 101 and m.hbm_write_bytes == 51
+    assert m.vmem_bytes == 2000  # peak, not sum
+    assert m.pad_waste_bytes == 7
+    d = m.to_dict()
+    assert d["hbm_bytes"] == 152 and d["arithmetic_intensity"] == 11 / 152
+
+
+# ---------------------------------------------------------------------------
+# the ledger join
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_rows_table_json_and_measured_rate():
+    kd.STATS.reset()
+    with kd.use_backend("ref"):
+        x = _w((8, 128), 0.5)
+        codes, bias = floatsd.encode(_w((128, 128), 0.05))
+        kd.matmul(x, codes, bias)
+        kd.matmul(x, codes, bias)
+    kd.STATS.add_time("floatsd_matmul", "ref", 0.01)
+    rows = kd.LEDGER.rows()
+    assert len(rows) == 1
+    r = rows[0]
+    assert r["calls"] == 2 and r["timed_calls"] == 1
+    per_call_flops = r["flops"] / 2
+    assert r["measured_flops_per_s"] == pytest.approx(per_call_flops / 0.01)
+    table = kd.LEDGER.table()
+    assert "floatsd_matmul" in table and "exact" in table
+    blob = kd.LEDGER.to_json(meta={"who": "test"})
+    assert blob["meta"] == {"who": "test"}
+    json.dumps(blob)  # must be JSON-serializable as-is
+    assert blob["rows"][0]["op"] == "floatsd_matmul"
+
+
+def test_ledger_emit_counters_monotone_trace_tracks():
+    kd.STATS.reset()
+    tracer = Tracer()
+    tracer.enable()
+    with kd.use_backend("ref"):
+        x = _w((8, 128), 0.5)
+        codes, bias = floatsd.encode(_w((128, 128), 0.05))
+        kd.matmul(x, codes, bias)
+        assert kd.LEDGER.emit_counters(tracer) == 1
+        kd.matmul(x, codes, bias)
+        assert kd.LEDGER.emit_counters(tracer) == 1
+    evs = [e for e in tracer.events() if e["ph"] == "C"]
+    assert [e["name"] for e in evs] == ["cost.floatsd_matmul"] * 2
+    assert evs[1]["args"]["flops"] == 2 * evs[0]["args"]["flops"]
+    assert evs[1]["args"]["calls"] == 2
+    # the exported trace passes the cost-counter validation
+    assert check_trace.validate_trace(tracer.chrome_trace()) == []
+
+
+def test_ledger_emit_counters_disabled_tracer_is_noop():
+    assert kd.LEDGER.emit_counters(Tracer()) == 0
+
+
+# ---------------------------------------------------------------------------
+# check_bench: the CI perf-regression gate
+# ---------------------------------------------------------------------------
+
+
+def _train_baseline() -> dict:
+    with open(_ROOT / "BENCH_train.json") as f:
+        return json.load(f)
+
+
+def test_check_bench_passes_on_identical_reports():
+    base = _train_baseline()
+    assert check_bench.check_train(json.loads(json.dumps(base)), base) == []
+
+
+def test_check_bench_fails_injected_time_regression_naming_variant():
+    base = _train_baseline()
+    cur = json.loads(json.dumps(base))
+    cur["results"][0]["fused"]["warm_step_s"] = (
+        base["results"][0]["fused"]["warm_step_s"] * 10
+    )
+    probs = check_bench.check_train(cur, base)
+    assert probs and "warm_step_s" in probs[0] and "fused" in probs[0]
+
+
+def test_check_bench_fails_injected_ledger_regression_naming_op():
+    kd.STATS.reset()
+    with kd.use_backend("ref"):
+        x = _w((8, 128), 0.5)
+        codes, bias = floatsd.encode(_w((128, 128), 0.05))
+        kd.matmul(x, codes, bias)
+    rows = kd.LEDGER.rows()
+    assert check_bench.check_ledger(rows) == []  # honest rows pass
+    bad = json.loads(json.dumps(rows))
+    bad[0]["bytes_rel_err"] = 0.30  # model drifted 30% from measured
+    probs = check_bench.check_ledger(bad)
+    assert len(probs) == 1
+    assert "op=floatsd_matmul" in probs[0]
+    assert "predicted" in probs[0] and "measured" in probs[0]
+    assert "+30.00%" in probs[0]
+
+
+def test_check_bench_fails_ledger_per_call_drift_naming_op():
+    base_rows = [{"op": "lstm_cell", "backend": "ref", "calls": 2,
+                  "flops": 1000, "hbm_bytes": 500}]
+    cur_rows = [{"op": "lstm_cell", "backend": "ref", "calls": 2,
+                 "flops": 4000, "hbm_bytes": 500}]
+    probs = check_bench._ledger_drift(cur_rows, base_rows, 0.5)
+    assert probs and "op=lstm_cell" in probs[0] and "flops" in probs[0]
+
+
+def test_check_bench_tolerances_env_overridable(monkeypatch):
+    monkeypatch.setenv("REPRO_BENCH_TOL_BYTES", "0.5")
+    assert check_bench.tolerances()["bytes"] == 0.5
+    kd.STATS.reset()
+    with kd.use_backend("ref"):
+        x = _w((8, 128), 0.5)
+        codes, bias = floatsd.encode(_w((128, 128), 0.05))
+        kd.matmul(x, codes, bias)
+    bad = json.loads(json.dumps(kd.LEDGER.rows()))
+    bad[0]["bytes_rel_err"] = 0.30
+    assert check_bench.check_ledger(bad) == []  # inside the widened gate
+
+
+# ---------------------------------------------------------------------------
+# check_trace: cost.* counter validation
+# ---------------------------------------------------------------------------
+
+
+def _ev(name, ph, ts, **extra):
+    return {"name": name, "ph": ph, "ts": ts, "pid": 1, "tid": 1, **extra}
+
+
+def test_check_trace_accepts_monotone_cost_counters():
+    trace = {"traceEvents": [
+        _ev("cost.floatsd_matmul", "C", 1, args={"flops": 10, "calls": 1}),
+        _ev("cost.floatsd_matmul", "C", 2, args={"flops": 20, "calls": 2}),
+    ]}
+    assert check_trace.validate_trace(trace) == []
+
+
+def test_check_trace_rejects_decreasing_cost_counter():
+    trace = {"traceEvents": [
+        _ev("cost.lstm_cell", "C", 1, args={"flops": 20}),
+        _ev("cost.lstm_cell", "C", 2, args={"flops": 10}),
+    ]}
+    probs = check_trace.validate_trace(trace)
+    assert probs and "decreased" in probs[0] and "cost.lstm_cell" in probs[0]
+
+
+def test_check_trace_rejects_non_numeric_counter_args():
+    trace = {"traceEvents": [
+        _ev("cost.qsigmoid", "C", 1, args={"flops": "lots"}),
+    ]}
+    probs = check_trace.validate_trace(trace)
+    assert probs and "non-numeric" in probs[0]
+
+
+def test_check_trace_requires_cost_tracks_next_to_engine_steps():
+    trace = {"traceEvents": [
+        _ev("engine.step", "B", 1),
+        _ev("engine.step", "E", 2),
+    ]}
+    probs = check_trace.validate_trace(trace)
+    assert any("cost.floatsd_matmul" in p for p in probs)
+    assert any("cost.lstm_cell" in p for p in probs)
+    # ...and is satisfied once the tracks are present
+    trace["traceEvents"] += [
+        _ev("cost.floatsd_matmul", "C", 3, args={"flops": 1}),
+        _ev("cost.lstm_cell", "C", 3, args={"flops": 1}),
+    ]
+    assert check_trace.validate_trace(trace) == []

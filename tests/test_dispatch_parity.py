@@ -41,6 +41,12 @@ LSTM_SHAPES = [(8, 128), (32, 256), (5, 70), (3, 200)]
 
 ELEMWISE_SHAPES = [(8, 256), (7, 33), (1000,), (2, 3, 7), (64, 512)]
 
+# (bh, s, dk, dv); last shape is chunk-indivisible -> recorded ref fallback
+WKV_SHAPES = [(2, 32, 8, 16), (1, 48, 16, 16), (2, 30, 8, 8)]
+
+# (bh, sq, skv, d); last shape is misaligned -> recorded ref fallback
+FLASH_SHAPES = [(2, 16, 128, 8), (1, 32, 256, 16), (2, 10, 100, 8)]
+
 GRIDS = {
     "floatsd_matmul": MATMUL_SHAPES,
     "lstm_cell": LSTM_SHAPES,
@@ -50,6 +56,9 @@ GRIDS = {
     "floatsd_matmul_dx": MATMUL_SHAPES,
     "floatsd_matmul_dw": MATMUL_SHAPES,
     "lstm_cell_grad": LSTM_SHAPES,
+    # fallback-only dispatch (no padding path): pallas iff tiles divide
+    "rwkv_wkv": WKV_SHAPES,
+    "flash_attention": FLASH_SHAPES,
 }
 
 
@@ -220,6 +229,55 @@ def test_qsigmoid_parity_and_decision(shape):
     want = kd.qsigmoid(x, backend="ref")
     assert dec.backend == "pallas"
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bh,s,dk,dv", WKV_SHAPES)
+def test_rwkv_wkv_parity_and_decision(bh, s, dk, dv):
+    """No padding path: pallas when S % chunk == 0, recorded ref fallback
+    otherwise (never silent)."""
+    rng = np.random.default_rng(7 + bh + s + dk)
+    r = jnp.asarray(rng.standard_normal((bh, s, dk)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((bh, s, dk)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((bh, s, dv)), jnp.float32)
+    w = jnp.asarray(
+        np.exp(-np.exp(rng.standard_normal((bh, s, dk)) * 0.3 - 2.0)),
+        jnp.float32,
+    )
+    u = jnp.asarray(rng.standard_normal((bh, dk)) * 0.1, jnp.float32)
+    with kd.use_backend("pallas"):
+        got = kd.rwkv_wkv(r, k, v, w, u, chunk=16)
+        dec = kd.STATS.last["rwkv_wkv"]
+    want = kd.rwkv_wkv(r, k, v, w, u, chunk=16, backend="ref")
+    if s % 16 == 0:
+        assert dec.backend == "pallas", dec
+    else:
+        assert dec.backend == "ref" and "oracle" in dec.reason, dec
+    assert got.shape == (bh, s, dv)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4
+    )
+
+
+@pytest.mark.parametrize("bh,sq,skv,d", FLASH_SHAPES)
+def test_flash_attention_parity_and_decision(bh, sq, skv, d):
+    """No padding path: pallas when (Sq, Skv, D) are tile-aligned, recorded
+    ref fallback otherwise (never silent)."""
+    rng = np.random.default_rng(11 + bh + sq + d)
+    q = jnp.asarray(rng.standard_normal((bh, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((bh, skv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((bh, skv, d)), jnp.float32)
+    with kd.use_backend("pallas"):
+        got = kd.flash_attention(q, k, v, causal=False)
+        dec = kd.STATS.last["flash_attention"]
+    want = kd.flash_attention(q, k, v, causal=False, backend="ref")
+    if sq % 8 == 0 and skv % 128 == 0 and d % 8 == 0:
+        assert dec.backend == "pallas", dec
+    else:
+        assert dec.backend == "ref" and "oracle" in dec.reason, dec
+    assert got.shape == (bh, sq, d)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-2, atol=6e-3
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,7 @@ from hypothesis import strategies as st
 
 from repro.core import floatsd
 from repro.kernels import dispatch as kd
+from repro.kernels.floatsd_matmul import cost as fm_cost
 
 pytestmark = pytest.mark.slow  # interpret-mode pallas sweeps are tier-2
 
@@ -77,3 +78,55 @@ def test_lstm_cell_pad_then_crop_equals_oracle(b, h, seed):
         np.asarray(c_got, np.float32), np.asarray(c_want, np.float32),
         rtol=1e-3, atol=1e-4,
     )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 16),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ref_predicted_bytes_equal_touched_for_arbitrary_matmul(m, k, n, seed):
+    """Cost-model property: on the ref backend the analytical HBM-byte
+    prediction equals the ndarray bytes the dispatch actually handed the
+    oracle — exactly, for arbitrary shapes (the tolerance-0 contract the
+    parametrized grid in tests/test_costmodel.py spot-checks)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32) * 0.5)
+    codes, bias = floatsd.encode(
+        jnp.asarray(rng.standard_normal((k, n)).astype(np.float32) * 0.05)
+    )
+    kd.STATS.reset()
+    kd.matmul(x, codes, bias, backend="ref")
+    (row,) = kd.LEDGER.rows()
+    assert row["backend"] == "ref"
+    assert row["hbm_bytes"] == row["touched_bytes"]
+    assert row["bytes_rel_err"] == 0.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 256),
+    n=st.integers(1, 256),
+    dm=st.integers(0, 64),
+    dk=st.integers(0, 128),
+    dn=st.integers(0, 128),
+)
+def test_growing_padding_never_decreases_predicted_waste(m, k, n, dm, dk, dn):
+    """Cost-model property: padding dims further out (pad-then-crop with a
+    bigger pad) can only grow the predicted waste, never shrink it — the
+    monotonicity the dispatch's tile-rounding relies on when attributing
+    pad_waste_* to a Decision."""
+    base = fm_cost.matmul_fwd_cost(
+        m, k, n, backend="pallas", padded=(m, k, n), tiles=(1, 1, 1)
+    )
+    grown = fm_cost.matmul_fwd_cost(
+        m, k, n, backend="pallas",
+        padded=(m + dm, k + dk, n + dn), tiles=(1, 1, 1),
+    )
+    assert grown.pad_waste_bytes >= base.pad_waste_bytes
+    assert grown.pad_waste_flops >= base.pad_waste_flops
+    # and with zero extra padding the waste is zero on both axes
+    assert base.pad_waste_flops == 0

@@ -455,6 +455,47 @@ def test_metrics_tenant_percentiles_after_traffic():
     assert 'repro_tenant_latency_seconds{tenant="acme",quantile="0.5"}' in text
 
 
+def test_metrics_latency_histograms_and_cost_ledger_exposition():
+    """TTFT/TPOT land as cumulative Prometheus histograms (monotone
+    ``_bucket{le=...}`` series capped by +Inf == ``_count``) and the kernel
+    cost ledger is exported per (op, backend)."""
+    [prompt] = prompts_for(tiny_model(), 1, seed=9)
+
+    async def main():
+        server, task = await start_server(make_router())
+        try:
+            async with Client(server.host, server.port) as c:
+                await c.generate(prompt, max_new=4)
+                return await c.metrics()
+        finally:
+            await stop_server(server, task)
+
+    text = asyncio.run(main())
+
+    for name in ("repro_ttft_ms", "repro_tpot_ms"):
+        buckets = []  # (le, value) in exposition order
+        for line in text.splitlines():
+            if line.startswith(f"{name}_bucket{{"):
+                le = line.split('le="', 1)[1].split('"', 1)[0]
+                buckets.append((le, float(line.rsplit(" ", 1)[1])))
+        assert buckets, f"{name}_bucket series missing"
+        assert buckets[-1][0] == "+Inf"
+        values = [v for _, v in buckets]
+        assert values == sorted(values), f"{name} buckets not cumulative"
+        count = float(
+            next(l for l in text.splitlines() if l.startswith(f"{name}_count"))
+            .rsplit(" ", 1)[1]
+        )
+        assert values[-1] == count, f"{name} +Inf bucket != _count"
+        assert count >= 1  # one request retired → at least one observation
+
+    # the cost-model observatory: predicted-cost counters per (op, backend)
+    assert 'repro_cost_flops_total{op="floatsd_matmul"' in text
+    assert 'repro_cost_flops_total{op="lstm_cell"' in text
+    assert "repro_cost_hbm_read_bytes_total{" in text
+    assert "repro_cost_arithmetic_intensity{" in text
+
+
 # ---------------------------------------------------------------------------
 # observability: /admin/trace, debug phase breakdowns, scrape consistency
 # ---------------------------------------------------------------------------
