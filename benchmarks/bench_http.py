@@ -214,6 +214,11 @@ _COUNTERS = (
     ("decode_steps", "repro_decode_steps_total"),
     ("cache_hits", "repro_cache_hits_total"),
     ("prefill_tokens_saved", "repro_prefill_tokens_saved_total"),
+    # replica-health counters: 0 everywhere except the chaos phase
+    ("ejections", "repro_replica_ejections_total"),
+    ("resubmits", "repro_resubmits_total"),
+    ("retries", "repro_retries_total"),
+    ("numeric_errors", "repro_numeric_errors_total"),
 )
 
 
@@ -317,8 +322,17 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--pretrain-steps", type=int, default=200,
                     help="zipf phases: pretrain for decisive greedy margins")
-    ap.add_argument("--workload", choices=["uniform", "zipf-prefix", "all"],
-                    default="all")
+    ap.add_argument("--workload",
+                    choices=["uniform", "zipf-prefix", "chaos", "all"],
+                    default="all",
+                    help="'chaos' (opt-in, not part of 'all') replays the "
+                    "zipf workload at --stress-rate on 2 replicas, kills "
+                    "replica 1 mid-run via a seeded fault plan, and "
+                    "asserts zero lost requests + 100%% token agreement "
+                    "with an identical fault-free reference run")
+    ap.add_argument("--crash-at", type=int, default=5,
+                    help="chaos workload: replica 1 crashes on its Nth "
+                    "device step")
     ap.add_argument("--out", default="BENCH_http.json")
     ap.add_argument("--trace-out", default="BENCH_http_trace.json",
                     help="write the last HTTP phase's /admin/trace export "
@@ -458,6 +472,62 @@ def main():
             flush=True,
         )
 
+    if args.workload == "chaos":
+        import copy
+
+        from repro.faults import FAULTS
+
+        cargs = copy.copy(args)
+        cargs.replicas = max(2, args.replicas)  # someone must survive
+        print(f"== chaos workload: {args.requests} requests @ "
+              f"{args.stress_rate}/s on {cargs.replicas} replicas, "
+              f"replica 1 crashes on step {args.crash_at} ==", flush=True)
+        params = pretrain(model, policy, args.pretrain_steps, seed=args.seed)
+        prompts = zipf_prefix_prompts(
+            args.requests, args.vocab, np.random.default_rng(args.seed + 2),
+            n_prefixes=4, prefix_len=3 * args.chunk, suffix_lo=2,
+            suffix_hi=args.chunk + 2, prefix_seed=args.seed,
+        )
+        # fault-free reference: greedy decode is deterministic per prompt,
+        # so the chaos run's survivors must reproduce these tokens exactly
+        # even after an eject/resubmit moved them across replicas
+        results, wall, counters, _ = run(
+            run_http_phase(
+                build_router(model, params, policy, cargs),
+                prompts, args.stress_rate, args.max_new, args.tenants,
+                args.chunk,
+            )
+        )
+        phases["http_chaos_ref"] = summarize(results, wall, counters)
+        ref_tokens = tokens_of(results)
+        print_phase("http_chaos_ref", phases["http_chaos_ref"])
+
+        FAULTS.arm(f"seed={args.seed};replica_crash@{args.crash_at}:key=1")
+        try:
+            results, wall, counters, last_trace = run(
+                run_http_phase(
+                    build_router(model, params, policy, cargs),
+                    prompts, args.stress_rate, args.max_new, args.tenants,
+                    args.chunk,
+                )
+            )
+        finally:
+            FAULTS.disarm()
+        phases["http_chaos"] = summarize(results, wall, counters)
+        print_phase("http_chaos", phases["http_chaos"])
+        agree["chaos_vs_ref"] = agreement(tokens_of(results), ref_tokens)
+        s = phases["http_chaos"]
+        print(
+            f"chaos: availability {s['served']}/{s['requests']}, "
+            f"ejections {s.get('ejections', 0)}, "
+            f"resubmits {s.get('resubmits', 0)}, "
+            f"retries {s.get('retries', 0)}, p95 TTFT "
+            f"{phases['http_chaos_ref']['ttft_p95_ms']:.1f}ms (fault-free) "
+            f"-> {s['ttft_p95_ms']:.1f}ms (1 of {cargs.replicas} replicas "
+            f"killed), token agreement {agree['chaos_vs_ref']:.0%}",
+            flush=True,
+        )
+
     out = {
         "bench": "http",
         "config": {
@@ -504,6 +574,17 @@ def main():
         failures.append("warm vs cold token agreement != 100%")
     if agree.get("warm_v2_vs_cold", 1.0) != 1.0:
         failures.append("scheduler-v2 warm vs cold token agreement != 100%")
+    if "http_chaos" in phases:
+        s = phases["http_chaos"]
+        if s["served"] != s["requests"]:
+            failures.append(
+                f"chaos: {s['requests'] - s['served']} requests lost "
+                "(every request must survive the replica kill)"
+            )
+        if s.get("ejections", 0) < 1:
+            failures.append("chaos: replica kill did not record an ejection")
+        if agree.get("chaos_vs_ref", 1.0) != 1.0:
+            failures.append("chaos vs fault-free token agreement != 100%")
     if failures:
         raise SystemExit("; ".join(failures))
 

@@ -1,0 +1,129 @@
+#!/usr/bin/env bash
+# Chaos smoke (~3 min): seeded fault injection through the full stack,
+# asserting every layer RECOVERS — the executable form of the failure-
+# modes table in src/repro/serving/README.md.
+#
+#   1. router chaos (in-process): replica crash + corrupted prefix-cache
+#      entry + nonfinite logits under one seeded plan; asserts the
+#      ejection/resubmission counters, corrupt-served-as-miss, the
+#      numeric_error retire, and a clean drain (no hung tickets).
+#   2. HTTP chaos (bench_http --workload chaos): kills 1 of 2 replicas
+#      mid-zipf at the stress rate over a real socket; bench_http itself
+#      asserts zero lost requests + 100% token agreement with a
+#      fault-free reference run; the trace export is validated.
+#   3. training kill + resume: SIGKILL a training run mid-flight, then
+#      relaunch the same command and assert it resumes from the newest
+#      checkpoint and finishes.
+#
+# Usage: scripts/chaos_smoke.sh
+#   CHAOS_ARTIFACTS_DIR=out/  keeps the chaos bench JSON + trace (CI
+#   uploads them); otherwise everything lands in a temp dir and is removed.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [ -n "${CHAOS_ARTIFACTS_DIR:-}" ]; then
+    WORK=$CHAOS_ARTIFACTS_DIR
+    mkdir -p "$WORK"
+else
+    WORK=$(mktemp -d)
+    trap 'rm -rf "$WORK"' EXIT
+fi
+
+echo "== chaos 1/3: router recovery (crash + cache corruption + NaN logits) =="
+python - <<'PY'
+import jax
+import numpy as np
+
+from repro.core.policy import get_policy
+from repro.faults import FAULTS
+from repro.models.lstm_models import WikiText2LM
+from repro.serving import PrefixCache, Router, zipf_prefix_prompts
+
+# one seeded plan, three failure classes: replica 1 dies on its 4th step,
+# every prefix-cache insert is bit-flipped post-checksum, and the 6th
+# batched step produces nonfinite logits on one lane
+FAULTS.arm("seed=7;replica_crash@4:key=1;cache_corrupt%1.0;nonfinite_logits@6")
+try:
+    model = WikiText2LM(vocab=500, emb=48, hidden=48, n_layers=2)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = PrefixCache(block=8)
+    router = Router.build(model, params, get_policy("floatsd8_table6"),
+                          replicas=2, prefix_cache=cache, lanes=4, chunk=8)
+    prompts = zipf_prefix_prompts(
+        16, 500, np.random.default_rng(0), n_prefixes=3, prefix_len=16,
+        suffix_lo=2, suffix_hi=6, prefix_seed=0,
+    )
+    tickets = [router.submit(p, max_new=8) for p in prompts]
+    router.drain()  # must terminate: no ticket may hang
+
+    # replay prompt 0 verbatim: its full-prompt cache entry exists but was
+    # bit-flipped after checksumming, so this lookup MUST detect the
+    # mismatch, evict the entry, and serve the request as a miss
+    t_replay = router.submit(np.asarray(prompts[0]), max_new=4)
+    router.drain()
+
+    stats, rep, cstats = router.stats(), router.report(), cache.stats()
+    bad = [t.status for t in tickets + [t_replay]
+           if t.status not in ("done", "numeric_error")]
+    assert not bad, f"non-terminal/unexpected ticket statuses: {bad}"
+    assert stats["ejections"] >= 1, stats
+    assert stats["resubmits"] >= 1, stats
+    assert rep["numeric_errors"] >= 1, rep["numeric_errors"]
+    assert cstats["corruptions"] >= 1, cstats
+    inj = stats["faults"]["injected"]
+    assert set(inj) == {"replica_crash", "cache_corrupt", "nonfinite_logits"}, inj
+    print("chaos router smoke OK:"
+          f" ejections={stats['ejections']} resubmits={stats['resubmits']}"
+          f" numeric_errors={rep['numeric_errors']}"
+          f" cache_corruptions={cstats['corruptions']}"
+          f" healthy={stats['healthy_replicas']}/{stats['replicas']}")
+finally:
+    FAULTS.disarm()
+PY
+
+echo "== chaos 2/3: HTTP replica kill (bench_http --workload chaos) =="
+# default model size on purpose: with a tiny model every request finishes
+# before the next arrives, the least-loaded tie-break pins all traffic to
+# replica 0, and the replica-1 kill never gets a step to fire on
+python benchmarks/bench_http.py --workload chaos --requests 16 \
+    --pretrain-steps 120 \
+    --out "$WORK/BENCH_chaos.json" --trace-out "$WORK/chaos_trace.json"
+python scripts/check_trace.py "$WORK/chaos_trace.json"
+# the recovery must be visible in the trace, not just the counters
+python - "$WORK/chaos_trace.json" <<'PY'
+import json, sys
+
+names = {e["name"] for e in json.load(open(sys.argv[1]))["traceEvents"]}
+for required in ("fault.inject", "router.eject", "router.resubmit"):
+    assert required in names, f"{required} missing from chaos trace: {sorted(names)}"
+print("chaos trace carries fault.inject / router.eject / router.resubmit")
+PY
+
+echo "== chaos 3/3: training SIGKILL + resume-from-latest =="
+CKPT="$WORK/ckpt"
+TRAIN_LOG="$WORK/train.log"
+TRAIN_CMD=(python -m repro.launch.train --task wikitext2 --steps 64
+           --save-every 8 --batch 8 --seq 32 --log-every 8
+           --ckpt-dir "$CKPT" --no-telemetry)
+"${TRAIN_CMD[@]}" >"$TRAIN_LOG" 2>&1 &
+TRAIN_PID=$!
+# wait for the first published checkpoint, then kill without warning
+for _ in $(seq 1 600); do
+    [ -d "$CKPT/step_00000008" ] && break
+    kill -0 "$TRAIN_PID" 2>/dev/null || { cat "$TRAIN_LOG"; exit 1; }
+    sleep 0.5
+done
+[ -d "$CKPT/step_00000008" ] || { echo "chaos train: no checkpoint appeared"; cat "$TRAIN_LOG"; exit 1; }
+kill -9 "$TRAIN_PID" 2>/dev/null || true
+wait "$TRAIN_PID" 2>/dev/null || true
+echo "killed training after step_00000008 was published"
+# relaunching the same command must resume (not restart) and finish
+"${TRAIN_CMD[@]}" >"$TRAIN_LOG.resume" 2>&1
+grep -q "resumed from step" "$TRAIN_LOG.resume" \
+    || { echo "chaos train: relaunch did not resume"; cat "$TRAIN_LOG.resume"; exit 1; }
+grep -q "^trained " "$TRAIN_LOG.resume" \
+    || { echo "chaos train: resumed run did not finish"; cat "$TRAIN_LOG.resume"; exit 1; }
+grep "resumed from step" "$TRAIN_LOG.resume"
+
+echo "chaos smoke OK"

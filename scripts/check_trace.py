@@ -14,8 +14,9 @@ export fails in CI instead of failing silently in the viewer:
     matching B, matching names, nothing left open at the end
   * X (complete) events carry a non-negative ``dur``
   * request-lifecycle instants (engine.cancel / engine.preempt /
-    engine.resume / router.cancel) are ``i``-phase and carry the rid in
-    their args — the attribution the cancellation runbook greps for
+    engine.resume / engine.numeric_error / router.cancel /
+    router.resubmit) are ``i``-phase and carry the rid in their args —
+    the attribution the cancellation and failure runbooks grep for
   * ``C`` (counter) events carry numeric args, and ``cost.*`` counter
     tracks — the cost-model observatory's cumulative FLOP/byte ledgers —
     are monotone non-decreasing per (track, series); a trace that ran
@@ -42,7 +43,9 @@ RID_INSTANTS = {
     "engine.cancel",
     "engine.preempt",
     "engine.resume",
+    "engine.numeric_error",
     "router.cancel",
+    "router.resubmit",
 }
 
 

@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
-# Fast-tier verification (< 2 min): tier-1 tests minus the slow-marked
+# Fast-tier verification (< 4 min): tier-1 tests minus the slow-marked
 # tier-2 set, a small serving smoke on the reduced config, a docs
-# link/path check, and an HTTP smoke against a real ephemeral-port socket.
+# link/path check, an HTTP smoke against a real ephemeral-port socket,
+# and the chaos smoke (seeded fault injection + recovery asserts;
+# REPRO_SMOKE_CHAOS=0 skips it, e.g. when CI runs it as its own step).
 # Full suite: scripts/test_full.sh
 # Usage: scripts/smoke.sh
 set -euo pipefail
@@ -61,5 +63,10 @@ trap - EXIT
 # abandoned stream was cancelled, which must NOT count as served
 grep -q "served 2 requests" "$HTTP_LOG" || { cat "$HTTP_LOG"; exit 1; }
 rm -f "$HTTP_LOG"
+
+if [ "${REPRO_SMOKE_CHAOS:-1}" != "0" ]; then
+    echo "== chaos smoke (fault injection + recovery) =="
+    bash scripts/chaos_smoke.sh
+fi
 
 echo "smoke OK"

@@ -233,6 +233,14 @@ def encode(x: jax.Array, bias: jax.Array | int | None = None) -> tuple[jax.Array
 
     with the sign folded into m_idx (the mantissa set is symmetric). Returns
     (codes uint8, bias int32).
+
+    Precondition: ``x`` must be finite. uint8 codes carry no NaN/inf
+    representation, and the grid-index search maps NaN to code 0 (every
+    ``>`` comparison is False) — a silent finite encoding. Inf saturates
+    to the top grid point (the documented clip behaviour). Callers that
+    can see corrupt data must check first; ``serving.weight_store
+    .pack_tree`` (the deployment path) raises on nonfinite weights before
+    calling this.
     """
     if bias is None:
         bias = fit_bias(x)

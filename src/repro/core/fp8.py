@@ -24,15 +24,23 @@ _MAX = {FP8_E5M2: 57344.0, FP8_E4M3: 448.0, FP16: 65504.0}
 
 
 def quantize_fp8(x: jax.Array, dtype=FP8_E5M2) -> jax.Array:
-    """Round-trip cast x -> fp8 -> original dtype (fake-quant), saturating.
+    """Round-trip cast x -> fp8 -> original dtype (fake-quant), saturating
+    on *finite* overflow only.
 
-    Saturation (rather than inf) keeps loss-scaled gradients finite, matching
-    hardware clamp behaviour.
+    Saturation (rather than inf) keeps large loss-scaled gradients finite,
+    matching hardware clamp behaviour — but genuinely nonfinite inputs must
+    stay nonfinite: ``jnp.clip`` maps ``inf`` to the finite max, which
+    would launder an overflowed gradient past the loss-scaler's
+    ``unscale_and_check`` (the skip-and-backoff loop could then never
+    fire on inf, only NaN). ``where(isfinite)`` preserves inf/NaN through
+    the quantizer; the downstream finite check is the policy point that
+    decides what happens to them.
     """
     if dtype is None:
         return x
     m = _MAX[dtype]
-    xc = jnp.clip(x.astype(jnp.float32), -m, m)
+    xf = x.astype(jnp.float32)
+    xc = jnp.where(jnp.isfinite(xf), jnp.clip(xf, -m, m), xf)
     return xc.astype(dtype).astype(x.dtype)
 
 
@@ -40,9 +48,12 @@ def cast_fp8(x: jax.Array, dtype=FP8_E5M2) -> jax.Array:
     """Real (storage) cast x -> fp8, saturating like ``quantize_fp8`` but
     returning the 1-byte array itself — the format the serving frontend
     stores cached LSTM states in. ``x.astype(back)`` recovers the
-    fake-quant value exactly (fp8 -> wider float is lossless)."""
+    fake-quant value exactly (fp8 -> wider float is lossless). Nonfinite
+    inputs stay nonfinite (e4m3fn has no inf code, so inf lands on NaN —
+    still detectable) rather than silently saturating to a finite code."""
     m = _MAX[dtype]
-    return jnp.clip(x.astype(jnp.float32), -m, m).astype(dtype)
+    xf = x.astype(jnp.float32)
+    return jnp.where(jnp.isfinite(xf), jnp.clip(xf, -m, m), xf).astype(dtype)
 
 
 def _make_roundtrip(fwd_dtype, bwd_dtype):

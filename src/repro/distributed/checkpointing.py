@@ -6,6 +6,20 @@ device_puts each leaf with the *target* sharding, so a checkpoint written on
 one topology restores onto any other (elastic scaling) — leaves are saved as
 full (addressable-gathered) arrays, the single-controller analogue of
 per-shard writes + reshard-on-load.
+
+Torn-write safety (the contract ``--resume auto`` depends on):
+
+  * arrays are fsync'd and the manifest — which records a CRC32
+    ``content_hash`` over the array payload — is written last inside the
+    tmp dir, so a manifest's existence implies the arrays it describes
+    were fully on disk *before* the publish rename;
+  * the publish is a single ``os.rename`` of the tmp dir to a final name
+    that never pre-exists for a new step (re-saving an existing step
+    renames the old dir aside first and removes it only after the new one
+    is live — there is no window where neither version exists);
+  * ``latest_step`` ignores ``.tmp`` dirs and manifest-less dirs, and
+    ``restore`` verifies the content hash — a SIGKILL at any byte of a
+    save leaves the previous checkpoint as the newest *valid* one.
 """
 from __future__ import annotations
 
@@ -14,15 +28,39 @@ import os
 import shutil
 import threading
 import time
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+from ..faults import CKPT_TORN_WRITE, FAULTS, InjectedFault
+
+__all__ = ["save", "restore", "latest_step", "CheckpointManager",
+           "CheckpointCorrupt"]
 
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
+
+
+class CheckpointCorrupt(RuntimeError):
+    """The stored arrays do not match the manifest's content hash."""
+
+
+def _fsync_file(p: str) -> None:
+    fd = os.open(p, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _content_hash(npz_path: str) -> int:
+    crc = 0
+    with open(npz_path, "rb") as f:
+        while chunk := f.read(1 << 20):
+            crc = zlib.crc32(chunk, crc)
+    return crc
 
 
 def _flatten_with_paths(tree):
@@ -41,20 +79,40 @@ def save(path: str, tree: Any, step: int, *, extra: dict | None = None) -> str:
     os.makedirs(tmp, exist_ok=True)
     keys, vals, _ = _flatten_with_paths(tree)
     host_vals = [np.asarray(jax.device_get(v)) for v in vals]
-    np.savez(os.path.join(tmp, _ARRAYS), **dict(zip(keys, host_vals)))
+    arrays_path = os.path.join(tmp, _ARRAYS)
+    np.savez(arrays_path, **dict(zip(keys, host_vals)))
+    _fsync_file(arrays_path)
+    if FAULTS.enabled and FAULTS.fire(CKPT_TORN_WRITE) is not None:
+        # die between the arrays and the manifest: the tmp dir is left
+        # torn and unpublished — latest_step must keep ignoring it
+        raise InjectedFault("torn checkpoint write (injected)")
     manifest = {
         "step": step,
         "keys": keys,
         "dtypes": [str(v.dtype) for v in host_vals],
         "shapes": [list(v.shape) for v in host_vals],
         "time": time.time(),
+        "content_hash": _content_hash(arrays_path),
         "extra": extra or {},
     }
-    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+    manifest_path = os.path.join(tmp, _MANIFEST)
+    with open(manifest_path, "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    # Publish with a plain rename onto a name that does not exist: for a
+    # new step that is the common case; when re-saving an existing step,
+    # move the old dir aside first so there is never a moment where no
+    # complete checkpoint dir carries this step's name.
+    old = None
     if os.path.exists(final):
-        shutil.rmtree(final)
+        old = final + ".old"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.rename(final, old)
     os.rename(tmp, final)  # atomic publish
+    if old is not None:
+        shutil.rmtree(old, ignore_errors=True)
     return final
 
 
@@ -64,7 +122,8 @@ def latest_step(path: str) -> int | None:
     steps = [
         int(d.split("_")[1])
         for d in os.listdir(path)
-        if d.startswith("step_") and not d.endswith(".tmp")
+        if d.startswith("step_")
+        and not d.endswith(".tmp") and not d.endswith(".old")
         and os.path.exists(os.path.join(path, d, _MANIFEST))
     ]
     return max(steps) if steps else None
@@ -78,6 +137,14 @@ def restore(path: str, target: Any, step: int | None = None, shardings: Any | No
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {path}")
     d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, _MANIFEST)) as f:
+        manifest = json.load(f)
+    want = manifest.get("content_hash")
+    if want is not None and _content_hash(os.path.join(d, _ARRAYS)) != want:
+        raise CheckpointCorrupt(
+            f"checkpoint {d} arrays do not match manifest content_hash — "
+            f"bit rot or a torn copy; restore an earlier step"
+        )
     data = np.load(os.path.join(d, _ARRAYS))
     keys, vals, treedef = _flatten_with_paths(target)
     out = []
@@ -128,7 +195,8 @@ class CheckpointManager:
         steps = sorted(
             int(d.split("_")[1])
             for d in os.listdir(self.path)
-            if d.startswith("step_") and not d.endswith(".tmp")
+            if d.startswith("step_")
+            and not d.endswith(".tmp") and not d.endswith(".old")
         )
         for s in steps[: -self.keep] if self.keep else []:
             shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"), ignore_errors=True)

@@ -76,12 +76,15 @@ class RestartableLoop:
         preemption: PreemptionSignal | None = None,
         straggler: StragglerMonitor | None = None,
         shardings: Any | None = None,
+        resume: str = "auto",
     ):
+        if resume not in ("auto", "never"):
+            raise ValueError(f"resume must be 'auto' or 'never', got {resume!r}")
         self.ckpt = ckpt
         self.save_every = save_every
         self.preemption = preemption or PreemptionSignal()
         self.straggler = straggler or StragglerMonitor()
-        latest = ckpt.latest_step()
+        latest = ckpt.latest_step() if resume == "auto" else None
         if latest is not None:
             template = init_state_fn()
             self.state, self.start_step = ckpt.restore(

@@ -78,6 +78,16 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--fail-at", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--resume", default="auto", choices=["auto", "never"],
+                    help="auto: restore the newest valid checkpoint under "
+                    "--ckpt-dir at startup (a SIGKILL'd run relaunched with "
+                    "the same command continues bit-compatibly); never: "
+                    "always start fresh")
+    ap.add_argument("--dynamic-scale", action="store_true",
+                    help="dynamic loss scaling: nonfinite grads skip the "
+                    "update and halve the scale (backoff), sustained finite "
+                    "windows double it — the recovery loop for fp8 "
+                    "overflow, vs the default static scale")
     ap.add_argument("--no-fused", action="store_true",
                     help="disable the fused quantized-BPTT backward "
                     "(restores the autodiff + grad_quant tree-pass path)")
@@ -103,13 +113,16 @@ def main():
 
         def init_fn():
             params = model.init(jax.random.PRNGKey(args.seed))
-            return init_state(params, opt, policy)
+            return init_state(
+                params, opt, policy, dynamic_scale=args.dynamic_scale
+            )
 
         ckpt = CheckpointManager(args.ckpt_dir, keep=3)
         loop = RestartableLoop(
             ckpt, init_fn, save_every=args.save_every,
             preemption=PreemptionSignal(install_sigterm=True),
             straggler=StragglerMonitor(),
+            resume=args.resume,
         )
         if loop.resumed:
             print(f"resumed from step {loop.start_step}", flush=True)
@@ -128,8 +141,12 @@ def main():
             telemetry = TelemetryLogger(path=tel_path)
             print(f"telemetry -> {tel_path}", flush=True)
 
+        skipped = [0]  # nonfinite-grad steps (update skipped, scale backed off)
+
         def on_metrics(step, m):
             hist.append(float(m["loss"]))
+            if not bool(m["grads_finite"]):
+                skipped[0] += 1
             if t_first_done[0] is None:
                 t_first_done[0] = time.time()
             if telemetry is not None:
@@ -164,7 +181,8 @@ def main():
             rate = f"{dt/max(done,1):.2f}s/step"
         print(
             f"trained {done} steps in {dt:.1f}s ({rate}); stragglers flagged: "
-            f"{len(loop.straggler.flagged)}",
+            f"{len(loop.straggler.flagged)}; nonfinite steps skipped: "
+            f"{skipped[0]}",
             flush=True,
         )
         pipeline.close()

@@ -31,6 +31,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..faults import (
+    ENGINE_STEP_RAISE,
+    ENGINE_STEP_SLOW,
+    FAULTS,
+    InjectedFault,
+    NONFINITE_LOGITS,
+    REPLICA_CRASH,
+    ReplicaCrash,
+)
 from ..obs.trace import TRACER
 from .metrics import ServeMetrics
 from .scheduler import Request, Scheduler
@@ -191,6 +200,11 @@ class ServeEngine:
         self._lane_used = [False] * lanes
         self._reset = np.zeros((lanes,), np.int32)
         self._rid = 0
+        # Replica identity (stamped by the Router) keys fault rules to a
+        # specific engine; `_crashed` is the sticky replica_crash state —
+        # once set, every step raises until the process restarts.
+        self.replica: int | None = None
+        self._crashed = False
 
         model_ = model
         pol = self.serve_policy
@@ -217,7 +231,12 @@ class ServeEngine:
                 logits, caches = model_.decode_step(params, tokens, caches, pol)
                 last = logits[:, -1, :]
             nxt = jnp.argmax(last, -1).astype(jnp.int32)
-            return nxt, caches
+            # Nonfinite guard: jnp.argmax over an all-NaN row silently
+            # returns index 0 — a poisoned lane would emit token 0 forever
+            # and its NaN state would bleed into the prefix cache. Flag
+            # per-lane logit health here, where the logits still exist.
+            ok = jnp.all(jnp.isfinite(last), axis=-1)
+            return nxt, ok, caches
 
         # Donate the cache slab: the pre-step state is never read after the
         # call (pool.swap installs the result), so XLA can update the lane
@@ -374,7 +393,12 @@ class ServeEngine:
         req.status = status
         if status != "done":
             req.cancel_reason = reason
-        if self.prefix_cache is not None and len(req.out) >= 2 and not lane.prefilling:
+        if (
+            self.prefix_cache is not None
+            and status != "numeric_error"  # never cache a poisoned state
+            and len(req.out) >= 2
+            and not lane.prefilling
+        ):
             # The lane's final state summarizes prompt + out[:-1] (the last
             # generated token was emitted but never fed back); out[-1] is
             # its exact greedy continuation. Serves resubmissions that
@@ -390,6 +414,9 @@ class ServeEngine:
                     )
         if status == "done":
             self.metrics.on_retire(req, now)
+        elif status == "numeric_error":
+            self.metrics.on_numeric_error(req)
+            self._reset[i] = 1  # wipe the poisoned state via the mask
         else:
             self.metrics.on_cancel(req, reason or "cancelled")
             # fold the lane release into the existing reset mask: the next
@@ -401,6 +428,12 @@ class ServeEngine:
                 TRACER.instant(
                     "engine.retire", cat="engine", rid=req.rid, lane=i,
                     new_tokens=len(req.out),
+                )
+            elif status == "numeric_error":
+                TRACER.instant(
+                    "engine.numeric_error", cat="engine", rid=req.rid,
+                    lane=i, new_tokens=len(req.out),
+                    reason=reason or "nonfinite_logits",
                 )
             else:
                 TRACER.instant(
@@ -484,10 +517,55 @@ class ServeEngine:
         self._reset[i] = 1  # freed state is wiped by the next step's mask
         self.scheduler.submit(req)  # t_submit preserved; resumes via stash
 
+    # -- replica failure -------------------------------------------------
+    def _check_faults(self) -> None:
+        """Injection points at the top of ``step_once`` — the boundary the
+        Router's per-replica health watches. Only reached when a plan is
+        armed (``FAULTS.enabled`` gates the call)."""
+        if FAULTS.fire(REPLICA_CRASH, key=self.replica) is not None:
+            self._crashed = True  # sticky: dead until process restart
+        if self._crashed:
+            raise ReplicaCrash(f"replica {self.replica} crashed")
+        f = FAULTS.fire(ENGINE_STEP_SLOW, key=self.replica)
+        if f is not None:
+            time.sleep(float(f.get("ms", 50)) / 1000.0)
+        if FAULTS.fire(ENGINE_STEP_RAISE, key=self.replica) is not None:
+            raise InjectedFault(
+                f"injected step error on replica {self.replica}"
+            )
+
+    def evacuate(self) -> list[Request]:
+        """Strip every live request off this replica so the Router can
+        resubmit them elsewhere (ejection path). Requests are rewound to
+        their pre-admission state — generated tokens cleared (greedy
+        decode is deterministic, so a healthy replica regenerates the
+        identical stream and the ticket's ``sent`` cursor deduplicates
+        delivery) — but keep their original ``t_submit``/``t_first`` so
+        latency accounting stays honest across the move."""
+        out: list[Request] = []
+        while self.scheduler:
+            out.append(self.scheduler.pop())
+        for i, lane in enumerate(self._lanes):
+            if lane is not None:
+                out.append(lane.req)
+                self._lanes[i] = None
+        self._preempted.clear()
+        for req in out:
+            req.out.clear()
+            req.status = "active"
+            req.preempt_count = 0
+        return out
+
     # -- the batched step ------------------------------------------------
     def step_once(self) -> bool:
         """Advance every active lane one scheduling quantum. Returns False
-        when there is nothing left to do."""
+        when there is nothing left to do. Raises :class:`ReplicaCrash` /
+        :class:`InjectedFault` under an armed fault plan — the Router's
+        health layer catches these and ejects or retries."""
+        if self._crashed:
+            raise ReplicaCrash(f"replica {self.replica} crashed")
+        if FAULTS.enabled:
+            self._check_faults()
         self._maybe_preempt()
         self._arm_free_lanes()
         active = [i for i, l in enumerate(self._lanes) if l is not None]
@@ -541,7 +619,7 @@ class ServeEngine:
             else TRACER.span("engine.step")
         )
         with step_span:
-            nxt, caches = self._step(
+            nxt, ok, caches = self._step(
                 self.serve_params,
                 jnp.asarray(tokens),
                 jnp.asarray(ks),
@@ -549,7 +627,16 @@ class ServeEngine:
                 jnp.asarray(reset),
             )
             nxt = np.asarray(nxt)  # sync point: step outputs materialized
+            ok = np.asarray(ok)
         self.pool.swap(caches)
+        if FAULTS.enabled and FAULTS.fire(NONFINITE_LOGITS, key=self.replica):
+            # Poison the host copy of one active lane's health flag: the
+            # recovery path below is identical to a real device-side NaN
+            # (tests inject actual NaN params to pin the jnp.isfinite leg).
+            # np.asarray of a device array is a read-only zero-copy view,
+            # so take a writable copy here (off the fault-free hot path).
+            ok = ok.copy()
+            ok[active[0]] = False
 
         self.metrics.on_step(
             width=S,
@@ -561,6 +648,15 @@ class ServeEngine:
         cache = self.prefix_cache
         for i in active:
             lane = self._lanes[i]
+            if not ok[i]:
+                # Nonfinite logits: never sample from NaN (the argmax
+                # result is garbage), never let the poisoned state reach
+                # the prefix cache or the next step — retire the request
+                # with a distinct status and fold the lane wipe into the
+                # reset mask, exactly like a cancel.
+                self._retire(i, status="numeric_error",
+                             reason="nonfinite_logits")
+                continue
             if lane.prefilling:
                 lane.pos += int(ks[i])
                 self.metrics.prompt_tokens += int(ks[i])

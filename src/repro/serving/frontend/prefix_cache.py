@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -47,8 +48,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core import fp8
+from ...faults import CACHE_CORRUPT, FAULTS
 
-__all__ = ["PrefixCache", "CacheEntry", "CacheHit"]
+__all__ = ["PrefixCache", "CacheEntry", "CacheHit", "entry_checksum"]
+
+
+def entry_checksum(states_fp8, next_token: Optional[int]) -> int:
+    """CRC32 over every stored FP8 leaf plus the continuation token.
+    Entries are a few KB of host bytes, so this is cheap relative to the
+    dequantize a hit pays anyway — and it is the only defense between a
+    silently flipped bit and a poisoned lane injection."""
+    crc = zlib.crc32(b"" if next_token is None else str(next_token).encode())
+    for leaf in jax.tree_util.tree_leaves(states_fp8):
+        crc = zlib.crc32(np.ascontiguousarray(leaf).view(np.uint8), crc)
+    return crc
 
 
 @dataclasses.dataclass
@@ -60,6 +73,7 @@ class CacheEntry:
     dtypes: Any  # pytree of original leaf dtypes (restored on hit)
     next_token: Optional[int]  # greedy argmax after this prefix, if known
     nbytes: int
+    checksum: int = 0  # entry_checksum() at insert; verified on use
 
     @property
     def length(self) -> int:
@@ -120,6 +134,7 @@ class PrefixCache:
         self.misses = 0
         self.insertions = 0
         self.evictions = 0
+        self.corruptions = 0  # checksum failures caught at lookup
 
     def __len__(self) -> int:
         return len(self._lru)
@@ -155,6 +170,15 @@ class PrefixCache:
             self.misses += 1
             return None
         match_len, entry = best
+        if entry_checksum(entry.states_fp8, entry.next_token) != entry.checksum:
+            # corrupt-as-miss: evict the damaged entry and report a miss —
+            # injecting a bit-flipped state would silently corrupt every
+            # token the lane goes on to decode. The shallower entries on
+            # the path stay; the next identical lookup falls back to them.
+            self.corruptions += 1
+            self.misses += 1
+            self._evict_key(entry.key)
+            return None
         self.hits += 1
         full = match_len == len(toks)
         if full:
@@ -238,13 +262,28 @@ class PrefixCache:
         nbytes = sum(
             a.nbytes for a in jax.tree_util.tree_leaves(states_fp8)
         ) + len(toks) * 4  # key tokens count against the budget too
+        nt = None if next_token is None else int(next_token)
         entry = CacheEntry(
             key=toks,
             states_fp8=states_fp8,
             dtypes=dtypes,
-            next_token=None if next_token is None else int(next_token),
+            next_token=nt,
             nbytes=nbytes,
+            checksum=entry_checksum(states_fp8, nt),
         )
+        if FAULTS.enabled and FAULTS.fire(CACHE_CORRUPT) is not None:
+            # flip one byte AFTER the checksum is recorded: a later lookup
+            # must detect the mismatch and treat the entry as a miss. The
+            # leaves are read-only device exports, so flip a copy.
+            leaves, treedef = jax.tree_util.tree_flatten(entry.states_fp8)
+            bad = leaves[0].copy()
+            bad.view(np.uint8).reshape(-1)[0] ^= 0xFF
+            entry = dataclasses.replace(
+                entry,
+                states_fp8=jax.tree_util.tree_unflatten(
+                    treedef, [bad] + leaves[1:]
+                ),
+            )
         node = self._root
         for t in toks:
             node = node.children.setdefault(t, _TrieNode())
@@ -256,6 +295,13 @@ class PrefixCache:
         self.nbytes += nbytes
         self.insertions += 1
         while self.nbytes > self.budget_bytes and self._lru:
+            self._evict_lru()
+
+    def _evict_key(self, key: tuple) -> None:
+        """Targeted eviction (corrupt entry): rotate the key to the LRU
+        front and reuse the pop-and-prune path."""
+        if key in self._lru:
+            self._lru.move_to_end(key, last=False)
             self._evict_lru()
 
     def _evict_lru(self) -> None:
@@ -290,4 +336,5 @@ class PrefixCache:
             "hit_rate": self.hits / lookups if lookups else 0.0,
             "insertions": self.insertions,
             "evictions": self.evictions,
+            "corruptions": self.corruptions,
         }

@@ -44,6 +44,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from ...faults import FAULTS, ReplicaCrash
 from ...kernels import dispatch as kernel_dispatch
 from ...obs.trace import TRACER
 from ..engine import ServeEngine
@@ -52,7 +53,10 @@ from ..scheduler import Request, Scheduler
 
 __all__ = ["Ticket", "Router", "AsyncRouter", "RequestRejected"]
 
-REJECT_REASONS = ("queue_full", "tenant_quota", "bad_request", "deadline_expired")
+REJECT_REASONS = (
+    "queue_full", "tenant_quota", "bad_request", "deadline_expired",
+    "no_healthy_replicas",
+)
 
 
 class RequestRejected(RuntimeError):
@@ -71,8 +75,11 @@ class Ticket:
 
     rid: int
     tenant: str
-    status: str  # "queued" | "running" | "done" | "rejected" | "cancelled"
-    reason: Optional[str] = None  # set iff rejected or cancelled
+    # "queued" | "running" | "done" | "rejected" | "cancelled"
+    # | "numeric_error" (the engine's nonfinite-logit guard retired it:
+    # partial tokens are valid, the poisoned lane state was reset)
+    status: str
+    reason: Optional[str] = None  # set iff rejected/cancelled/numeric_error
     req: Optional[Request] = None
     on_token: Optional[Callable[[int], None]] = None
     sent: int = 0  # tokens already delivered to on_token
@@ -116,6 +123,8 @@ class Router:
         admission: str = "edf",
         tenant_quota: Optional[int] = None,
         drop_expired: bool = True,
+        eject_after: int = 3,
+        probe_every: int = 8,
     ):
         if not engines:
             raise ValueError("Router needs at least one engine replica")
@@ -134,7 +143,26 @@ class Router:
         # "client_cancel" (explicit cancel/DELETE), "abandoned"
         # (streaming consumer disconnected), "deadline_expired" (mid-flight)
         self.cancellations: dict[str, int] = {}
-        for e in self.engines:
+        # -- per-replica health -------------------------------------------
+        # A replica is ejected after `eject_after` consecutive step
+        # failures (immediately on ReplicaCrash); ejected replicas are
+        # probed every `probe_every` pumps and reinstated when a probe
+        # step succeeds. Its live requests are resubmitted to the healthy
+        # pool with their original t_submit (honest latency accounting)
+        # and deduplicated delivery via each ticket's `sent` cursor.
+        self.eject_after = eject_after
+        self.probe_every = probe_every
+        self._health = [
+            {"healthy": True, "consecutive_failures": 0,
+             "pumps_since_probe": 0, "last_error": None}
+            for _ in self.engines
+        ]
+        self.ejections = 0
+        self.reinstatements = 0
+        self.resubmits = 0
+        self.retries = 0  # admission retries noted by the HTTP layer
+        for i, e in enumerate(self.engines):
+            e.replica = i  # fault-rule / trace identity
             if e.metrics.t_start is None:
                 e.metrics.start()
 
@@ -193,6 +221,12 @@ class Router:
             and time.monotonic() > deadline
         ):
             return self._reject(ticket, "deadline_expired")  # dead on arrival
+        if not any(h["healthy"] for h in self._health):
+            # circuit breaker: every replica is ejected — fail fast with a
+            # distinct reason instead of queueing work nobody can serve
+            # (retry-with-backoff upstream is only worth it while at least
+            # one healthy replica remains)
+            return self._reject(ticket, "no_healthy_replicas")
         if len(self._queue) >= self.max_queue:
             # before bouncing a serviceable request, drop queued work whose
             # deadline already passed — under saturation the backlog is
@@ -259,7 +293,11 @@ class Router:
             # move the backlog into its internal FIFO — where the router's
             # admission policy, deadline dropping, and max_queue
             # backpressure no longer apply. Keep the excess here.
-            free = [e for e in self.engines if e.free_lanes > len(e.scheduler)]
+            free = [
+                e for i, e in enumerate(self.engines)
+                if self._health[i]["healthy"]
+                and e.free_lanes > len(e.scheduler)
+            ]
             if not free:
                 return
             req = self._queue.pop()
@@ -295,7 +333,9 @@ class Router:
         with the reason, and whatever tokens were already generated stay
         readable on it."""
         ticket = self._tickets.get(rid)
-        if ticket is None or ticket.status in ("done", "rejected", "cancelled"):
+        if ticket is None or ticket.status in (
+            "done", "rejected", "cancelled", "numeric_error"
+        ):
             return False
         if ticket.status == "queued":
             req = self._queue.remove(rid)
@@ -354,7 +394,18 @@ class Router:
                     for tok in req.out[ticket.sent :]:
                         ticket.on_token(tok)
                 ticket.sent = len(req.out)
-            if req.done:
+            if req.status == "numeric_error":
+                # the engine's nonfinite guard retired it terminally; the
+                # tokens generated BEFORE the poisoned step were delivered
+                # above and stay valid (never the NaN-argmax token itself)
+                ticket.status = "numeric_error"
+                ticket.reason = req.cancel_reason or "nonfinite_logits"
+                ticket.t_done = time.monotonic()
+                acct = self._tenant(ticket.tenant)
+                acct["numeric_error"] = acct.get("numeric_error", 0) + 1
+                del self._inflight[ticket.rid]
+                self._tickets.pop(ticket.rid, None)
+            elif req.done:
                 ticket.status = "done"
                 ticket.t_done = time.monotonic()
                 acct = self._tenant(ticket.tenant)
@@ -366,17 +417,110 @@ class Router:
                 # Ticket; aggregates live in self.tenants / engine metrics)
                 self._tickets.pop(ticket.rid, None)
 
+    # -- replica health --------------------------------------------------
+    @property
+    def healthy_replicas(self) -> int:
+        return sum(h["healthy"] for h in self._health)
+
+    def _eject(self, i: int, reason: str) -> None:
+        """Take replica ``i`` out of rotation and move its live requests
+        (engine queue, bound lanes, preempted stash) back into the router
+        queue for redispatch to the healthy pool. Resubmission preserves
+        ``t_submit``/``t_first`` (latency stays honest) and relies on each
+        ticket's ``sent`` cursor for idempotent delivery: greedy decode is
+        deterministic, so a healthy replica regenerates the identical
+        stream and already-delivered tokens are skipped."""
+        h = self._health[i]
+        h["healthy"] = False
+        h["pumps_since_probe"] = 0
+        self.ejections += 1
+        if TRACER.enabled:
+            TRACER.instant(
+                "router.eject", cat="router", replica=i, reason=reason,
+            )
+        for req in self.engines[i].evacuate():
+            ticket = self._tickets.get(req.rid)
+            if ticket is None or ticket.status in (
+                "done", "rejected", "cancelled", "numeric_error"
+            ):
+                continue
+            self._queue.submit(req)  # t_submit preserved by the scheduler
+            self._queued_by_tenant[req.tenant] = (
+                self._queued_by_tenant.get(req.tenant, 0) + 1
+            )
+            ticket.status = "queued"
+            self.resubmits += 1
+            if TRACER.enabled:
+                TRACER.instant(
+                    "router.resubmit", cat="router", rid=req.rid,
+                    replica=i, delivered=ticket.sent,
+                )
+
+    def _on_step_failure(self, i: int, exc: Exception) -> None:
+        h = self._health[i]
+        h["last_error"] = f"{type(exc).__name__}: {exc}"
+        if isinstance(exc, ReplicaCrash):
+            self._eject(i, reason="crash")
+            return
+        h["consecutive_failures"] += 1
+        if h["consecutive_failures"] >= self.eject_after:
+            self._eject(i, reason="consecutive_failures")
+
+    def _maybe_probe(self, i: int) -> None:
+        """Every ``probe_every`` pumps, try one (empty) step on an ejected
+        replica; a clean return reinstates it. A crashed replica keeps
+        raising and stays out of rotation."""
+        h = self._health[i]
+        h["pumps_since_probe"] += 1
+        if h["pumps_since_probe"] < self.probe_every:
+            return
+        h["pumps_since_probe"] = 0
+        try:
+            self.engines[i].step_once()  # evacuated: probes the step path
+        except Exception as exc:  # noqa: BLE001 - any failure keeps it out
+            h["last_error"] = f"{type(exc).__name__}: {exc}"
+            return
+        h["healthy"] = True
+        h["consecutive_failures"] = 0
+        h["last_error"] = None
+        self.reinstatements += 1
+        if TRACER.enabled:
+            TRACER.instant("router.reinstate", cat="router", replica=i)
+
     def pump(self) -> bool:
         """One scheduling round: dispatch queued work, advance every busy
-        replica one batched step, deliver new tokens. Returns True while
-        there is anything left to do."""
+        healthy replica one batched step, deliver new tokens, probe
+        ejected replicas. Returns True while there is anything left to
+        do."""
         with TRACER.span("router.pump", cat="router"):
             self._cancel_stale()
+            if not any(h["healthy"] for h in self._health) and self._queue:
+                # total outage: the breaker is open — bounce the backlog
+                # with the distinct reason instead of holding requests
+                # (and drain() loops) hostage to a probe that may never
+                # succeed. New submissions are already rejected at intake.
+                while self._queue:
+                    req = self._queue.pop()
+                    self._queued_by_tenant[req.tenant] -= 1
+                    self._reject(self._tickets[req.rid],
+                                 "no_healthy_replicas")
             self._dispatch()
             progressed = False
-            for e in self.engines:
+            for i, e in enumerate(self.engines):
+                if not self._health[i]["healthy"]:
+                    self._maybe_probe(i)
+                    progressed = progressed or self._health[i]["healthy"]
+                    continue
                 if e.has_work():
-                    progressed = e.step_once() or progressed
+                    try:
+                        progressed = e.step_once() or progressed
+                        self._health[i]["consecutive_failures"] = 0
+                    except Exception as exc:  # noqa: BLE001 - health layer
+                        # A replica failure must never take the router
+                        # down: record it, maybe eject, and let the
+                        # resubmitted work land on the healthy pool.
+                        self._on_step_failure(i, exc)
+                        progressed = True  # health state advanced
             self._deliver()
             if TRACER.enabled:
                 # predicted-cost counter tracks (cost.<op>) alongside the
@@ -391,6 +535,11 @@ class Router:
             pass
         for e in self.engines:
             e.metrics.stop()
+
+    def note_retry(self) -> None:
+        """Count one admission retry performed by an upstream layer (the
+        HTTP server's backoff loop) — surfaced as ``repro_retries_total``."""
+        self.retries += 1
 
     # -- reporting -------------------------------------------------------
     @property
@@ -412,6 +561,7 @@ class Router:
         count, and rejection counters."""
         return {
             "replicas": len(self.engines),
+            "healthy_replicas": self.healthy_replicas,
             "lanes": sum(e.lanes_n for e in self.engines),
             "free_lanes": sum(e.free_lanes for e in self.engines),
             "queued": len(self._queue),
@@ -419,6 +569,20 @@ class Router:
             "tenants": len(self.tenants),
             "rejections": dict(self.rejections),
             "cancellations": dict(self.cancellations),
+            "ejections": self.ejections,
+            "reinstatements": self.reinstatements,
+            "resubmits": self.resubmits,
+            "retries": self.retries,
+            "replica_health": [
+                {
+                    "replica": i,
+                    "healthy": h["healthy"],
+                    "consecutive_failures": h["consecutive_failures"],
+                    "last_error": h["last_error"],
+                }
+                for i, h in enumerate(self._health)
+            ],
+            "faults": FAULTS.stats(),
         }
 
     def report(self) -> dict:
@@ -431,10 +595,16 @@ class Router:
                 "requests", "steps", "prefill_steps", "decode_steps",
                 "emitted_tokens", "prompt_tokens", "cache_lookups",
                 "cache_hits", "cache_full_hits", "prefill_tokens_saved",
-                "cancelled", "preemptions", "resumes",
+                "cancelled", "preemptions", "resumes", "numeric_errors",
             )
         }
         summed["cancellations"] = dict(self.cancellations)
+        summed["ejections"] = self.ejections
+        summed["reinstatements"] = self.reinstatements
+        summed["resubmits"] = self.resubmits
+        summed["retries"] = self.retries
+        summed["healthy_replicas"] = self.healthy_replicas
+        summed["faults_injected"] = dict(FAULTS.injected)
         summed["cache_hit_rate"] = (
             summed["cache_hits"] / summed["cache_lookups"]
             if summed["cache_lookups"]
@@ -517,7 +687,7 @@ class AsyncRouter:
         # it. Early consumers set ticket.abandoned instead, bounding the
         # wait at one pump (one batched engine step), after which the loop
         # exits between pumps.
-        terminal = ("done", "rejected", "cancelled")
+        terminal = ("done", "rejected", "cancelled", "numeric_error")
         while ticket.status not in terminal and not ticket.abandoned:
             async with self._lock:
                 if ticket.status in terminal or ticket.abandoned:

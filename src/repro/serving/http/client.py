@@ -9,11 +9,25 @@ implementation on each side.
 dedicated connection per SSE stream (the server delimits event streams by
 connection close). Non-2xx responses raise ``HttpError`` carrying the
 status and decoded body, so callers can assert on the reject mapping.
+
+Failure semantics (every await is bounded — a dead server can never hang
+a caller forever):
+
+  * connects are retried up to ``connect_retries`` times with jittered
+    exponential backoff before raising;
+  * every response read is capped at ``timeout_s`` and raises
+    ``asyncio.TimeoutError`` (the connection is torn down — a late
+    response must not be misread as the answer to the *next* request);
+  * a failed round trip is re-sent only when a REUSED pooled connection
+    broke (stale keep-alive socket), never after a fresh-connection
+    failure or a timeout — the server may already be executing the
+    request, and blind re-sends would double the device work.
 """
 from __future__ import annotations
 
 import asyncio
 import json
+import random
 from typing import Any, AsyncIterator, Optional, Tuple
 
 __all__ = ["Client", "HttpError"]
@@ -61,16 +75,44 @@ async def _read_response_head(reader) -> Tuple[int, dict]:
 
 
 class Client:
-    def __init__(self, host: str, port: int, tenant: Optional[str] = None):
+    def __init__(
+        self,
+        host: str,
+        port: int,
+        tenant: Optional[str] = None,
+        timeout_s: float = 30.0,
+        connect_retries: int = 2,
+        backoff_s: float = 0.05,
+    ):
         self.host = host
         self.port = port
         self.tenant = tenant
+        self.timeout_s = timeout_s
+        self.connect_retries = connect_retries
+        self.backoff_s = backoff_s
+        self.retries = 0  # connect + stale-socket retries performed
         self._reader: Optional[asyncio.StreamReader] = None
         self._writer: Optional[asyncio.StreamWriter] = None
 
     # -- connection management ------------------------------------------
     async def _connect(self) -> Tuple[asyncio.StreamReader, asyncio.StreamWriter]:
-        return await asyncio.open_connection(self.host, self.port)
+        """Connect with bounded jittered-backoff retry: a server that is
+        mid-restart (or a listen backlog burst) answers on the second
+        attempt instead of failing the whole call."""
+        for attempt in range(self.connect_retries + 1):
+            try:
+                return await asyncio.wait_for(
+                    asyncio.open_connection(self.host, self.port),
+                    self.timeout_s,
+                )
+            except (OSError, asyncio.TimeoutError):
+                if attempt >= self.connect_retries:
+                    raise
+                self.retries += 1
+                await asyncio.sleep(
+                    self.backoff_s * (2 ** attempt) * (1 + random.random())
+                )
+        raise ConnectionError("unreachable")  # loop always returns/raises
 
     async def _keepalive(
         self,
@@ -115,10 +157,16 @@ class Client:
         Retried exactly once, and only when a REUSED pooled connection
         failed — the server closing an idle keep-alive socket between
         requests is indistinguishable from a send into a dead pipe, so
-        the request is re-sent on a fresh connection. A failure on a
-        fresh connection is never retried: for non-idempotent POSTs the
-        first attempt may have executed server-side, and blind re-sends
-        would double the device work.
+        the request is re-sent (after a jittered backoff) on a fresh
+        connection. A failure on a fresh connection is never retried: for
+        non-idempotent POSTs the first attempt may have executed
+        server-side, and blind re-sends would double the device work.
+
+        Every read is capped at ``timeout_s``: a server that accepted the
+        request and then died mid-response raises ``asyncio.TimeoutError``
+        here instead of hanging the caller forever. Timeouts are never
+        retried (the request may be executing); the connection is closed
+        so a late response cannot corrupt the next round trip.
         """
         payload = None if body is None else json.dumps(body).encode("utf-8")
         raw = _request_bytes(method, path, self.host, payload, headers)
@@ -127,13 +175,24 @@ class Client:
             try:
                 writer.write(raw)
                 await writer.drain()
-                status, hdrs = await _read_response_head(reader)
+                status, hdrs = await asyncio.wait_for(
+                    _read_response_head(reader), self.timeout_s
+                )
                 n = int(hdrs.get("content-length", 0))
-                data = await reader.readexactly(n) if n else b""
+                data = (
+                    await asyncio.wait_for(reader.readexactly(n), self.timeout_s)
+                    if n
+                    else b""
+                )
+            except asyncio.TimeoutError:
+                await self.close()
+                raise
             except (ConnectionError, asyncio.IncompleteReadError, OSError):
                 await self.close()
                 if not reused:
                     raise
+                self.retries += 1
+                await asyncio.sleep(self.backoff_s * (1 + random.random()))
                 continue  # stale pooled socket: one fresh-connection retry
             if hdrs.get("connection", "").lower() == "close":
                 await self.close()
@@ -211,14 +270,23 @@ class Client:
                 )
             )
             await writer.drain()
-            status, hdrs = await _read_response_head(reader)
+            status, hdrs = await asyncio.wait_for(
+                _read_response_head(reader), self.timeout_s
+            )
             if status >= 400:
                 n = int(hdrs.get("content-length", 0))
-                data = await reader.readexactly(n) if n else b""
+                data = (
+                    await asyncio.wait_for(reader.readexactly(n), self.timeout_s)
+                    if n
+                    else b""
+                )
                 raise HttpError(status, json.loads(data) if data else {})
             event, data_lines = "message", []
             while True:
-                line = await reader.readline()
+                # per-frame cap: a server that dies (or a dropped socket
+                # the kernel hasn't noticed) mid-stream surfaces as a
+                # TimeoutError after timeout_s, not an eternal hang
+                line = await asyncio.wait_for(reader.readline(), self.timeout_s)
                 if not line:  # server closed: end of stream
                     return
                 line = line.rstrip(b"\r\n").decode("utf-8")

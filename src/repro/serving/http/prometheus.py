@@ -151,6 +151,42 @@ def render_metrics(
              "Preempted requests restored onto a lane from their FP8 snapshot.")
     w.sample("repro_resumes_total", report.get("resumes", 0))
 
+    # -- replica health / fault injection --------------------------------
+    w.metric("repro_healthy_replicas", "gauge",
+             "Replicas currently in rotation (ejected replicas excluded). "
+             "0 means the admission circuit breaker is open.")
+    w.sample("repro_healthy_replicas", stats.get("healthy_replicas",
+                                                 stats["replicas"]))
+    w.metric("repro_replica_ejections_total", "counter",
+             "Replicas taken out of rotation after a crash or repeated "
+             "step failures; their live requests were resubmitted.")
+    w.sample("repro_replica_ejections_total", stats.get("ejections", 0))
+    w.metric("repro_replica_reinstatements_total", "counter",
+             "Ejected replicas returned to rotation by a successful probe.")
+    w.sample("repro_replica_reinstatements_total",
+             stats.get("reinstatements", 0))
+    w.metric("repro_resubmits_total", "counter",
+             "In-flight requests moved off a dead replica back into the "
+             "router queue (t_submit preserved, delivery deduplicated).")
+    w.sample("repro_resubmits_total", stats.get("resubmits", 0))
+    w.metric("repro_retries_total", "counter",
+             "Admission retries performed by the HTTP layer's backoff loop "
+             "on transient queue_full rejections.")
+    w.sample("repro_retries_total", stats.get("retries", 0))
+    w.metric("repro_numeric_errors_total", "counter",
+             "Requests retired with nonfinite logits (status "
+             "numeric_error): the lane was reset instead of sampling "
+             "garbage from NaN.")
+    w.sample("repro_numeric_errors_total", report.get("numeric_errors", 0))
+    faults = stats.get("faults") or {}
+    if faults.get("injected") or faults.get("enabled"):
+        w.metric("repro_faults_injected_total", "counter",
+                 "Deliberate fault injections fired by the armed "
+                 "REPRO_FAULTS plan, by injection point (absent when the "
+                 "fault layer has never been armed).")
+        for point, n in sorted(faults.get("injected", {}).items()):
+            w.sample("repro_faults_injected_total", n, {"point": point})
+
     # -- prefix cache ----------------------------------------------------
     w.metric("repro_cache_lookups_total", "counter", "Prefix-cache admission lookups.")
     w.sample("repro_cache_lookups_total", report["cache_lookups"])
@@ -170,6 +206,11 @@ def render_metrics(
         w.sample("repro_cache_budget_bytes", cache_stats["budget_bytes"])
         w.metric("repro_cache_evictions_total", "counter", "LRU evictions under the byte budget.")
         w.sample("repro_cache_evictions_total", cache_stats["evictions"])
+        w.metric("repro_cache_corruptions_total", "counter",
+                 "Entries whose stored checksum failed verification at "
+                 "lookup — served as a miss and evicted, never injected.")
+        w.sample("repro_cache_corruptions_total",
+                 cache_stats.get("corruptions", 0))
 
     # -- request phase breakdown ----------------------------------------
     # queue + prefill == TTFT and queue + prefill + decode == latency, so

@@ -49,9 +49,10 @@ import time
 import traceback
 from typing import Optional
 
+from ...faults import FAULTS, SOCKET_DROP
 from ...kernels import dispatch as kernel_dispatch
 from ...obs.trace import TRACER
-from ..frontend.router import AsyncRouter, Router
+from ..frontend.router import AsyncRouter, Router, Ticket
 from .protocol import (
     HttpRequest,
     ProtocolError,
@@ -76,6 +77,10 @@ REASON_STATUS = {
     "tenant_quota": 429,
     "queue_full": 503,
     "deadline_expired": 504,
+    # the router's circuit breaker: every replica ejected. 503 like
+    # queue_full (the condition is transient — probes reinstate), but the
+    # distinct body reason tells operators it is health, not load.
+    "no_healthy_replicas": 503,
 }
 _RETRYABLE = (429, 503)
 
@@ -100,6 +105,8 @@ class HttpServer:
         default_max_new: int = 32,
         max_new_cap: int = 1024,
         trace: bool = True,
+        admit_retries: int = 2,
+        retry_backoff_s: float = 0.05,
     ):
         self.router = router
         self.aroute = AsyncRouter(router)
@@ -107,6 +114,13 @@ class HttpServer:
         self.port = port  # replaced by the bound port after start()
         self.default_max_new = default_max_new
         self.max_new_cap = max_new_cap
+        # transient-rejection absorption: a "queue_full" bounce while at
+        # least one replica is healthy is retried in-server with backoff
+        # (admit_retries extra attempts) before the 503 reaches the wire —
+        # the common cause is an ejection burst resubmitting a replica's
+        # live requests into the router queue, which clears within pumps.
+        self.admit_retries = admit_retries
+        self.retry_backoff_s = retry_backoff_s
         self.trace = trace  # enable the process tracer on start()
         self.draining = False
         self.t_start: Optional[float] = None
@@ -320,6 +334,25 @@ class HttpServer:
             debug,
         )
 
+    def _retryable(self, ticket: Ticket) -> bool:
+        """A rejection worth retrying in-server: transient backpressure
+        ("queue_full" — e.g. an ejection burst just resubmitted a dead
+        replica's requests into the router queue) while at least one
+        healthy replica remains to clear it. Health/breaker rejections
+        ("no_healthy_replicas") and caller errors go straight to the wire.
+        Reads ``healthy_replicas`` without the pump lock: a stale-by-one-
+        pump read only costs one extra (harmless) retry."""
+        return (
+            not ticket.ok
+            and ticket.reason == "queue_full"
+            and self.router.healthy_replicas > 0
+            and not self.draining
+        )
+
+    async def _backoff(self, attempt: int) -> None:
+        await self.aroute.snapshot(lambda r: r.note_retry())
+        await asyncio.sleep(self.retry_backoff_s * (2 ** attempt))
+
     # -- endpoint handlers -----------------------------------------------
     async def _cancel(self, req: HttpRequest) -> bytes:
         """DELETE /v1/requests/{rid}: explicit engine-level cancellation.
@@ -345,7 +378,11 @@ class HttpServer:
                     extra_headers=[("Retry-After", "5")],
                 )
             kw, debug = self._parse_submission(req)
-            ticket = await self.aroute.generate(**kw)
+            for attempt in range(self.admit_retries + 1):
+                ticket = await self.aroute.generate(**kw)
+                if attempt >= self.admit_retries or not self._retryable(ticket):
+                    break
+                await self._backoff(attempt)
         finally:
             self._admitting -= 1
         if not ticket.ok:
@@ -371,6 +408,12 @@ class HttpServer:
             # the caller (or another connection) asked for this outcome
             payload["status"] = "cancelled"
             payload["reason"] = ticket.reason
+        elif ticket.status == "numeric_error":
+            # the engine's nonfinite-logit guard retired the request: the
+            # partial tokens are valid (generated before the poisoned
+            # step), the status tells the caller the tail is missing
+            payload["status"] = "numeric_error"
+            payload["reason"] = ticket.reason
         if debug:
             payload["phases"] = r.phases()
         return json_response(200, payload)
@@ -389,7 +432,11 @@ class HttpServer:
             kw, debug = self._parse_submission(req)
             # submit BEFORE committing to a status line: a rejection must
             # reach the client as its mapped status, not a broken stream
-            ticket, toks = await self.aroute.open_stream(**kw)
+            for attempt in range(self.admit_retries + 1):
+                ticket, toks = await self.aroute.open_stream(**kw)
+                if attempt >= self.admit_retries or not self._retryable(ticket):
+                    break
+                await self._backoff(attempt)
         finally:
             self._admitting -= 1
         if toks is None:
@@ -405,6 +452,14 @@ class HttpServer:
         index = 0
         try:
             async for tok in toks:
+                if FAULTS.enabled and FAULTS.fire(
+                    SOCKET_DROP, key=ticket.rid, rid=ticket.rid
+                ) is not None:
+                    # abort the connection mid-stream: the finally below
+                    # closes the token iterator, which abandons the ticket
+                    # — the engine cancels it within one pump instead of
+                    # decoding to max_new for a dead socket
+                    raise ConnectionError("injected socket drop")
                 writer.write(sse_event({"index": index, "token": int(tok)}))
                 await writer.drain()
                 index += 1
@@ -452,6 +507,11 @@ class HttpServer:
                 # explicit DELETE while streaming: terminal done frame with
                 # the partial count — the consumer asked for this outcome
                 done_payload["status"] = "cancelled"
+                done_payload["reason"] = ticket.reason
+            elif ticket.status == "numeric_error":
+                # nonfinite-logit retire mid-stream: the tokens already on
+                # the wire are valid; the terminal frame flags the cut
+                done_payload["status"] = "numeric_error"
                 done_payload["reason"] = ticket.reason
             if debug:
                 done_payload["phases"] = r.phases()

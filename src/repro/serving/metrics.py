@@ -178,6 +178,7 @@ class ServeMetrics:
     retired: int = 0  # total retired requests (records is only a window)
     cancelled: int = 0  # requests cancelled before completing
     cancelled_by_reason: dict = dataclasses.field(default_factory=dict)
+    numeric_errors: int = 0  # lanes retired on nonfinite logits
     preemptions: int = 0  # lanes snapshotted + requeued for shorter work
     resumes: int = 0  # preempted requests restored onto a lane
     records: collections.deque = dataclasses.field(
@@ -263,6 +264,15 @@ class ServeMetrics:
             self.cancelled_by_reason.get(reason, 0) + 1
         )
 
+    def on_numeric_error(self, req) -> None:
+        """A lane hit nonfinite logits and was retired defensively. Like
+        cancels, these carry no honest latency sample, so they are kept
+        out of the percentile window — which also pins the empty-window
+        safety property: a window where *every* request errored must
+        still produce all-zero summaries, never a ZeroDivisionError."""
+        del req
+        self.numeric_errors += 1
+
     def on_cache_lookup(self, hit: bool, full: bool, saved: int) -> None:
         self.cache_lookups += 1
         if hit:
@@ -295,6 +305,7 @@ class ServeMetrics:
             "requests": self.retired,
             "cancelled": self.cancelled,
             "cancelled_by_reason": dict(self.cancelled_by_reason),
+            "numeric_errors": self.numeric_errors,
             "preemptions": self.preemptions,
             "resumes": self.resumes,
             "steps": self.steps,

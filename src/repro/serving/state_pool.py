@@ -85,11 +85,22 @@ class StatePool:
         (same treedef as one extract()ed lane). Replaces ALL of the lane's
         state, so an injected lane must NOT also be masked-reset — the
         reset would zero the injection."""
-        self.caches = jax.tree_util.tree_map(
-            lambda c, s: c.at[lane].set(jnp.asarray(s).astype(c.dtype)),
-            self.caches,
-            snapshot,
-        )
+        if not 0 <= lane < self.lanes:
+            raise ValueError(f"inject: lane {lane} out of range [0, {self.lanes})")
+
+        def _set(c, s):
+            s = jnp.asarray(s)
+            # A stale or damaged snapshot (config change, cache entry from
+            # an older topology) must fail here with the shapes named, not
+            # broadcast silently or die as an opaque XLA error mid-step.
+            if s.shape != c.shape[1:]:
+                raise ValueError(
+                    f"inject: snapshot leaf shape {s.shape} does not match "
+                    f"lane state shape {c.shape[1:]} (pool leaf {c.shape})"
+                )
+            return c.at[lane].set(s.astype(c.dtype))
+
+        self.caches = jax.tree_util.tree_map(_set, self.caches, snapshot)
 
     def snapshot_fp8(self, lane: int, dtype=fp8.FP8_E4M3) -> tuple[Any, Any]:
         """Host-side FP8 copy of lane `lane`'s state plus the original leaf

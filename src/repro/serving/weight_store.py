@@ -48,6 +48,18 @@ def pack_tree(params: Any, min_ndim: int = 2) -> Any:
 
     def _pack(w):
         if _packable(w, min_ndim):
+            # Eager finiteness guard: uint8 codes have no NaN/inf
+            # representation, so ``encode`` would silently map a NaN
+            # weight to grid point 0 — a corrupted checkpoint would then
+            # serve a *finite but wrong* model with no error anywhere.
+            # Packing happens once, host-side, at engine construction:
+            # the one place this check is free and the failure actionable.
+            if not bool(jnp.all(jnp.isfinite(jnp.asarray(w, jnp.float32)))):
+                raise ValueError(
+                    f"pack_tree: nonfinite values in weight tensor "
+                    f"shape={tuple(w.shape)} — refusing to encode NaN/inf "
+                    f"to a finite FloatSD8 code (corrupt checkpoint?)"
+                )
             codes, bias = floatsd.encode(w)
             return PackedTensor(codes, bias)
         return w

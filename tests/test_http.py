@@ -400,8 +400,11 @@ def test_metrics_scrape_parses_as_prometheus_text():
     [prompt] = prompts_for(tiny_model(), 1, seed=7)
 
     async def main():
+        # admit_retries=0: each in-server retry is a fresh router
+        # submission and would inflate the rejection counter below
         server, task = await start_server(
-            make_router(cache=PrefixCache(block=4), max_queue=0)
+            make_router(cache=PrefixCache(block=4), max_queue=0),
+            admit_retries=0,
         )
         # max_queue=0 also records one rejection for the counter below
         try:
