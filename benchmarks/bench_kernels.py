@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import floatsd
+from repro.core import floatsd, floatsd4
 from repro.kernels import dispatch as kd
 from repro.kernels.floatsd_matmul.ref import floatsd_matmul_ref
 from repro.kernels.lstm_cell.ref import lstm_cell_ref
@@ -52,6 +52,8 @@ def run(verbose: bool = True) -> dict:
     # analytic: weight bytes per matmul (the HBM-traffic claim, DESIGN.md 3.1)
     bytes_bf16 = K * N * 2
     bytes_fsd8 = K * N * 1 + 4  # codes + one int32 bias
+    # FloatSD4: 2 codes/byte along K + one int8 exponent per 32-row group
+    bytes_fsd4 = -(-K // 2) * N + -(-K // floatsd4.GROUP) * N
     vmem_ws = bm * bk * 1 + bk * bn * 1 + bm * bn * 4  # x-codes-acc tile set
 
     f_q = jax.jit(lambda x, c, b: floatsd_matmul_ref(x, c, b))
@@ -72,7 +74,9 @@ def run(verbose: bool = True) -> dict:
     out = {
         "matmul_weight_bytes_bf16": bytes_bf16,
         "matmul_weight_bytes_floatsd8": bytes_fsd8,
+        "matmul_weight_bytes_floatsd4": bytes_fsd4,
         "weight_traffic_ratio": round(bytes_bf16 / bytes_fsd8, 3),
+        "weight_traffic_ratio_fsd4": round(bytes_bf16 / bytes_fsd4, 3),
         "vmem_working_set_bytes": vmem_ws,
         "cpu_ms_floatsd_matmul_oracle": round(t_q * 1e3, 2),
         "cpu_ms_dense_matmul": round(t_d * 1e3, 2),
@@ -84,7 +88,8 @@ def run(verbose: bool = True) -> dict:
     if verbose:
         print(f"  floatsd_matmul [{M}x{K}x{N}] weight HBM bytes: "
               f"bf16 {bytes_bf16/2**20:.1f}MiB -> fsd8 {bytes_fsd8/2**20:.1f}MiB "
-              f"({out['weight_traffic_ratio']}x)")
+              f"({out['weight_traffic_ratio']}x) -> fsd4 "
+              f"{bytes_fsd4/2**20:.1f}MiB ({out['weight_traffic_ratio_fsd4']}x)")
         print(f"    VMEM working set ({bm},{bn},{bk}) tiling: {vmem_ws/2**20:.2f} MiB (<16 MiB)")
         print(f"    CPU oracle: quantized {out['cpu_ms_floatsd_matmul_oracle']}ms "
               f"vs dense {out['cpu_ms_dense_matmul']}ms")
@@ -109,6 +114,7 @@ def run_dispatch(backend: str, *, m=256, k=512, n=512, b=64, h=512,
     x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
     w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32) * 0.05)
     codes, bias = floatsd.encode(w)
+    w4 = kd.pack4(w)
     z = jnp.asarray(rng.standard_normal((b, 4 * h)).astype(np.float32))
     c = jnp.asarray(rng.standard_normal((b, h)).astype(np.float32))
 
@@ -121,20 +127,26 @@ def run_dispatch(backend: str, *, m=256, k=512, n=512, b=64, h=512,
         t_mm = _time(jax.jit(lambda a: kd.matmul(a, codes, bias)), x, iters=iters)
         d_mm = kd.STATS.last["floatsd_matmul"]
         kd.STATS.add_time("floatsd_matmul", d_mm.backend, t_mm)
+        t_mm4 = _time(jax.jit(lambda a: kd.matmul4(a, w4)), x, iters=iters)
+        d_mm4 = kd.STATS.last["floatsd4_matmul"]
+        kd.STATS.add_time("floatsd4_matmul", d_mm4.backend, t_mm4)
         t_cell = _time(jax.jit(lambda zz: kd.lstm_cell(zz, c)), z, iters=iters)
         d_cell = kd.STATS.last["lstm_cell"]
         kd.STATS.add_time("lstm_cell", d_cell.backend, t_cell)
     out.update(
         ms_matmul=round(t_mm * 1e3, 2),
+        ms_matmul4=round(t_mm4 * 1e3, 2),
         ms_lstm_cell=round(t_cell * 1e3, 2),
         matmul_ran=d_mm.backend,
+        matmul4_ran=d_mm4.backend,
         lstm_cell_ran=d_cell.backend,
         interpret=d_mm.interpret,
     )
     if verbose:
         mode = " (interpret)" if d_mm.backend == "pallas" and d_mm.interpret else ""
         print(f"  [{backend:6}] matmul[{m}x{k}x{n}] {out['ms_matmul']:>8}ms "
-              f"ran={d_mm.backend}{mode} | lstm_cell[B={b},H={h}] "
+              f"ran={d_mm.backend}{mode} | matmul4 {out['ms_matmul4']:>8}ms "
+              f"ran={d_mm4.backend} | lstm_cell[B={b},H={h}] "
               f"{out['ms_lstm_cell']:>8}ms ran={d_cell.backend}")
     return out
 
@@ -174,6 +186,7 @@ def main():
     if len(rows) == 2:
         r, p = rows
         print(f"  ref-vs-pallas delta: matmul {p['ms_matmul']/max(r['ms_matmul'],1e-9):.2f}x, "
+              f"matmul4 {p['ms_matmul4']/max(r['ms_matmul4'],1e-9):.2f}x, "
               f"lstm_cell {p['ms_lstm_cell']/max(r['ms_lstm_cell'],1e-9):.2f}x "
               f"({'interpret-mode validation, not speed' if p['interpret'] else 'compiled'})")
     if args.ledger:

@@ -41,18 +41,26 @@ from repro.serving import PrefixCache, ServeEngine, synthetic_prompts, zipf_pref
 
 
 def run_config(model, params, policy, prompts, *, lanes, chunk, packed, max_new,
-               backend="auto"):
+               backend="auto", weight_format="floatsd8"):
     kd.STATS.reset()
     with kd.use_backend(backend):
         engine = ServeEngine(
-            model, params, policy, lanes=lanes, chunk=chunk, packed=packed
+            model, params, policy, lanes=lanes, chunk=chunk, packed=packed,
+            weight_format=weight_format,
         )
         reqs = engine.submit_all([p.copy() for p in prompts], max_new=max_new)
         metrics = engine.run()
     outs = [tuple(r.out) for r in sorted(reqs, key=lambda r: r.rid)]
     rep = metrics.report()
-    d = kd.STATS.last.get("floatsd_matmul")
+    matmul_op = "floatsd4_matmul" if weight_format == "floatsd4" else "floatsd_matmul"
+    d = kd.STATS.last.get(matmul_op)
     rep["matmul_backend"] = d.backend if d else "-"
+    # the format axis for BENCH artifacts: bytes resident per weight format
+    from repro.serving import tree_nbytes
+    rep["weight_format"] = weight_format if packed else "dense"
+    rep["weights_mib"] = (
+        engine.store.packed_nbytes if packed else tree_nbytes(params)
+    ) / 2**20
     return rep, outs
 
 
@@ -183,6 +191,8 @@ def main():
         ("seed loop   (chunk=1, packed u8)", dict(chunk=1, packed=True)),
         ("chunked     (chunk=%d, packed u8)" % args.chunk,
          dict(chunk=args.chunk, packed=True)),
+        ("chunked     (chunk=%d, packed u4)" % args.chunk,
+         dict(chunk=args.chunk, packed=True, weight_format="floatsd4")),
     ]
     base_backend = args.backend if args.backend != "both" else "ref"
     chunked_packed_name = "chunked     (chunk=%d, packed u8)" % args.chunk
@@ -206,7 +216,7 @@ def main():
 
     hdr = (f"{'config':44} {'steps':>6} {'prefill':>8} {'decode':>7} "
            f"{'gen tok/s':>10} {'total tok/s':>12} {'slot util':>10} "
-           f"{'ttft ms':>8} {'matmul':>7}")
+           f"{'ttft ms':>8} {'wts MiB':>8} {'matmul':>7}")
     print(hdr)
     print("-" * len(hdr))
     for name, r in rows:
@@ -214,7 +224,8 @@ def main():
             f"{name:44} {r['steps']:>6} {r['prefill_steps']:>8} "
             f"{r['decode_steps']:>7} {r['gen_tok_per_s']:>10.1f} "
             f"{r['total_tok_per_s']:>12.1f} {r['slot_util']:>10.0%} "
-            f"{r['ttft_mean_s']*1e3:>8.0f} {r['matmul_backend']:>7}"
+            f"{r['ttft_mean_s']*1e3:>8.0f} {r['weights_mib']:>8.2f} "
+            f"{r['matmul_backend']:>7}"
         )
     if args.backend == "both":
         rows_by_name = dict(rows)

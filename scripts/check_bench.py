@@ -17,6 +17,11 @@ the cost-model observatory:
     --ledger-out`` / BENCH_train.json "ledger" key). Checks the model's
     internal contract: on the ref backend predicted HBM bytes must match
     the measured unique bytes touched within REPRO_BENCH_TOL_BYTES.
+    With ``--ledger-baseline`` (e.g. the checked-in BENCH_ledger.json)
+    the machine-independent per-call predicted FLOPs/HBM-bytes are also
+    diffed per (op, backend) — a cost-model or traced-path change in any
+    registered kernel (floatsd_matmul, floatsd4_matmul, lstm_cell, ...)
+    fails with the op named.
 
 Tolerances are env-overridable so CI can loosen them on noisy shared
 runners without a code change:
@@ -243,6 +248,10 @@ def main(argv=None) -> int:
     ap.add_argument("--http", metavar="CUR_JSON")
     ap.add_argument("--http-baseline", default="BENCH_http.json")
     ap.add_argument("--ledger", metavar="LEDGER_JSON")
+    ap.add_argument("--ledger-baseline", metavar="BASE_JSON",
+                    help="diff --ledger per-call predicted costs against "
+                         "this checked-in baseline (machine-independent; "
+                         "drift fails with the op named)")
     a = ap.parse_args(argv)
     if not (a.train or a.http or a.ledger):
         ap.error("nothing to check: pass --train, --http, and/or --ledger")
@@ -263,6 +272,12 @@ def main(argv=None) -> int:
                 "rows", data.get("ledger", [])
             )
             problems += check_ledger(rows)
+            if a.ledger_baseline:
+                bdata = _load(a.ledger_baseline)
+                brows = bdata if isinstance(bdata, list) else bdata.get(
+                    "rows", bdata.get("ledger", [])
+                )
+                problems += _ledger_drift(rows, brows, tolerances()["ratio"])
     except ArtifactError as e:
         print(f"check_bench: FAIL {e}", file=sys.stderr)
         return 1

@@ -43,7 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import floatsd
+from ..core import floatsd, floatsd4
 from ..obs import costmodel
 from ..obs import telemetry as obs_telemetry
 from .flash_attention import cost as fa_cost
@@ -59,6 +59,9 @@ from .floatsd_matmul.bwd import (
 )
 from .floatsd_matmul.kernel import floatsd_matmul_pallas
 from .floatsd_matmul.ref import floatsd_matmul_ref
+from .floatsd4_matmul import cost as fm4_cost
+from .floatsd4_matmul.kernel import floatsd4_matmul_pallas
+from .floatsd4_matmul.ref import floatsd4_matmul_ref
 from .floatsd_quantize import cost as fq_cost
 from .floatsd_quantize.kernel import quantize_pallas
 from .lstm_cell import cost as lc_cost
@@ -74,12 +77,13 @@ from .rwkv_wkv.ops import wkv as wkv_op
 from .rwkv_wkv.ref import wkv_ref
 
 __all__ = [
-    "BACKENDS", "PAD_WASTE_MAX", "PackedTensor", "Decision", "DispatchStats",
-    "STATS", "LEDGER", "record", "backend_policy", "use_backend",
-    "interpret_mode", "matmul", "lstm_cell", "quantize", "qsigmoid",
-    "packed_einsum", "hoist_packed", "matmul_tiles", "lstm_tiles",
-    "row_tile", "matmul_dx", "matmul_dw", "lstm_cell_grad", "train_matmul",
-    "lstm_cell_train", "pack_train", "hoist_train", "inference_only",
+    "BACKENDS", "PAD_WASTE_MAX", "PackedTensor", "PackedTensor4", "Decision",
+    "DispatchStats", "STATS", "LEDGER", "record", "backend_policy",
+    "use_backend", "interpret_mode", "matmul", "matmul4", "lstm_cell",
+    "quantize", "qsigmoid", "packed_einsum", "hoist_packed", "matmul_tiles",
+    "lstm_tiles", "row_tile", "matmul_dx", "matmul_dw", "lstm_cell_grad",
+    "train_matmul", "lstm_cell_train", "pack_train", "hoist_train",
+    "inference_only", "is_packed", "is_packed4", "pack4", "unpack4",
     "rwkv_wkv", "flash_attention", "OpSpec", "REGISTRY",
 ]
 
@@ -108,6 +112,66 @@ class PackedTensor(NamedTuple):
 
 def is_packed(x: Any) -> bool:
     return isinstance(x, PackedTensor)
+
+
+# byte whose both nibbles are the FloatSD4 zero code: the tile-padding
+# constant for nibble-packed code streams (decodes to exact 0.0 anywhere)
+ZERO_BYTE4 = (floatsd4.ZERO_CODE << 4) | floatsd4.ZERO_CODE
+
+
+@jax.tree_util.register_pytree_node_class
+class PackedTensor4:
+    """A FloatSD4-packed tensor: nibble-packed uint8 codes (2 codes/byte
+    along axis 0) + int8 per-(GROUP x column) exponents + the true axis-0
+    length ``k``.
+
+    ``k`` rides as static pytree aux data, not a leaf: the unpack crop of
+    an odd-K tensor needs it at trace time, and it is metadata, not data.
+    Registered as a pytree node so packed trees pass through jit/tree_map
+    with codes/exps as leaves, exactly like :class:`PackedTensor`.
+    """
+
+    __slots__ = ("codes", "exps", "k")
+
+    def __init__(self, codes: jax.Array, exps: jax.Array, k: int):
+        self.codes = codes  # uint8 [ceil(k/2), ...] nibble-packed
+        self.exps = exps  # int8 [ceil(k/GROUP), ...]
+        self.k = int(k)
+
+    @property
+    def shape(self) -> tuple:
+        return (self.k,) + tuple(self.codes.shape[1:])
+
+    def tree_flatten(self):
+        return (self.codes, self.exps), self.k
+
+    @classmethod
+    def tree_unflatten(cls, k, children):
+        return cls(children[0], children[1], k)
+
+    def __repr__(self) -> str:
+        return (
+            f"PackedTensor4(codes={getattr(self.codes, 'shape', None)}, "
+            f"exps={getattr(self.exps, 'shape', None)}, k={self.k})"
+        )
+
+
+def is_packed4(x: Any) -> bool:
+    return isinstance(x, PackedTensor4)
+
+
+def pack4(w) -> PackedTensor4:
+    """FloatSD4-encode a weight (dense array or FloatSD8 PackedTensor —
+    the serving conversion decodes the FloatSD8 master first)."""
+    if is_packed(w):
+        w = floatsd.decode(w.codes, w.bias, dtype=jnp.float32)
+    codes, exps = floatsd4.encode(w)
+    return PackedTensor4(floatsd4.pack_nibbles(codes), exps, w.shape[0])
+
+
+def unpack4(w4: PackedTensor4, dtype=jnp.float32) -> jax.Array:
+    """Decode a PackedTensor4 back to a dense tensor."""
+    return floatsd4.decode_packed(w4.codes, w4.exps, w4.k, dtype=dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -431,6 +495,65 @@ def matmul(x, codes, bias, *, out_dtype=jnp.float32, precise: bool = True,
         out = y[:m, :n] if dec.padded else y
     STATS.record(dec._replace(cost=cost))
     STATS.add_touched("floatsd_matmul", dec.backend, touched)
+    return out.reshape(*lead, n)
+
+
+def matmul4(x, w4: PackedTensor4, *, out_dtype=jnp.float32,
+            precise: bool = True, compute_dtype=None,
+            backend: str | None = None):
+    """x [..., K] @ decode4(w4 [K, N]) -> [..., N], backend-resolved.
+
+    The FloatSD4 sibling of :func:`matmul`: the weight operand is a
+    :class:`PackedTensor4` (nibble-packed codes + group exponents), so the
+    pallas path streams ~half the weight bytes of the FloatSD8 kernel.
+    Padding uses the zero-code convention: code columns/rows pad with
+    ``ZERO_BYTE4`` (both nibbles the zero code) and exponent rows with 0 —
+    both decode to exact 0.0, so padded lanes contribute nothing.
+    """
+    if compute_dtype is None:
+        compute_dtype = jnp.float32 if precise else jnp.bfloat16
+    k = x.shape[-1]
+    assert w4.k == k, (x.shape, w4.shape)
+    n = w4.codes.shape[1]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    native, waste, (mp, kp, np_) = _matmul_geometry(m, k, n)
+    dec = _decide("floatsd4_matmul", native, waste, backend)
+    x_bytes = jnp.dtype(x.dtype).itemsize
+    o_bytes = jnp.dtype(out_dtype).itemsize
+    if dec.backend == "ref":
+        y = floatsd4_matmul_ref(x2, w4.codes, w4.exps, k, out_dtype)
+        cost = fm4_cost.matmul4_fwd_cost(
+            m, k, n, backend="ref", x_bytes=x_bytes, out_bytes=o_bytes,
+        )
+        touched = _nbytes(x2, w4.codes, w4.exps, y)
+        out = y
+    else:
+        xx, cc, ee = x2, w4.codes, w4.exps
+        if dec.padded:
+            xx = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+            cc = jnp.pad(
+                cc, ((0, kp // 2 - cc.shape[0]), (0, np_ - n)),
+                constant_values=ZERO_BYTE4,
+            )
+            ee = jnp.pad(
+                ee, ((0, kp // floatsd4.GROUP - ee.shape[0]), (0, np_ - n))
+            )
+        bm, bn, bk = matmul_tiles(xx.shape[0], cc.shape[1], xx.shape[1])
+        y = floatsd4_matmul_pallas(
+            xx, cc, ee, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+            compute_dtype=compute_dtype, interpret=dec.interpret,
+        )
+        cost = fm4_cost.matmul4_fwd_cost(
+            m, k, n, backend="pallas", x_bytes=x_bytes, out_bytes=o_bytes,
+            compute_bytes=jnp.dtype(compute_dtype).itemsize,
+            padded=(mp, kp, np_), tiles=(bm, bn, bk),
+        )
+        touched = _nbytes(xx, cc, ee, y)
+        out = y[:m, :n] if dec.padded else y
+    STATS.record(dec._replace(cost=cost))
+    STATS.add_touched("floatsd4_matmul", dec.backend, touched)
     return out.reshape(*lead, n)
 
 
@@ -1001,9 +1124,10 @@ inference_only.defvjp(_io_fwd, _io_bwd)
 # ---------------------------------------------------------------------------
 
 
-def packed_einsum(eq: str, x, packed: PackedTensor, *, out_dtype=jnp.float32,
+def packed_einsum(eq: str, x, packed, *, out_dtype=jnp.float32,
                   cast_dtype=None, backend: str | None = None):
-    """The weight-site einsums over a PackedTensor, backend-resolved.
+    """The weight-site einsums over a PackedTensor / PackedTensor4,
+    backend-resolved.
 
     Supports the two-operand contractions used at every weight site:
     ``...d,df->...f`` / ``bd,dk->bk`` (contract w's first axis) and
@@ -1011,7 +1135,9 @@ def packed_einsum(eq: str, x, packed: PackedTensor, *, out_dtype=jnp.float32,
     ref path decodes and einsums (bit-identical to the old unpack-then-
     einsum serving step); the pallas path feeds the codes to the fused
     decode+matmul kernel, transposing the (1-byte) codes when w is stored
-    [free, contract].
+    [free, contract]. FloatSD4 codes are nibble-packed along axis 0 and
+    cannot be transposed at byte granularity, so the transposed layout
+    decodes + einsums on every backend (recorded, never silent).
     """
     ins, out = eq.replace(" ", "").split("->")
     xl, wl = ins.split(",")
@@ -1022,6 +1148,11 @@ def packed_einsum(eq: str, x, packed: PackedTensor, *, out_dtype=jnp.float32,
     wf = wl[0] if transpose else wl[1]
     if out != xl[:-1] + wf:
         raise NotImplementedError(f"packed_einsum does not support {eq!r}")
+    if is_packed4(packed):
+        return _packed4_einsum(
+            eq, x, packed, transpose, out_dtype=out_dtype,
+            cast_dtype=cast_dtype, backend=backend,
+        )
     dec_backend = backend_policy(backend)
     if dec_backend == "ref" or (dec_backend == "auto" and interpret_mode()):
         c = x.shape[-1]
@@ -1052,6 +1183,46 @@ def packed_einsum(eq: str, x, packed: PackedTensor, *, out_dtype=jnp.float32,
     ))
 
 
+def _packed4_einsum(eq: str, x, packed: PackedTensor4, transpose: bool, *,
+                    out_dtype, cast_dtype, backend):
+    """FloatSD4 arm of :func:`packed_einsum` (eq already validated)."""
+    dec_backend = backend_policy(backend)
+    ref_policy = dec_backend == "ref" or (
+        dec_backend == "auto" and interpret_mode()
+    )
+    if ref_policy or transpose:
+        c = x.shape[-1]
+        n_free = packed.shape[0 if transpose else 1]
+        reason = (
+            f"policy:{dec_backend} (packed4 einsum)" if ref_policy
+            else "packed4 transpose: nibble stream not byte-transposable, "
+                 "decode+einsum"
+        )
+        record(
+            "floatsd4_matmul", "ref", reason=reason,
+            cost=fm4_cost.matmul4_fwd_cost(
+                x.size // max(c, 1), c, n_free, backend="ref",
+                x_bytes=jnp.dtype(x.dtype).itemsize,
+                out_bytes=jnp.dtype(out_dtype).itemsize,
+                wt_nbytes=_nbytes(packed.codes, packed.exps),
+            ),
+        )
+        w = floatsd4.decode_packed(
+            packed.codes, packed.exps, packed.k,
+            dtype=cast_dtype or jnp.float32,
+        )
+        y = jnp.einsum(
+            eq, x, w, preferred_element_type=jnp.float32
+        ).astype(out_dtype)
+        STATS.add_touched("floatsd4_matmul", "ref",
+                          _nbytes(x, packed.codes, packed.exps, y))
+        return inference_only(y)
+    cd = None if cast_dtype in (None, jnp.float32) else cast_dtype
+    return inference_only(matmul4(
+        x, packed, out_dtype=out_dtype, compute_dtype=cd, backend=backend,
+    ))
+
+
 def hoist_packed(w, *, m: int | None = None, dtype=None,
                  backend: str | None = None):
     """Loop-hoist hint for packed weights used inside a time scan.
@@ -1067,19 +1238,22 @@ def hoist_packed(w, *, m: int | None = None, dtype=None,
     auto-mode padding-waste fallback), so a call site that would fall back
     to ref can never be left packed and pay a full decode per time step.
     """
-    if not is_packed(w):
+    if not (is_packed(w) or is_packed4(w)):
         return w
+    op = "floatsd4_matmul" if is_packed4(w) else "floatsd_matmul"
     if m is not None:
-        k, n = w.codes.shape
+        k, n = w.shape if is_packed4(w) else w.codes.shape
         native, waste, _ = _matmul_geometry(m, k, n)
-        d = _decide("floatsd_matmul", native, waste, backend)
+        d = _decide(op, native, waste, backend)
     else:  # coarse: platform/policy only
         pol = backend_policy(backend)
         ref = pol == "ref" or (pol == "auto" and interpret_mode())
-        d = Decision("floatsd_matmul", "ref" if ref else "pallas", False, False, "")
+        d = Decision(op, "ref" if ref else "pallas", False, False, "")
     if d.backend == "ref":
         # the decoded dense weight still came from inference-only codes: a
         # gradient reaching it must fail loudly, not silently vanish
+        if is_packed4(w):
+            return inference_only(unpack4(w, dtype=dtype or jnp.float32))
         return inference_only(
             floatsd.decode(w.codes, w.bias, dtype=dtype or jnp.float32)
         )
@@ -1118,6 +1292,15 @@ register(
         "floatsd_matmul", fm_cost.matmul_fwd_cost,
         "decode-in-VMEM GEMM: codes 1 byte/weight; pallas refetches x per "
         "N-block and codes per M-block",
+    ),
+)
+register(
+    "floatsd4_matmul", floatsd4_matmul_ref, floatsd4_matmul_pallas, matmul4,
+    cost=costmodel.CostSpec(
+        "floatsd4_matmul", fm4_cost.matmul4_fwd_cost,
+        "sub-byte decode-in-VMEM GEMM: 2 codes/byte along K + int8 group "
+        "exponents (~0.53 byte/weight); pallas refetches x per N-block "
+        "and the packed stream per M-block",
     ),
 )
 register(

@@ -1,0 +1,98 @@
+"""CostSpec for the FloatSD4 packed matmul.
+
+Same shape of model as ``floatsd_matmul.cost`` with one structural change:
+the weight stream is *sub-byte*. A [c, n] FloatSD4 weight costs
+``ceil(c/2) * n`` code bytes (two 4-bit codes per byte, packed along the
+contraction axis) plus ``ceil(c/GROUP) * n`` int8 group-exponent bytes —
+~0.53 bytes/weight vs FloatSD8's 1 byte/weight.
+
+  * **ref** — each operand read exactly once, output written once; the
+    oracle's unpack/decode intermediates are XLA-fusible and excluded, so
+    ref predictions equal the ndarray ``nbytes`` the dispatch actually
+    touches — tolerance 0, tested in tests/test_costmodel.py.
+  * **pallas** — output-stationary grid ``(M/bm, N/bn, C/bk)``: the x tile
+    re-fetched once per N-block, the packed codes + exponents once per
+    M-block, output written once. Padded dims charged in full with the
+    delta in ``pad_waste_*``.
+  * **VMEM** per grid step: x tile + packed-byte tile + exponent tile +
+    the unpacked decoded tile (compute dtype) + f32 accumulator + output.
+
+``DECODE4_FLOPS_PER_CODE`` covers the in-VMEM nibble unpack (mask/shift),
+the 16-entry LUT gather, the group-exponent exp2 and the scale multiply.
+"""
+from __future__ import annotations
+
+from ...core import floatsd4
+from ...obs.costmodel import Cost
+
+__all__ = ["matmul4_fwd_cost", "DECODE4_FLOPS_PER_CODE"]
+
+DECODE4_FLOPS_PER_CODE = 5  # nibble mask+shift, LUT gather, exp2, scale
+
+
+def _codes_rows(c: int) -> int:
+    return -(-c // 2)
+
+
+def _exp_rows(c: int) -> int:
+    return -(-c // floatsd4.GROUP)
+
+
+def matmul4_fwd_cost(
+    m: int, c: int, n: int, *, backend: str,
+    x_bytes: int = 4, out_bytes: int = 4, compute_bytes: int = 4,
+    wt_nbytes: int | None = None,
+    padded: tuple[int, int, int] | None = None,
+    tiles: tuple[int, int, int] | None = None,
+) -> Cost:
+    """x [m, c] @ decode4(codes [ceil(c/2), n], exps [ceil(c/G), n]).
+
+    ``wt_nbytes`` overrides the computed packed-stream bytes for layouts
+    where the packing axis is not the contraction axis (the tied-head
+    ``...d,vd->...v`` einsum decodes a [v, d] tensor packed along v, whose
+    ceil rounding differs from ceil(c/2)*n when the free axis is odd) —
+    the ref tolerance-0 contract needs the actual array bytes.
+    """
+    macs_exact = m * c * n
+    wt_bytes = _codes_rows(c) * n + _exp_rows(c) * n  # the halved stream
+    if wt_nbytes is not None:
+        wt_bytes = wt_nbytes
+    if backend == "ref":
+        return Cost(
+            flops=2 * macs_exact + DECODE4_FLOPS_PER_CODE * c * n,
+            macs=macs_exact,
+            hbm_read_bytes=m * c * x_bytes + wt_bytes,
+            hbm_write_bytes=m * n * out_bytes,
+        )
+    assert padded is not None and tiles is not None, (
+        "pallas matmul4 cost needs the padded dims and tile config"
+    )
+    mp, cp, np_ = padded
+    bm, bn, bk = tiles
+    macs = mp * cp * np_
+    wt_padded = _codes_rows(cp) * np_ + _exp_rows(cp) * np_
+    wt_fetches = (mp // bm) * wt_padded  # weight stream once per M-block
+    flops = 2 * macs + DECODE4_FLOPS_PER_CODE * (mp // bm) * cp * np_
+    read = (np_ // bn) * mp * cp * x_bytes + wt_fetches
+    write = mp * np_ * out_bytes
+    vmem = (
+        bm * bk * x_bytes
+        + (bk // 2) * bn  # packed-byte tile
+        + (bk // floatsd4.GROUP) * bn  # exponent tile
+        + bk * bn * compute_bytes  # unpacked decoded tile
+        + bm * bn * 4  # f32 accumulator scratch
+        + bm * bn * out_bytes
+    )
+    return Cost(
+        flops=flops,
+        macs=macs,
+        hbm_read_bytes=read,
+        hbm_write_bytes=write,
+        vmem_bytes=vmem,
+        pad_waste_flops=2 * (macs - macs_exact),
+        pad_waste_bytes=(
+            (mp * cp - m * c) * x_bytes
+            + (wt_padded - wt_bytes)
+            + (mp * np_ - m * n) * out_bytes
+        ),
+    )

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: fused FloatSD4 nibble-unpack + decode + matmul.
+
+Sub-byte sibling of ``floatsd_matmul.kernel``: weights travel HBM->VMEM as
+*half* a byte per code (two 4-bit codes per byte, packed along K) plus one
+int8 exponent per GROUP x column, are unpacked and decoded in VMEM by the
+VPU (nibble mask/shift, a 16-entry mantissa LUT gather, exp2 of the
+group exponent), and feed the MXU with f32 accumulation.
+
+Grid (M/bm, N/bn, K/bk), K innermost (output-stationary, accumulator tile
+resident in VMEM). The packed-code BlockSpec is (bk/2, bn) and the
+exponent BlockSpec (bk/GROUP, bn): the dispatch layer always pads K to a
+multiple of 128, so every resolved bk (128/256/512) is divisible by both
+2 and GROUP=32. VMEM working set ~= bm*bk (x) + bk/2*bn (bytes) +
+bk/32*bn (exps) + bk*bn (decoded, compute dtype) + bm*bn*4 (acc).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core import floatsd4
+
+__all__ = ["floatsd4_matmul_kernel", "floatsd4_matmul_pallas"]
+
+
+def floatsd4_matmul_kernel(
+    x_ref, codes_ref, exps_ref, lut_ref, out_ref, acc_ref, *, n_k: int,
+    group: int, compute_dtype=jnp.bfloat16,
+):
+    """One (bm x bn) output tile; accumulates over the K grid axis.
+
+    x_ref:     [bm, bk]        activation tile
+    codes_ref: [bk//2, bn]     nibble-packed uint8 FloatSD4 codes
+    exps_ref:  [bk//group, bn] int8 per-group exponents
+    lut_ref:   [1, 16]         f32 mantissa LUT (constants ride as inputs)
+    acc_ref:   [bm, bn]        f32 VMEM accumulator scratch
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    packed = codes_ref[...].astype(jnp.int32)  # [bk//2, bn]
+    bk2, bn = packed.shape
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    # interleave rows: unpacked[2i] = lo[i], unpacked[2i+1] = hi[i]
+    idx = jnp.stack([lo, hi], axis=1).reshape(2 * bk2, bn)
+    mant = jnp.take(lut_ref[0, :], idx)  # VPU gather, 16-entry table
+    e = exps_ref[...].astype(jnp.float32)  # [bk//group, bn]
+    scale = jnp.broadcast_to(
+        e[:, None, :], (e.shape[0], group, bn)
+    ).reshape(2 * bk2, bn)
+    w = (mant * jnp.exp2(scale)).astype(compute_dtype)
+
+    x = x_ref[...].astype(compute_dtype)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == n_k - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def _vmem_scratch(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "out_dtype", "compute_dtype", "interpret"),
+)
+def floatsd4_matmul_pallas(
+    x: jax.Array,  # [M, K]
+    codes: jax.Array,  # [K//2, N] uint8, nibble-packed along K
+    exps: jax.Array,  # [K//GROUP, N] int8
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    out_dtype=jnp.float32,
+    compute_dtype=jnp.bfloat16,
+    interpret: bool = False,
+):
+    m, k = x.shape
+    k2, n = codes.shape
+    g = floatsd4.GROUP
+    assert k == 2 * k2, (x.shape, codes.shape)
+    assert exps.shape == (k // g, n), (exps.shape, k, n)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    assert bk % 2 == 0 and bk % g == 0, (bk, g)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+
+    return pl.pallas_call(
+        functools.partial(
+            floatsd4_matmul_kernel, n_k=n_k, group=g,
+            compute_dtype=compute_dtype,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bk // g, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((1, 16), lambda i, j, s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[_vmem_scratch((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, codes, exps, jnp.asarray(floatsd4.LUT16).reshape(1, 16))

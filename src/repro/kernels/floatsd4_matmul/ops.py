@@ -1,0 +1,61 @@
+"""Public wrapper for the FloatSD4 packed matmul kernel.
+
+Explicit-control entry (callers pick kernel/oracle and interpret mode);
+``kernels.dispatch.matmul4`` is the policy-aware entry the nn/serving hot
+paths use. Either way the backend that ran is recorded in
+``kernels.dispatch.STATS`` under op ``"floatsd4_matmul"``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import dispatch
+from ...core import floatsd4
+from .kernel import floatsd4_matmul_pallas
+from .ref import floatsd4_matmul_ref
+
+__all__ = ["floatsd4_matmul", "floatsd4_dense_forward"]
+
+
+def floatsd4_matmul(
+    x, codes, exps, k=None, *, out_dtype=jnp.float32, use_kernel: bool = True,
+    interpret: bool = True,
+):
+    """x [M,K] @ decode4(codes [ceil(K/2),N], exps) -> [M,N].
+
+    ``k`` defaults to x's contraction length. Falls back to the jnp oracle
+    when ``use_kernel=False`` or for shapes the tiling doesn't divide
+    (odd K, unaligned N — recorded, never silent).
+    """
+    m, xk = x.shape
+    _, n = codes.shape
+    k = xk if k is None else k
+    assert k == xk, (x.shape, k)
+    g = floatsd4.GROUP
+    if not use_kernel or (m % 8 or n % 128 or k % 128):
+        dispatch.record(
+            "floatsd4_matmul", "ref",
+            reason="use_kernel=False" if not use_kernel
+            else f"fallback: shape {(m, k, n)} not tile-divisible",
+        )
+        return floatsd4_matmul_ref(x, codes, exps, k, out_dtype)
+    dispatch.record(
+        "floatsd4_matmul", "pallas", interpret=interpret,
+        reason="explicit wrapper",
+    )
+    bm, bn, bk = dispatch.matmul_tiles(m, n, k)
+    assert bk % 2 == 0 and bk % g == 0, (bk, g)
+    return floatsd4_matmul_pallas(
+        x, codes, exps, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+        interpret=interpret,
+    )
+
+
+def floatsd4_dense_forward(x, w_f32, *, interpret: bool = True):
+    """Encode-then-multiply convenience: returns (y, packed_codes, exps)."""
+    codes, exps = floatsd4.encode(w_f32)
+    packed = floatsd4.pack_nibbles(codes)
+    y = floatsd4_matmul(
+        x, packed, exps, w_f32.shape[0], interpret=interpret
+    )
+    return y, packed, exps

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the FloatSD4 packed matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core import floatsd4
+
+__all__ = ["floatsd4_matmul_ref"]
+
+
+def floatsd4_matmul_ref(x: jax.Array, codes: jax.Array, exps: jax.Array,
+                        k: int, out_dtype=jnp.float32):
+    """x: [M, K], codes: [ceil(K/2), N] nibble-packed uint8 FloatSD4,
+    exps: [ceil(K/GROUP), N] int8 per-group exponents.
+
+    Returns x @ decode(codes) in f32 accumulation, cast to out_dtype.
+    ``k`` is the true (unpadded) contraction length — the packed stream
+    may carry a trailing ZERO_CODE nibble when K is odd.
+    """
+    w = floatsd4.decode_packed(codes, exps, k, dtype=jnp.float32)
+    return jnp.dot(
+        x.astype(jnp.float32), w, preferred_element_type=jnp.float32
+    ).astype(out_dtype)

@@ -102,6 +102,13 @@ def main():
     ap.add_argument("--dense", action="store_true",
                     help="serve dense f32 weights (fake-quant at use) "
                          "instead of packed uint8 codes")
+    ap.add_argument("--weight-format", choices=("floatsd8", "floatsd4"),
+                    default="floatsd8",
+                    help="packed serving format: floatsd8 (1 byte/weight, "
+                         "output-identical to training) or floatsd4 "
+                         "(2 codes/byte + group exponents, ~half the "
+                         "resident bytes, re-quantized from the FloatSD8 "
+                         "master)")
     ap.add_argument("--full", action="store_true", help="paper-scale model")
     ap.add_argument("--seed", type=int, default=0)
     # frontend (router + prefix cache) options
@@ -163,6 +170,7 @@ def main():
         lanes=args.batch,
         chunk=args.chunk,
         packed=not args.dense,
+        weight_format=args.weight_format,
         cache_len=None if cfg.family == "lstm" else 2048,
         # engines share the admission policy so the preemption check peeks
         # at the same ordering the router dispatches under
@@ -225,7 +233,8 @@ def main():
         s = engine.store
         print(
             f"weights: {s.dense_nbytes/2**20:.1f} MiB dense -> "
-            f"{s.packed_nbytes/2**20:.1f} MiB packed FloatSD8 "
+            f"{s.packed_nbytes/2**20:.1f} MiB packed "
+            f"{'FloatSD4' if s.fmt == 'floatsd4' else 'FloatSD8'} "
             f"({s.compression:.2f}x smaller, {s.n_packed} tensors packed)",
             flush=True,
         )

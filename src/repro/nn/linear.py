@@ -16,7 +16,7 @@ import os
 import jax
 import jax.numpy as jnp
 
-from ..core import floatsd
+from ..core import floatsd, floatsd4
 from ..core.fp8 import act_quant
 from ..core.policy import Policy
 from ..kernels import dispatch as kd
@@ -68,8 +68,9 @@ def quant_weight(w: jax.Array, policy: Policy) -> jax.Array:
 
     PackedTensor weights (the serving deployment format) pass through: the
     codes ARE the quantized weights, and the matmul site dispatches them to
-    the fused decode+matmul kernel (or decodes for the jnp oracle)."""
-    if kd.is_packed(w):
+    the fused decode+matmul kernel (or decodes for the jnp oracle). Same
+    for PackedTensor4 (the sub-byte serving format)."""
+    if kd.is_packed(w) or kd.is_packed4(w):
         return w
     if policy.weight_quant == "floatsd8":
         bias = jax.lax.stop_gradient(floatsd.fit_bias(w))
@@ -87,9 +88,10 @@ def quant_act(x: jax.Array, policy: Policy, site: str = "hidden") -> jax.Array:
 def policy_einsum(eq: str, x: jax.Array, w: jax.Array, policy: Policy):
     """The bare matmul primitive all weight sites share: f32 accumulation,
     bf16 dW emission when the policy quantizes gradients (GRAD_REDUCE_BF16).
-    Operands must already be quantized/cast. PackedTensor weights route to
-    the kernel dispatch layer (inference-only: no VJP through codes)."""
-    if kd.is_packed(w):
+    Operands must already be quantized/cast. Packed weights (either
+    format) route to the kernel dispatch layer (inference-only: no VJP
+    through codes)."""
+    if kd.is_packed(w) or kd.is_packed4(w):
         return kd.packed_einsum(eq, x, w, cast_dtype=policy.cdt())
     if GRAD_REDUCE_BF16 and policy.grad_quant != "none":
         return _make_einsum_gc(eq)(x, w)
@@ -100,7 +102,7 @@ def quant_einsum(eq: str, x: jax.Array, w: jax.Array, policy: Policy, site: str 
     """einsum with both operands quantized per policy; f32 accumulation."""
     xq = quant_act(x, policy, site)
     cdt = policy.cdt() or x.dtype
-    if kd.is_packed(w):
+    if kd.is_packed(w) or kd.is_packed4(w):
         y = kd.packed_einsum(eq, xq.astype(cdt), w, cast_dtype=policy.cdt())
     else:
         wq = quant_weight(w, policy)
@@ -155,7 +157,12 @@ class QuantEmbedding:
         1-byte codes first, then decodes only the gathered rows — same
         values as decode-then-gather (decode is element-wise), ~4x less
         gather traffic."""
-        if kd.is_packed(p["table"]):
+        if kd.is_packed4(p["table"]):
+            y = kd.inference_only(floatsd4.gather_decode(
+                p["table"].codes, p["table"].exps, tokens,
+                dtype=policy.cdt() or jnp.float32,
+            ))
+        elif kd.is_packed(p["table"]):
             codes = jnp.take(p["table"].codes, tokens, axis=0)
             y = kd.inference_only(floatsd.decode(
                 codes, p["table"].bias, dtype=policy.cdt() or jnp.float32

@@ -386,7 +386,8 @@ class LSTMLayer:
             # on autodiff to keep REPRO_FUSED_BPTT=0 trajectory-equivalent
             and policy.cdt() in (None, jnp.float32)
             and HOIST_WQUANT
-            and not (kd.is_packed(p["wx"]) or kd.is_packed(p["wh"]))
+            and not (kd.is_packed(p["wx"]) or kd.is_packed(p["wh"])
+                     or kd.is_packed4(p["wx"]) or kd.is_packed4(p["wh"]))
         )
 
         if fused:
@@ -454,7 +455,8 @@ class LSTMLayer:
                 body, (state, jnp.zeros((), jnp.int32)), xs_t
             )
         hs = jnp.swapaxes(hs, 0, 1)
-        if kd.is_packed(p["wx"]) or kd.is_packed(p["wh"]):
+        if (kd.is_packed(p["wx"]) or kd.is_packed(p["wh"])
+                or kd.is_packed4(p["wx"]) or kd.is_packed4(p["wh"])):
             # packed layers are inference-only: a gradient through their
             # outputs must fail loudly (the hoisted decode severs the VJP to
             # the codes silently otherwise)

@@ -16,7 +16,16 @@ from .scheduler import (
     zipf_prefix_prompts,
 )
 from .state_pool import StatePool, masked_reset
-from .weight_store import PackedTensor, WeightStore, pack_tree, tree_nbytes, unpack_tree
+from .weight_store import (
+    WEIGHT_FORMATS,
+    PackedTensor,
+    PackedTensor4,
+    WeightStore,
+    pack_floatsd4,
+    pack_tree,
+    tree_nbytes,
+    unpack_tree,
+)
 
 __all__ = [
     "ServeEngine", "Lane",
@@ -26,5 +35,6 @@ __all__ = [
     "StatePool", "masked_reset",
     "PrefixCache", "Router", "AsyncRouter", "Ticket", "RequestRejected",
     "HttpServer", "HttpClient", "HttpError",
-    "WeightStore", "PackedTensor", "pack_tree", "unpack_tree", "tree_nbytes",
+    "WeightStore", "PackedTensor", "PackedTensor4", "WEIGHT_FORMATS",
+    "pack_tree", "pack_floatsd4", "unpack_tree", "tree_nbytes",
 ]

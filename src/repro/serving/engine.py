@@ -44,7 +44,7 @@ from ..obs.trace import TRACER
 from .metrics import ServeMetrics
 from .scheduler import Request, Scheduler
 from .state_pool import StatePool, masked_reset
-from .weight_store import WeightStore, unpack_tree
+from .weight_store import WEIGHT_FORMATS, WeightStore, unpack_tree
 
 __all__ = ["ServeEngine", "Lane"]
 
@@ -117,11 +117,17 @@ class ServeEngine:
         preempt_margin: int = 8,
         preempt_max: int = 2,
         admit_pace: int | None = None,
+        weight_format: str = "floatsd8",
     ):
         if chunk < 1:
             raise ValueError("chunk must be >= 1")
         if admit_pace is not None and admit_pace < 1:
             raise ValueError("admit_pace must be >= 1 (or None to disable)")
+        if weight_format not in WEIGHT_FORMATS:
+            raise ValueError(
+                f"weight_format must be one of {WEIGHT_FORMATS}, "
+                f"got {weight_format!r}"
+            )
         del greedy  # argmax decoding only, for now
         self.model = model
         self.policy = policy
@@ -140,8 +146,15 @@ class ServeEngine:
                 f"serving packed would silently change the model's outputs; "
                 f"pass packed=False (CLI: --dense) for unquantized policies"
             )
+        # weight_format="floatsd4" re-quantizes the FloatSD8 master to the
+        # sub-byte format (2 codes/byte + group exponents): not
+        # output-identical to the trained model — an explicit accuracy/
+        # footprint trade, gated by the accuracy test in test_serving.py.
+        self.weight_format = weight_format
         if packed:
-            self.store: Optional[WeightStore] = WeightStore.pack(params)
+            self.store: Optional[WeightStore] = WeightStore.pack(
+                params, fmt=weight_format
+            )
             self.serve_params = self.store.tree
             self.serve_policy = policy.replace(weight_quant="none")
         else:

@@ -25,9 +25,24 @@ import jax
 import jax.numpy as jnp
 
 from ..core import floatsd
-from ..kernels.dispatch import PackedTensor, is_packed as _is_packed
+from ..kernels.dispatch import (
+    PackedTensor,
+    PackedTensor4,
+    is_packed as _is_packed,
+    is_packed4 as _is_packed4,
+    pack4 as _pack4,
+    unpack4 as _unpack4,
+)
 
-__all__ = ["PackedTensor", "WeightStore", "pack_tree", "unpack_tree", "tree_nbytes"]
+__all__ = [
+    "PackedTensor", "PackedTensor4", "WeightStore", "WEIGHT_FORMATS",
+    "pack_tree", "pack_floatsd4", "unpack_tree", "tree_nbytes",
+]
+
+#: serving weight formats: FloatSD8 (1 byte/weight, per-tensor bias) and
+#: FloatSD4 (2 codes/byte + int8 group exponents, ~0.53 byte/weight),
+#: the latter derived offline from the FloatSD8 master
+WEIGHT_FORMATS = ("floatsd8", "floatsd4")
 
 
 def _packable(x, min_ndim: int) -> bool:
@@ -67,17 +82,42 @@ def pack_tree(params: Any, min_ndim: int = 2) -> Any:
     return jax.tree_util.tree_map(_pack, params)
 
 
+def pack_floatsd4(tree: Any, min_ndim: int = 2) -> Any:
+    """Trained FloatSD8 master -> FloatSD4 serving tree.
+
+    Accepts either a dense param tree (routed through the FloatSD8 grid
+    first — the format the model was trained against — so FloatSD4 is
+    always a re-quantization of the *served* FloatSD8 values, never of
+    raw f32 the FloatSD8 path would have rounded differently) or a tree
+    that is already FloatSD8-packed. Packable leaves become
+    :class:`PackedTensor4` (nibble-packed codes + group exponents).
+    """
+    t8 = pack_tree(tree, min_ndim=min_ndim)
+    return jax.tree_util.tree_map(
+        lambda x: _pack4(x) if _is_packed(x) else x, t8, is_leaf=_is_packed
+    )
+
+
+def _is_any_packed(x) -> bool:
+    return _is_packed(x) or _is_packed4(x)
+
+
 def unpack_tree(tree: Any, dtype=jnp.float32) -> Any:
-    """Decode-at-use view: PackedTensor leaves -> dense ``dtype`` tensors.
+    """Decode-at-use view: packed leaves (either format) -> dense
+    ``dtype`` tensors.
 
     jit-compatible and a no-op on trees without packed leaves, so callers
     (e.g. ``WikiText2LM.decode_step``) can apply it unconditionally.
     """
-    return jax.tree_util.tree_map(
-        lambda x: floatsd.decode(x.codes, x.bias, dtype=dtype) if _is_packed(x) else x,
-        tree,
-        is_leaf=_is_packed,
-    )
+
+    def _unpack(x):
+        if _is_packed(x):
+            return floatsd.decode(x.codes, x.bias, dtype=dtype)
+        if _is_packed4(x):
+            return _unpack4(x, dtype=dtype)
+        return x
+
+    return jax.tree_util.tree_map(_unpack, tree, is_leaf=_is_any_packed)
 
 
 def tree_nbytes(tree: Any) -> int:
@@ -91,18 +131,28 @@ def tree_nbytes(tree: Any) -> int:
 class WeightStore:
     """The packed serving weights plus size bookkeeping."""
 
-    tree: Any  # pytree with PackedTensor leaves at packed sites
+    tree: Any  # pytree with PackedTensor/PackedTensor4 leaves at packed sites
     dense_nbytes: int
     n_packed: int  # number of tensors packed to codes
+    fmt: str = "floatsd8"  # one of WEIGHT_FORMATS
 
     @classmethod
-    def pack(cls, params: Any, min_ndim: int = 2) -> "WeightStore":
-        packed = pack_tree(params, min_ndim=min_ndim)
+    def pack(cls, params: Any, min_ndim: int = 2,
+             fmt: str = "floatsd8") -> "WeightStore":
+        if fmt not in WEIGHT_FORMATS:
+            raise ValueError(
+                f"weight format must be one of {WEIGHT_FORMATS}, got {fmt!r}"
+            )
+        if fmt == "floatsd4":
+            packed = pack_floatsd4(params, min_ndim=min_ndim)
+        else:
+            packed = pack_tree(params, min_ndim=min_ndim)
         n = sum(
-            _is_packed(x)
-            for x in jax.tree_util.tree_leaves(packed, is_leaf=_is_packed)
+            _is_any_packed(x)
+            for x in jax.tree_util.tree_leaves(packed, is_leaf=_is_any_packed)
         )
-        return cls(tree=packed, dense_nbytes=tree_nbytes(params), n_packed=n)
+        return cls(tree=packed, dense_nbytes=tree_nbytes(params),
+                   n_packed=n, fmt=fmt)
 
     @property
     def packed_nbytes(self) -> int:

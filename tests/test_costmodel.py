@@ -14,6 +14,7 @@ import pytest
 
 from repro.core import floatsd
 from repro.kernels import dispatch as kd
+from repro.kernels.floatsd4_matmul import cost as fm4_cost
 from repro.kernels.floatsd_matmul import cost as fm_cost
 from repro.kernels.lstm_cell import cost as lc_cost
 from repro.obs import costmodel
@@ -53,6 +54,7 @@ def _run_all_ops(backend: str) -> None:
     c = _w((b, h), 0.8)
     with kd.use_backend(backend):
         kd.matmul(x, codes, bias)
+        kd.matmul4(x, kd.pack4(_w((k, n), 0.05)))
         kd.matmul_dx(g, codes, bias)
         kd.matmul_dw(x, g)
         kd.lstm_cell(z, c)
@@ -133,6 +135,40 @@ def test_pallas_padding_waste_and_vmem_accounted():
     ref = fm_cost.matmul_fwd_cost(7, 130, 66, backend="ref")
     assert cost.hbm_read_bytes > ref.hbm_read_bytes
     assert cost.macs > ref.macs
+
+
+def test_matmul4_ref_predicted_bytes_exact_and_padding_accounted():
+    """Sub-byte op: tolerance-0 ref exactness (packed codes + group exps
+    counted at their real nbytes) plus pallas waste/VMEM attribution on a
+    padded odd-K shape."""
+    kd.STATS.reset()
+    x = _w((7, 101), 0.5)
+    w4 = kd.pack4(_w((101, 66), 0.05))
+    kd.matmul4(x, w4, backend="ref")
+    (row,) = kd.LEDGER.rows()
+    assert row["bytes_rel_err"] == 0.0, row
+    with kd.use_backend("pallas"):
+        kd.matmul4(x, w4)
+    dec = kd.STATS.last["floatsd4_matmul"]
+    assert dec.backend == "pallas" and dec.padded
+    assert dec.cost.vmem_bytes > 0
+    assert dec.cost.pad_waste_bytes > 0 and dec.cost.pad_waste_flops > 0
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 128, 128), (5, 37, 19), (30, 101, 200)])
+def test_matmul4_weight_stream_half_of_floatsd8(m, k, n):
+    """The FloatSD4 CostSpec's weight-stream term must reflect the halved
+    packed stream: ceil(K/2)*N codes + ceil(K/GROUP)*N exps, vs K*N + 4
+    for FloatSD8 at equal shape — ~0.53 byte/weight against 1."""
+    c4 = fm4_cost.matmul4_fwd_cost(m, k, n, backend="ref")
+    c8 = fm_cost.matmul_fwd_cost(m, k, n, backend="ref")
+    act = m * k * 4 + m * n * 4  # x read + y write, identical in both
+    wt4 = c4.hbm_read_bytes + c4.hbm_write_bytes - act
+    wt8 = c8.hbm_read_bytes + c8.hbm_write_bytes - act
+    assert wt4 == -(-k // 2) * n + -(-k // 32) * n
+    assert wt8 == k * n + 4
+    # halved stream + 1/32 exponent overhead: strictly within (0.5, 0.6)
+    assert 0.5 < wt4 / (k * n) < 0.6
 
 
 def test_flash_attention_masked_pairs_charged_to_waste():
@@ -271,6 +307,22 @@ def test_check_bench_fails_injected_ledger_regression_naming_op():
     assert "op=floatsd_matmul" in probs[0]
     assert "predicted" in probs[0] and "measured" in probs[0]
     assert "+30.00%" in probs[0]
+
+
+def test_check_bench_fails_injected_floatsd4_regression_naming_op():
+    """The BENCH_ledger baseline gate: a FloatSD4 cost-model or traced-path
+    change drifts the per-call prediction and must fail naming the op."""
+    kd.STATS.reset()
+    with kd.use_backend("ref"):
+        kd.matmul4(_w((8, 128), 0.5), kd.pack4(_w((128, 128), 0.05)))
+    rows = kd.LEDGER.rows()
+    assert check_bench.check_ledger(rows) == []  # honest rows pass
+    assert check_bench._ledger_drift(rows, json.loads(json.dumps(rows)), 0.5) == []
+    bad = json.loads(json.dumps(rows))
+    bad[0]["hbm_bytes"] *= 3  # e.g. the packed stream silently widened
+    probs = check_bench._ledger_drift(bad, rows, 0.5)
+    assert len(probs) == 1
+    assert "op=floatsd4_matmul" in probs[0] and "hbm_bytes" in probs[0]
 
 
 def test_check_bench_fails_ledger_per_call_drift_naming_op():

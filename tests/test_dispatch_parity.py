@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import floatsd
+from repro.core import floatsd, floatsd4
 from repro.kernels import dispatch as kd
 from repro.kernels.floatsd_matmul.ops import floatsd_matmul
 
@@ -37,6 +37,18 @@ MATMUL_SHAPES = [
     (30, 100, 200),  # mixed
 ]
 
+# FloatSD4 grid mirrors MATMUL_SHAPES but forces odd K twice: K=101 / 127
+# exercise the nibble pad (one ZERO_CODE row -> 0x77 pad byte) AND a
+# non-multiple-of-GROUP row count for the group exponents
+MATMUL4_SHAPES = [
+    (8, 128, 128),   # native tiles, K % 2 == 0, K % GROUP == 0
+    (32, 256, 256),  # native tiles
+    (7, 130, 66),    # all three axes padded, K even but K % GROUP != 0
+    (1, 32, 48),     # tiny, heavily padded
+    (30, 101, 200),  # odd K: packed stream carries a half-empty last byte
+    (5, 127, 96),    # odd K and last group only 31 rows deep
+]
+
 LSTM_SHAPES = [(8, 128), (32, 256), (5, 70), (3, 200)]
 
 ELEMWISE_SHAPES = [(8, 256), (7, 33), (1000,), (2, 3, 7), (64, 512)]
@@ -49,6 +61,7 @@ FLASH_SHAPES = [(2, 16, 128, 8), (1, 32, 256, 16), (2, 10, 100, 8)]
 
 GRIDS = {
     "floatsd_matmul": MATMUL_SHAPES,
+    "floatsd4_matmul": MATMUL4_SHAPES,
     "lstm_cell": LSTM_SHAPES,
     "floatsd_quantize": ELEMWISE_SHAPES,
     "qsigmoid": ELEMWISE_SHAPES,
@@ -393,3 +406,131 @@ def test_zero_code_pads_decode_to_exact_zero():
         np.testing.assert_array_equal(
             np.asarray(floatsd.decode(codes, bias)), 0.0
         )
+
+
+# ---------------------------------------------------------------------------
+# FloatSD4 sub-byte packed entry points (2 codes/byte)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", MATMUL4_SHAPES)
+def test_matmul4_parity_and_decision(m, k, n):
+    """Compiled-vs-ref golden parity for the nibble-packed GEMM, mirroring
+    the FloatSD8 grid: the kernel's in-VMEM LUT unpack + group-exponent
+    scale must match the decode-then-dot oracle on padded and odd-K
+    shapes alike."""
+    x = jnp.asarray(_w((m, k), 0.5))
+    wts = jnp.asarray(_w((k, n), 0.05))
+    w4 = kd.pack4(wts)
+    with kd.use_backend("pallas"):
+        got = kd.matmul4(x, w4)
+        dec = kd.STATS.last["floatsd4_matmul"]
+    want = kd.matmul4(x, w4, backend="ref")
+    assert dec.backend == "pallas"
+    assert dec.padded == _expect_padded(m, k, n), dec
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_matmul4_batched_leading_dims():
+    x = jnp.asarray(_w((2, 3, 101), 0.5))
+    wts = jnp.asarray(_w((101, 66), 0.05))
+    w4 = kd.pack4(wts)
+    with kd.use_backend("pallas"):
+        got = kd.matmul4(x, w4)
+    want = kd.matmul4(x, w4, backend="ref")
+    assert got.shape == (2, 3, 66)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_matmul4_ref_is_decode_then_dot():
+    """The ref oracle is literally decode_packed + jnp.dot — anchor the
+    dispatched ref branch to the layer-0 definition."""
+    x = jnp.asarray(_w((6, 70), 0.5))
+    wts = jnp.asarray(_w((70, 40), 0.05))
+    w4 = kd.pack4(wts)
+    got = kd.matmul4(x, w4, backend="ref")
+    wq = floatsd4.decode_packed(w4.codes, w4.exps, w4.k)
+    want = jnp.dot(x, wq, preferred_element_type=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_matmul4_stats_counters_accumulate():
+    x = jnp.asarray(_w((8, 128), 0.5))
+    w4 = kd.pack4(jnp.asarray(_w((128, 128), 0.05)))
+    before = kd.STATS.count("floatsd4_matmul", "ref")
+    kd.matmul4(x, w4, backend="ref")
+    kd.matmul4(x, w4, backend="ref")
+    assert kd.STATS.count("floatsd4_matmul", "ref") == before + 2
+
+
+@pytest.mark.parametrize("eq,xshape,wshape", [
+    ("bd,dk->bk", (4, 80), (80, 96)),
+    ("...d,df->...f", (2, 3, 80), (80, 96)),
+    ("...d,vd->...v", (2, 3, 80), (96, 80)),  # tied logits head layout
+    ("...d,vd->...v", (2, 3, 81), (95, 81)),  # odd dims: nbyte asymmetry
+])
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_packed4_einsum_matches_dense(eq, xshape, wshape, backend):
+    x = jnp.asarray(_w(xshape, 0.5))
+    w = jnp.asarray(_w(wshape, 0.05))
+    p4 = kd.pack4(w)
+    with kd.use_backend(backend):
+        got = kd.packed_einsum(eq, x, p4)
+        dec = kd.STATS.last["floatsd4_matmul"]
+    assert "packed4" in dec.reason or dec.backend == "pallas", dec
+    wq = floatsd4.decode_packed(p4.codes, p4.exps, p4.k)
+    want = jnp.einsum(eq, x, wq, preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_packed4_einsum_transpose_fallback_is_recorded():
+    """The tied-head layout cannot stream nibbles transposed; the
+    decode+einsum fallback must be a recorded Decision, never silent."""
+    x = jnp.asarray(_w((2, 80), 0.5))
+    p4 = kd.pack4(jnp.asarray(_w((96, 80), 0.05)))
+    with kd.use_backend("pallas"):
+        kd.packed_einsum("...d,vd->...v", x, p4)
+        dec = kd.STATS.last["floatsd4_matmul"]
+    assert dec.backend == "ref" and "transpose" in dec.reason, dec
+
+
+def test_hoist_packed4_decodes_for_ref_keeps_codes_for_pallas():
+    w = jnp.asarray(_w((33, 32), 0.05))  # odd K: crop must survive hoist
+    p4 = kd.pack4(w)
+    with kd.use_backend("ref"):
+        dense = kd.hoist_packed(p4)
+    assert not kd.is_packed4(dense)
+    assert dense.shape == (33, 32)
+    np.testing.assert_array_equal(
+        np.asarray(dense),
+        np.asarray(floatsd4.decode_packed(p4.codes, p4.exps, p4.k)),
+    )
+    with kd.use_backend("pallas"):
+        assert kd.hoist_packed(p4) is p4
+
+
+def test_zero_byte4_pads_decode_to_exact_zero():
+    """Tile padding for the packed stream uses ZERO_BYTE4 = two ZERO_CODE
+    nibbles; both nibbles must decode to exactly 0 at any group exponent."""
+    assert kd.ZERO_BYTE4 == (floatsd4.ZERO_CODE << 4) | floatsd4.ZERO_CODE
+    packed = jnp.full((4, 4), kd.ZERO_BYTE4, jnp.uint8)
+    for e in (-30, 0, 25):
+        exps = jnp.full((1, 4), e, jnp.int8)
+        np.testing.assert_array_equal(
+            np.asarray(floatsd4.decode_packed(packed, exps, 8)), 0.0
+        )
+
+
+def test_packed4_bytes_resident_exactly_half():
+    """Acceptance criterion: the packed code stream is exactly
+    ceil(K/2) * N bytes vs K * N for FloatSD8, at even and odd K."""
+    for k, n in [(128, 96), (101, 66), (33, 32)]:
+        w = jnp.asarray(_w((k, n), 0.05))
+        p8 = kd.PackedTensor(*floatsd.encode(w))
+        p4 = kd.pack4(w)
+        assert p8.codes.nbytes == k * n
+        assert p4.codes.nbytes == -(-k // 2) * n
+        assert p4.exps.nbytes == -(-k // floatsd4.GROUP) * n
+        assert p4.shape == (k, n)

@@ -13,7 +13,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import floatsd
+from repro.core import floatsd, floatsd4
 from repro.kernels import dispatch as kd
 from repro.kernels.floatsd_matmul import cost as fm_cost
 
@@ -99,6 +99,96 @@ def test_ref_predicted_bytes_equal_touched_for_arbitrary_matmul(m, k, n, seed):
     )
     kd.STATS.reset()
     kd.matmul(x, codes, bias, backend="ref")
+    (row,) = kd.LEDGER.rows()
+    assert row["backend"] == "ref"
+    assert row["hbm_bytes"] == row["touched_bytes"]
+    assert row["bytes_rel_err"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# FloatSD4 sub-byte properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.integers(1, 130),
+    n=st.integers(1, 48),
+    scale=st.floats(1e-6, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_floatsd4_pack_unpack_roundtrip_bit_identical(k, n, scale, seed):
+    """Nibble pack -> unpack returns the exact uint8 code array for any K
+    parity (odd K pads one ZERO_CODE row, cropped back out)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.standard_normal((k, n)) * scale).astype(np.float32))
+    codes, _ = floatsd4.encode(x)
+    packed = floatsd4.pack_nibbles(codes)
+    assert packed.shape == (-(-k // 2), n) and packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(
+        np.asarray(floatsd4.unpack_nibbles(packed, k)), np.asarray(codes)
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.integers(1, 130),
+    n=st.integers(1, 48),
+    scale=st.floats(1e-6, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_floatsd4_decode_encode_idempotent(k, n, scale, seed):
+    """encode(decode(encode(x))) reproduces codes AND group exponents bit
+    for bit: the FloatSD4 grid is a fixed point of its own quantizer (the
+    same invariant FloatSD8 serving relies on)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.standard_normal((k, n)) * scale).astype(np.float32))
+    codes, exps = floatsd4.encode(x)
+    w = floatsd4.decode(codes, exps)
+    codes2, exps2 = floatsd4.encode(w)
+    np.testing.assert_array_equal(np.asarray(codes2), np.asarray(codes))
+    np.testing.assert_array_equal(np.asarray(exps2), np.asarray(exps))
+    np.testing.assert_array_equal(
+        np.asarray(floatsd4.decode(codes2, exps2)), np.asarray(w)
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 12),
+    k=st.integers(1, 160),
+    n=st.integers(1, 160),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul4_pad_then_crop_equals_oracle(m, k, n, seed):
+    """Property: padded-then-cropped pallas matmul4 equals the unpadded
+    decode-then-dot oracle for arbitrary M/K/N — odd K covers the nibble
+    pad row, arbitrary K covers partial exponent groups."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32) * 0.5)
+    w4 = kd.pack4(jnp.asarray(rng.standard_normal((k, n)).astype(np.float32) * 0.05))
+    with kd.use_backend("pallas"):
+        got = kd.matmul4(x, w4)
+    want = kd.matmul4(x, w4, backend="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 16),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul4_ref_predicted_bytes_equal_touched(m, k, n, seed):
+    """Tolerance-0 cost contract for the sub-byte op: predicted HBM bytes
+    (ceil(K/2)*N codes + ceil(K/GROUP)*N exps + x + y) equal the ndarray
+    bytes handed to the oracle, for arbitrary shapes."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32) * 0.5)
+    w4 = kd.pack4(jnp.asarray(rng.standard_normal((k, n)).astype(np.float32) * 0.05))
+    kd.STATS.reset()
+    kd.matmul4(x, w4, backend="ref")
     (row,) = kd.LEDGER.rows()
     assert row["backend"] == "ref"
     assert row["hbm_bytes"] == row["touched_bytes"]

@@ -483,3 +483,100 @@ def test_engine_metrics_token_accounting():
     assert 0.0 < rep["slot_util"] <= 1.0
     assert 0.0 < rep["lane_occupancy"] <= 1.0
     assert all(r.ttft <= r.latency for r in m.records)
+
+
+# ---------------------------------------------------------------------------
+# FloatSD4 serving: byte footprint + accuracy gate
+# ---------------------------------------------------------------------------
+
+#: declared accuracy-gate tolerance: absolute wikitext2 eval-loss delta a
+#: FloatSD4 re-quantization of the FloatSD8 master may cost vs FloatSD8
+#: serving (the 15-level grid's documented accuracy/footprint trade)
+FLOATSD4_LOSS_TOL = 0.25
+
+
+def test_floatsd4_store_bytes_resident():
+    """Acceptance criterion at the store level: FloatSD4 code streams are
+    exactly ceil(K/2)*N bytes (vs K*N for FloatSD8) at every packed leaf,
+    and the whole-store footprint shrinks accordingly."""
+    from repro.serving import PackedTensor4
+
+    model = tiny_model()
+    params = tiny_params(model)
+    s8 = WeightStore.pack(params)
+    s4 = WeightStore.pack(params, fmt="floatsd4")
+    assert (s8.fmt, s4.fmt) == ("floatsd8", "floatsd4")
+    assert s4.n_packed == s8.n_packed
+    leaves4 = {
+        jax.tree_util.keystr(p): l
+        for p, l in jax.tree_util.tree_leaves_with_path(
+            s4.tree, is_leaf=lambda x: isinstance(x, PackedTensor4)
+        )
+        if isinstance(l, PackedTensor4)
+    }
+    assert leaves4
+    for path, w in jax.tree_util.tree_leaves_with_path(params):
+        if w.ndim < 2:
+            continue
+        l4 = leaves4[jax.tree_util.keystr(path)]
+        k, n = w.shape
+        assert l4.codes.nbytes == -(-k // 2) * n, path
+    assert s4.packed_nbytes < s8.packed_nbytes
+
+
+def test_weight_store_rejects_unknown_format():
+    with pytest.raises(ValueError, match="weight format"):
+        WeightStore.pack(tiny_params(tiny_model()), fmt="int3")
+
+
+@pytest.mark.slow
+def test_floatsd4_eval_loss_within_declared_tolerance():
+    """Accuracy gate: serve a FloatSD8-trained model re-quantized to
+    FloatSD4 and require the wikitext2 eval loss to stay within
+    FLOATSD4_LOSS_TOL of FloatSD8 serving. Control: the FloatSD8 store
+    evaluates to the exact fake-quant loss (same function, decoded)."""
+    from repro.data import synthetic
+
+    model = tiny_model()
+    params = trained_params(model)
+    data = synthetic.wikitext2(batch=32, seq=24, vocab=model.vocab)
+    batch = {k: jnp.asarray(v) for k, v in next(data.batches).items()}
+    eval_policy = POLICY.replace(weight_quant="none")  # stores pre-quantize
+
+    loss_fq = float(model.loss(params, batch, POLICY))
+    s8 = WeightStore.pack(params)
+    loss8 = float(model.loss(s8.tree, batch, eval_policy))
+    np.testing.assert_allclose(loss8, loss_fq, rtol=1e-6)
+
+    s4 = WeightStore.pack(params, fmt="floatsd4")
+    loss4 = float(model.loss(s4.tree, batch, eval_policy))
+    assert np.isfinite(loss4)
+    assert abs(loss4 - loss8) <= FLOATSD4_LOSS_TOL, (
+        f"FloatSD4 eval loss {loss4:.4f} drifted more than "
+        f"{FLOATSD4_LOSS_TOL} from FloatSD8 serving loss {loss8:.4f}"
+    )
+
+
+@pytest.mark.slow
+def test_floatsd4_engine_serves_with_floatsd8_token_control():
+    """Engine-level gate: the FloatSD8 packed path must agree 100% with
+    dense fake-quant greedy streams (the control that catches a broken
+    store wiring), while weight_format='floatsd4' serves complete streams
+    from the halved-footprint store."""
+    model = tiny_model()
+    params = trained_params(model)
+    rng = np.random.default_rng(7)
+    prompts = make_prompts(6, model.vocab, rng)
+
+    def serve(**kw):
+        eng = ServeEngine(model, params, POLICY, lanes=3, chunk=4, **kw)
+        reqs = eng.submit_all([p.copy() for p in prompts], max_new=8)
+        eng.run()
+        return eng, [tuple(r.out) for r in sorted(reqs, key=lambda r: r.rid)]
+
+    _, outs_dense = serve(packed=False)
+    eng8, outs8 = serve(weight_format="floatsd8")
+    eng4, outs4 = serve(weight_format="floatsd4")
+    assert outs8 == outs_dense  # 100% token agreement: the control
+    assert all(len(o) == 8 for o in outs4)
+    assert eng4.store.packed_nbytes < eng8.store.packed_nbytes
